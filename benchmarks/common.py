@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny analytic memory
+model used by the paper-table reproductions."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds per call (blocks on all outputs)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit_csv(name: str, rows: list[dict]) -> None:
+    """Print ``name,us_per_call,derived`` style CSV blocks (bench contract)."""
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    print()
+
+
+# ---------------------------------------------------------------------------
+# Analytic GPU/TPU memory model for ZO fine-tuning (reproduces Fig 1c /
+# Table 7 / Table 9 *structure*: params + optimizer state + ZO extras).
+# dtype_bytes=2 matches the paper's fp16/bf16 runs.
+# ---------------------------------------------------------------------------
+def zo_memory_model(
+    n_params: float,
+    n_lowrank_matrices: int,
+    mean_m: float,
+    mean_n: float,
+    rank: int,
+    method: str,
+    dtype_bytes: int = 2,
+    state_bytes: int = 2,  # fp16/bf16 moments — the paper's GPU setup
+) -> float:
+    """Bytes required for weights + optimizer/perturbation state."""
+    weights = n_params * dtype_bytes
+    factors = n_lowrank_matrices * (mean_m + mean_n) * rank * dtype_bytes
+    r_vec = n_lowrank_matrices * rank * state_bytes
+    full = n_params * state_bytes
+    extra = {
+        "mezo": 0.0,
+        "mezo_m": full,
+        "mezo_adam": 2 * full,
+        "lozo": n_lowrank_matrices * mean_m * rank * dtype_bytes,
+        "lozo_m": n_lowrank_matrices * (mean_m + mean_n) * rank * dtype_bytes,
+        "subzo": n_lowrank_matrices * (mean_m + mean_n) * rank * dtype_bytes,
+        "tezo": factors,
+        "tezo_m": factors + r_vec,
+        "tezo_adam": factors + 2 * r_vec,
+    }[method]
+    return weights + extra

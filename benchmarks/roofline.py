@@ -1,0 +1,112 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch × shape) table,
+and --compare two tag sets for the §Perf before/after log.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+    PYTHONPATH=src python -m benchmarks.roofline --compare baseline=.. tag=..
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import emit_csv
+
+
+def load_records(directory: str, mesh: str = "single", tag: str = "") -> dict:
+    recs = {}
+    for p in Path(directory).glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def table_rows(recs: dict) -> list[dict]:
+    rows = []
+    for (arch, shape), r in sorted(recs.items()):
+        rf = r["roofline"]
+        mf = r["model_flops"]
+        hlo = r["hlo_cost"]
+        useful = mf["model_flops_step"] / r["n_devices"] / max(hlo["flops_per_device"], 1e-30)
+        rows.append(
+            {
+                "arch": arch,
+                "shape": shape,
+                "compute_s": f"{rf['compute_s']:.3e}",
+                "memory_s": f"{rf['memory_s']:.3e}",
+                "collective_s": f"{rf['collective_s']:.3e}",
+                "dominant": rf["dominant"].replace("_s", ""),
+                "roofline_fraction": f"{rf['roofline_fraction']:.4f}",
+                "model_flops_step": f"{mf['model_flops_step']:.3e}",
+                "useful_flops_frac": f"{useful:.3f}",
+            }
+        )
+    return rows
+
+
+def compare_rows(base: dict, new: dict) -> list[dict]:
+    rows = []
+    for key in sorted(set(base) & set(new)):
+        b, n = base[key]["roofline"], new[key]["roofline"]
+        dom = base[key]["roofline"]["dominant"]
+        rows.append(
+            {
+                "arch": key[0],
+                "shape": key[1],
+                "dominant_before": dom.replace("_s", ""),
+                "before_s": f"{b[dom]:.3e}",
+                "after_s": f"{n[dom]:.3e}",
+                "improvement_x": f"{b[dom] / max(n[dom], 1e-30):.2f}",
+                "bound_before_s": f"{b['step_time_lower_bound_s']:.3e}",
+                "bound_after_s": f"{n['step_time_lower_bound_s']:.3e}",
+                "frac_before": f"{b['roofline_fraction']:.4f}",
+                "frac_after": f"{n['roofline_fraction']:.4f}",
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--compare", default=None, help="other tag to compare against --tag baseline")
+    args = ap.parse_args()
+
+    base = load_records(args.dir, args.mesh, args.tag)
+    if args.compare is not None:
+        new = load_records(args.dir, args.mesh, args.compare)
+        emit_csv(f"roofline_compare[{args.tag or 'baseline'} -> {args.compare}]",
+                 compare_rows(base, new))
+    else:
+        emit_csv(f"roofline[{args.mesh}]", table_rows(base))
+
+
+def run() -> list[dict]:
+    recs = load_records("results/dryrun", "single", "")
+    rows = table_rows(recs)
+    emit_csv("roofline[single]", rows)
+    multi = load_records("results/dryrun", "multi", "")
+    if multi:
+        emit_csv("roofline[multi-pod]", table_rows(multi))
+    # §Perf: emit every available optimized-tag comparison
+    tags = sorted(
+        {
+            json.loads(p.read_text()).get("tag", "")
+            for p in Path("results/dryrun").glob("*__*.json")
+        }
+        - {""}
+    )
+    for tag in tags:
+        new = load_records("results/dryrun", "single", tag)
+        cr = compare_rows(recs, new)
+        if cr:
+            emit_csv(f"roofline_perf_compare[baseline -> {tag}]", cr)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 8 / Fig 3b: wall-clock time per iteration, per ZO method.
+
+CPU analogue of the paper's H100 table: per-step time of the jitted ZO step
+on the opt-125m smoke model at two widths.  The paper's qualitative claims to
+check: low-rank methods ≈ MeZO speed (small models may be slightly slower);
+TeZO-Adam ≪ MeZO-Adam because moments live in τ-space.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_csv, time_fn
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+from repro.models import build_model
+
+METHODS = ["mezo", "mezo_m", "mezo_adam", "lozo", "subzo", "tezo", "tezo_m", "tezo_adam"]
+
+
+def run() -> list[dict]:
+    rows = []
+    shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
+    for width_mult in (1, 4):
+        cfg = get_smoke_config("opt-125m")
+        cfg = cfg.reduced(
+            d_model=cfg.d_model * width_mult,
+            d_ff=cfg.d_ff * width_mult,
+            head_dim=cfg.head_dim * width_mult,
+        )
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = model.make_inputs(jax.random.PRNGKey(1), shape)
+        base = None
+        for method in METHODS:
+            zo_cfg = ZOConfig(method=method, rank=16, lr=1e-5, lazy_interval=50)
+            state = init_zo_state(params, zo_cfg)
+            step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
+            sec = time_fn(lambda s=state, b=batch: step(s, b)[1]["loss"], iters=4)
+            if method == "mezo":
+                base = sec
+            rows.append(
+                {
+                    "model": f"{cfg.name}-x{width_mult}",
+                    "method": method,
+                    "ms_per_iter": round(sec * 1e3, 2),
+                    "vs_mezo": round(sec / base, 3) if base else 1.0,
+                }
+            )
+    emit_csv("table8_walltime", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Compare all ZO methods (paper §6 in miniature): same model, same data,
+same budget — final eval loss + per-step time + state memory, one table.
+
+    PYTHONPATH=src python examples/compare_optimizers.py --steps 120
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import ZOConfig, init_zo_state
+from repro.launch.train import train
+from repro.models import build_model
+from repro.utils.tree import tree_size_bytes
+
+METHODS = [
+    ("mezo", 2e-4), ("mezo_m", 2e-4), ("mezo_adam", 3e-5),
+    ("lozo", 2e-4), ("subzo", 2e-4),
+    ("tezo", 2e-4), ("tezo_m", 2e-4), ("tezo_adam", 3e-5),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("opt-125m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p_bytes = tree_size_bytes(params)
+
+    print(f"{'method':10s} {'eval_loss':>9s} {'s/step':>7s} {'state_MB':>9s} {'vs params':>9s}")
+    for method, lr in METHODS:
+        t0 = time.time()
+        res = train(
+            arch="opt-125m", smoke=True, method=method, steps=args.steps,
+            seq_len=64, global_batch=8, lr=lr, rank=16, pretrain_steps=20,
+            seed=0,
+        )
+        st = init_zo_state(params, ZOConfig(method=method, rank=16))
+        s_bytes = tree_size_bytes(st.mstate)
+        print(
+            f"{method:10s} {res['final_eval_loss']:9.4f} "
+            f"{(time.time() - t0) / max(args.steps, 1):7.3f} "
+            f"{s_bytes / 1e6:9.2f} {s_bytes / p_bytes:9.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

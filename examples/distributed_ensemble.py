@@ -1,0 +1,69 @@
+"""Distributed ZO example: distinct-seed ensemble DP + straggler drops.
+
+Demonstrates the framework's beyond-paper distributed features on fake host
+devices (no TPU needed):
+  * the distinct-seed pod ensemble (n members, each with its own τ, combined
+    through the r-vector κτ all-reduce — DESIGN §4),
+  * straggler mitigation: members are randomly dropped each step and training
+    still converges,
+  * the communication receipt: bytes a full gradient all-reduce would move
+    vs what the κτ aggregation moves.
+
+    PYTHONPATH=src python examples/distributed_ensemble.py
+"""
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import ZOConfig, init_zo_state
+from repro.distributed import (
+    StragglerSim,
+    build_ensemble_zo_train_step,
+    kappa_allreduce_bytes,
+)
+from repro.models import build_model
+from repro.utils.tree import tree_size_bytes
+
+
+def main() -> None:
+    cfg = get_smoke_config("opt-125m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    zo_cfg = ZOConfig(method="tezo_adam", rank=16, lr=3e-5)
+    state = init_zo_state(params, zo_cfg)
+
+    n_ensemble = 4
+    sim = StragglerSim(n_members=n_ensemble, drop_prob=0.25, seed=7)
+    step = jax.jit(
+        build_ensemble_zo_train_step(model.loss_fn, zo_cfg, n_ensemble, sim.mask_fn())
+    )
+    shape = ShapeConfig("b", seq_len=64, global_batch=8, kind="train")
+
+    print(f"ensemble={n_ensemble} members, 25% straggler drop per step")
+    for i in range(40):
+        batch = model.make_inputs(jax.random.fold_in(jax.random.PRNGKey(1), i), shape)
+        state, metrics = step(state, batch)
+        if (i + 1) % 10 == 0:
+            print(f"  step {i+1:3d}  loss {float(metrics['loss']):.4f}")
+
+    grad_bytes = tree_size_bytes(params)
+    ktau_bytes = kappa_allreduce_bytes(state.mstate, n_ensemble)
+    print(
+        f"\nper-step DP communication:\n"
+        f"  FO gradient all-reduce would move : {grad_bytes/1e6:10.2f} MB\n"
+        f"  TeZO distinct-seed κτ aggregation : {ktau_bytes/1e3:10.2f} KB "
+        f"({grad_bytes/ktau_bytes:,.0f}x less)\n"
+        f"  shared-seed scalar-κ DP           : 8 bytes"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end training driver example: fine-tune an LM with TeZO for a few
+hundred steps, with checkpointing + crash-safe restart + eval.
+
+Presets:
+    tiny (default)  ~1M params, runs in ~2 min on CPU
+    100m            the full opt-125m config (~125M params) — the assignment's
+                    "train ~100M model for a few hundred steps" driver; slower
+                    on CPU but the same code path as the production launcher.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--method", default="tezo_adam")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    smoke = args.preset == "tiny"
+    result = train(
+        arch="opt-125m",
+        smoke=smoke,
+        method=args.method,
+        steps=args.steps,
+        seq_len=64 if smoke else 128,
+        global_batch=8,
+        lr=3e-5 if "adam" in args.method else 2e-4,
+        rank=16 if smoke else 24,
+        pretrain_steps=30 if smoke else 0,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        seed=0,
+        log_file=f"results/train_lm_{args.preset}_{args.method}.json",
+    )
+    print(f"\npreset={args.preset} method={args.method} "
+          f"final eval loss {result['final_eval_loss']:.4f} "
+          f"({result['wall_s']}s). Checkpoints in {args.ckpt_dir} — rerun this "
+          f"command to resume from the latest one.")
+
+
+if __name__ == "__main__":
+    main()

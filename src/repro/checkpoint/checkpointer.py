@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpointing for ZO training state.
+
+Properties a 1000-node deployment needs, scaled to this container:
+
+  * atomic: write to ``step_NNNNNNNN.tmp/`` then ``os.replace`` — a crash
+    mid-write can never corrupt the latest checkpoint,
+  * mesh-agnostic: arrays are saved as host numpy per leaf-path; restore
+    accepts a target mesh + sharding tree and puts shards device-by-device,
+    so a run checkpointed on (2,16,16) restarts on (16,16) (elastic restart
+    after pod loss — tested in tests/test_checkpoint.py),
+  * complete: params, τ-space method state, step, RNG key, and the data
+    pipeline position (which is just an int, by pipeline design) are all in
+    the manifest — restart is bit-exact,
+  * async: ``save_async`` snapshots to host memory synchronously (cheap) and
+    writes to disk on a background thread, overlapping I/O with training,
+  * bounded retention: keep the newest K checkpoints.
+
+TeZO makes checkpoints small: method state beyond params is r-vectors per
+layer (the (u, v) factors are regenerated from the seed at restore — they are
+a pure function of (seed, path), another payoff of counter-based RNG).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.tree import map_with_path
+
+_MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _flatten_numpy(tree: Any) -> dict[str, np.ndarray]:
+    flat: dict[str, np.ndarray] = {}
+
+    def visit(path: str, leaf: Any) -> Any:
+        flat[path] = np.asarray(jax.device_get(leaf))
+        return leaf
+
+    map_with_path(visit, tree)
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(m.group(1))
+            for p in self.dir.iterdir()
+            if p.is_dir() and (m := _STEP_RE.match(p.name))
+        ] if self.dir.exists() else []
+        return max(steps) if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: dict | None = None) -> Path:
+        """Synchronous atomic save. ``state`` is any pytree (e.g. ZOTrainState
+        as a dict of its fields)."""
+        self.wait()
+        flat = _flatten_numpy(state)
+        return self._write(step, flat, extra or {})
+
+    def save_async(self, step: int, state: Any, extra: dict | None = None) -> None:
+        """Snapshot now (device->host copy), write on a background thread."""
+        self.wait()
+        flat = _flatten_numpy(state)  # snapshot before training mutates state
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict[str, np.ndarray], extra: dict) -> Path:
+        final = self._step_dir(step)
+        tmp = final.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **{k: v for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "paths": {k: [list(v.shape), str(v.dtype)] for k, v in flat.items()},
+            "extra": extra,
+        }
+        (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for p in self.dir.iterdir()
+            if p.is_dir() and (m := _STEP_RE.match(p.name))
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(
+        self,
+        template: Any,
+        step: Optional[int] = None,
+        mesh: Any = None,
+        shardings: Any = None,
+    ) -> tuple[Any, dict]:
+        """Restore into the structure of ``template`` (a pytree of arrays or
+        ShapeDtypeStructs).  With ``shardings`` given (a NamedSharding tree
+        for a possibly *different* mesh than the one saved from), each leaf
+        is placed sharded — this is the elastic-restart path."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / _MANIFEST).read_text())
+        arrays = np.load(d / "arrays.npz")
+
+        shard_table: dict[str, Any] = {}
+        if shardings is not None:
+            def collect(path: str, s: Any) -> Any:
+                shard_table[path] = s
+                return s
+
+            map_with_path(collect, shardings)
+
+        def place(path: str, leaf: Any) -> Any:
+            if path not in arrays:
+                raise KeyError(f"checkpoint {d} missing leaf {path}")
+            host = arrays[path]
+            expect = tuple(leaf.shape)
+            if tuple(host.shape) != expect:
+                raise ValueError(f"{path}: checkpoint {host.shape} != {expect}")
+            host = host.astype(leaf.dtype)
+            if path in shard_table:
+                return jax.device_put(host, shard_table[path])
+            return jax.device_put(host)
+
+        state = map_with_path(place, template)
+        return state, manifest["extra"]

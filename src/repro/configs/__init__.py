@@ -1,0 +1,69 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Every assigned architecture exports CONFIG (exact published config, exercised
+only through the dry-run) and SMOKE (reduced same-family config for CPU
+tests).  get_config(id) / get_smoke_config(id) / ARCH_IDS are the public API.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    long_context_capable,
+)
+
+# assigned architecture id -> module name
+_ARCH_MODULES: dict[str, str] = {
+    "musicgen-medium": "musicgen_medium",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen3-32b": "qwen3_32b",
+    "granite-8b": "granite_8b",
+    "yi-34b": "yi_34b",
+    "xlstm-350m": "xlstm_350m",
+    "hymba-1.5b": "hymba_1_5b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "dbrx-132b": "dbrx_132b",
+    "paligemma-3b": "paligemma_3b",
+    # the paper's own family (not part of the 40-cell assignment)
+    "opt-125m": "opt_125m",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(
+    k for k in _ARCH_MODULES if k != "opt-125m"
+)
+
+
+def _module(arch_id: str):
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def assigned_cells() -> list[tuple[str, str]]:
+    """All 40 assigned (arch, shape) cells; runnable_cells() filters the 8
+    principled long_500k skips (DESIGN §5)."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    out = []
+    for a, s in assigned_cells():
+        if s == "long_500k" and not long_context_capable(get_config(a)):
+            continue
+        out.append((a, s))
+    return out

@@ -1,0 +1,97 @@
+"""Config dataclasses + the assigned input-shape registry.
+
+Every assigned architecture file (src/repro/configs/<id>.py) exports
+``CONFIG: ModelConfig`` (the exact published config) and ``SMOKE: ModelConfig``
+(a reduced same-family config for CPU smoke tests).  The registry in
+configs/__init__.py resolves ``--arch <id>``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # ---- attention options -------------------------------------------------
+    qkv_bias: bool = False      # qwen2.5
+    qk_norm: bool = False       # qwen3
+    rope_theta: float = 10_000.0
+    window: int = 0             # sliding-window size; 0 = full causal
+    # ---- block options -----------------------------------------------------
+    activation: str = "swiglu"  # swiglu | geglu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # ---- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    n_experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "gspmd"     # gspmd (scatter, baseline) | ep (shard_map
+                                # expert parallelism with local dispatch +
+                                # psum combine — §Perf hillclimb)
+    # ---- SSM / hybrid ------------------------------------------------------
+    ssm_state: int = 0          # mamba state N (hymba)
+    ssm_expand: int = 2         # mamba inner expansion
+    slstm_layers: tuple = ()    # xlstm: which layer indices are sLSTM
+    conv_width: int = 4         # mamba depthwise conv width
+    mlstm_chunk: int = 0        # 0 = sequential recurrence; >0 = chunkwise-
+                                # parallel mLSTM with this chunk size (§Perf)
+    # ---- frontends (stubs per spec) ----------------------------------------
+    n_prefix_embeds: int = 0    # precomputed modality embeddings (vlm/audio)
+    # ---- numerics / impl ---------------------------------------------------
+    dtype: str = "bfloat16"
+    spmd_hints: bool = False          # emit with_sharding_constraint (launcher)
+    batch_axis_names: tuple = ("data",)  # ("pod","data") on the multi-pod mesh
+    attention_impl: str = "xla"       # xla | pallas
+    attn_chunk_q: int = 1024          # chunked-attention tile sizes
+    attn_chunk_k: int = 1024
+    attn_chunked_min_seq: int = 8192  # use chunked online-softmax attn >= this
+    scan_layers: bool = True          # lax.scan over the layer stack
+    remat: bool = False               # rematerialize block under scan (FO only)
+    logits_chunk: int = 0             # 0 = unchunked cross-entropy
+    decode_cache_dtype: str = "bfloat16"
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        return replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_serving(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+# The four assigned LM shapes (identical set for all 10 archs).
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM / hybrid-with-SWA);
+    pure full-attention archs skip it (DESIGN §5)."""
+    return cfg.family in ("ssm", "hybrid")

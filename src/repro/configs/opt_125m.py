@@ -1,0 +1,24 @@
+"""OPT-125m-class config — the paper's own experimental family (Zhang et al.
+2022), used by examples/ and the paper-validation benchmarks.  Approximation
+note (DESIGN §7): pre-LN llama-style stack with RoPE instead of OPT's learned
+positions; 2-matrix GELU FFN matches OPT."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-125m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=50272,
+    activation="gelu",
+)
+
+SMOKE = CONFIG.reduced(
+    name="opt-125m-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=256, vocab_size=256, dtype="float32",
+)

@@ -1,0 +1,22 @@
+# The paper's primary contribution: TeZO — temporal low-rank zeroth-order
+# optimization.  cpd.py owns the CP-decomposed perturbation, estimator.py the
+# ZO methods (TeZO family + MeZO/LOZO/SubZO baselines), rank.py the Eq.(7)
+# layer-wise rank selection, zo_step.py the Algorithm-1 train step.
+from repro.core.cpd import (
+    CPDFactor,
+    dense_noise,
+    init_factors,
+    is_lowrank_leaf,
+    num_sampled_elements_per_step,
+    reconstruct,
+    reconstruct_squared,
+    sample_tau,
+)
+from repro.core.estimator import METHODS, ZOConfig, ZOMethod, get_method
+from repro.core.rank import leaf_spectral_ranks, select_ranks, spectral_rank
+from repro.core.zo_step import (
+    ZOTrainState,
+    build_eval_step,
+    build_zo_train_step,
+    init_zo_state,
+)

@@ -1,0 +1,195 @@
+"""Canonical Polyadic Decomposition machinery for TeZO perturbations.
+
+The paper (§4.1) models the whole history of ZO perturbations of a 2-D weight
+``W ∈ R^{m×n}`` as a 3-D tensor ``Z ∈ R^{m×n×T}`` with a CP decomposition
+
+    Z_t = Σ_{s=1..r} τ_{t,s} · (u_s ∘ v_s)
+
+where the *model-dimension* factors ``u ∈ R^{m×r}``, ``v ∈ R^{n×r}`` are drawn
+once at init and frozen, and only the *temporal* factor ``τ_t ∈ R^r`` is drawn
+per step.  This file owns:
+
+  * which leaves get the low-rank treatment (``is_lowrank_leaf``),
+  * factor initialization (``init_factors``),
+  * τ sampling as a pure function of (base_key, step, leaf path, probe),
+  * reconstruction ``Z_t`` and the squared reconstruction used by TeZO-Adam's
+    separable second moment (paper Eq. 8).
+
+Stacked parameters: a leaf with shape ``(..., m, n)`` (e.g. ``[L, m, n]`` for a
+scanned layer stack, or ``[L, E, m, n]`` for stacked experts) is treated as a
+batch of independent 2-D weights; factors get matching leading dims and each
+batch element draws its own τ, exactly as if layers were separate leaves.
+
+Per-layer ranks with static shapes: Eq. (7) of the paper selects a different
+rank per layer.  Inside a stacked leaf we keep a single static factor width
+``r`` (= the block max) and apply a 0/1 ``rank_mask`` over the trailing factor
+axis per batch element, which zeroes τ components beyond that layer's selected
+rank — numerically identical to per-layer r_l, with static shapes (DESIGN §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import fold_in_path, map_with_path
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class CPDFactor:
+    """Frozen model-dimension factors for one parameter leaf.
+
+    u: (..., m, r)   v: (..., n, r)   — leading dims mirror the leaf's.
+    rank_mask: optional (..., r) float 0/1 mask implementing per-layer ranks.
+    """
+
+    u: jax.Array
+    v: jax.Array
+    rank_mask: Optional[jax.Array] = None
+
+    @property
+    def rank(self) -> int:
+        return self.u.shape[-1]
+
+
+# A FactorTree is a dict {leaf_path: CPDFactor} covering the low-rank leaves.
+FactorTree = dict
+
+
+def is_lowrank_leaf(path: str, leaf: Any, min_dim: int = 8) -> bool:
+    """A leaf is low-rank-perturbed iff its trailing two dims are both real
+    matrix dims.  Norm scales / biases (ndim<2) and degenerate matrices fall
+    back to dense MeZO-style perturbation (DESIGN §5: <0.1% of params)."""
+    if leaf.ndim < 2:
+        return False
+    m, n = leaf.shape[-2], leaf.shape[-1]
+    return m >= min_dim and n >= min_dim
+
+
+def _leaf_rank(path: str, leaf: Any, ranks: Any, default_rank: int) -> int:
+    """Resolve the static rank for a leaf: per-path dict override, else the
+    default, always capped by min(m, n)."""
+    r = default_rank
+    if isinstance(ranks, dict) and path in ranks:
+        r = int(ranks[path])
+    m, n = leaf.shape[-2], leaf.shape[-1]
+    return max(1, min(r, m, n))
+
+
+def init_factors(
+    params: Any,
+    key: jax.Array,
+    default_rank: int = 64,
+    ranks: Optional[dict] = None,
+    factor_dtype: jnp.dtype = jnp.float32,
+    rank_masks: Optional[dict] = None,
+) -> FactorTree:
+    """Draw the frozen (u, v) factors for every low-rank leaf.
+
+    Factors are N(0,1): the paper's Theorem 1 assumes u_s ~ N(0, I_m),
+    v_s ~ N(0, I_n), τ ~ N(0, I_r) — no orthogonality constraint (in contrast
+    with SubZO), which Theorem 1's proof explicitly does not require.
+    """
+    factors: FactorTree = {}
+
+    def make(path: str, leaf: Any) -> Any:
+        if not is_lowrank_leaf(path, leaf):
+            return leaf  # ignored; we only collect into `factors`
+        r = _leaf_rank(path, leaf, ranks, default_rank)
+        batch = leaf.shape[:-2]
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        ku = fold_in_path(key, path + "#u")
+        kv = fold_in_path(key, path + "#v")
+        u = jax.random.normal(ku, batch + (m, r), dtype=factor_dtype)
+        v = jax.random.normal(kv, batch + (n, r), dtype=factor_dtype)
+        mask = None
+        if rank_masks is not None and path in rank_masks:
+            mask = jnp.asarray(rank_masks[path], dtype=factor_dtype)
+            assert mask.shape == batch + (r,), (
+                f"rank_mask for {path} must be {batch + (r,)}, got {mask.shape}"
+            )
+        factors[path] = CPDFactor(u=u, v=v, rank_mask=mask)
+        return leaf
+
+    map_with_path(make, params)
+    return factors
+
+
+def sample_tau(
+    factor: CPDFactor, key_t: jax.Array, path: str, probe: int = 0
+) -> jax.Array:
+    """τ ~ N(0, I_r) for one leaf at one step/probe.
+
+    Pure function of (key_t, path, probe): regenerating τ inside the three
+    perturbation passes of Algorithm 1 and again in the update is free and
+    exact — the JAX analogue of MeZO's seed-replay trick (DESIGN §3).
+    """
+    k = fold_in_path(jax.random.fold_in(key_t, probe), path + "#tau")
+    batch = factor.u.shape[:-2]
+    tau = jax.random.normal(k, batch + (factor.rank,), dtype=jnp.float32)
+    if factor.rank_mask is not None:
+        tau = tau * factor.rank_mask.astype(tau.dtype)
+    return tau
+
+
+def reconstruct(factor: CPDFactor, tau: jax.Array) -> jax.Array:
+    """Z_t = Σ_s τ_s (u_s ∘ v_s)  for a (possibly batched) leaf.
+
+    Contracted as (u · diag(τ)) @ vᵀ so XLA lowers it to a rank-r matmul
+    (MXU-friendly) instead of materializing r outer products.  Z is produced
+    in the factor dtype (bf16 in production: halves perturbation HBM traffic;
+    the add into W still happens in f32 — see estimator._add_scaled).
+    """
+    u = factor.u
+    v = factor.v
+    ut = u * tau[..., None, :].astype(u.dtype)
+    return jnp.einsum(
+        "...mr,...nr->...mn", ut, v, preferred_element_type=u.dtype
+    )
+
+
+def reconstruct_squared(factor: CPDFactor, tau_sq: jax.Array) -> jax.Array:
+    """Separable second-moment reconstruction (paper Eq. 8):
+
+        V = Σ_s (τ_V)_s · (u_s² ∘ v_s²)
+
+    The dropped cross terms have zero expectation; benchmarks/appA2 measures
+    the actual error, reproducing the paper's Appendix A.2.
+    """
+    u2 = factor.u * factor.u
+    v2 = factor.v * factor.v
+    ut = u2 * tau_sq[..., None, :].astype(u2.dtype)
+    return jnp.einsum(
+        "...mr,...nr->...mn", ut, v2, preferred_element_type=u2.dtype
+    )
+
+
+def dense_noise(leaf: Any, key_t: jax.Array, path: str, probe: int = 0) -> jax.Array:
+    """Dense z ~ N(0, I) for non-low-rank leaves (MeZO semantics)."""
+    k = fold_in_path(jax.random.fold_in(key_t, probe), path + "#dense")
+    return jax.random.normal(k, leaf.shape, dtype=jnp.float32).astype(leaf.dtype)
+
+
+def num_sampled_elements_per_step(params: Any, factors: FactorTree) -> int:
+    """Count of fresh random scalars drawn per optimization step — the
+    quantity the paper's Table 2 compares (TeZO: only τ, i.e. r per 2-D leaf,
+    plus dense fallback leaves)."""
+    count = 0
+
+    def visit(path: str, leaf: Any) -> Any:
+        nonlocal count
+        if path in factors:
+            f = factors[path]
+            batch = 1
+            for d in f.u.shape[:-2]:
+                batch *= d
+            count += batch * f.rank
+        else:
+            count += leaf.size
+        return leaf
+
+    map_with_path(visit, params)
+    return count

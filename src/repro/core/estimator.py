@@ -1,0 +1,622 @@
+"""ZO methods: perturbation semantics + τ-space optimizer updates.
+
+A ZO *method* couples (a) how the SPSA perturbation ``Z`` is generated with
+(b) how the projected coefficient ``κ = (f₊ − f₋)/2ρ`` is turned into a weight
+update (possibly through momentum / adaptive state).  All methods share the
+three-pass in-place perturbation schedule of Algorithm 1:
+
+    W ← W + ρZ ;  f₊ ;  W ← W − 2ρZ ;  f₋ ;  W ← W + ρZ   (restore)
+
+with Z regenerated from the step key at each pass (MeZO's resampling trick,
+here a pure function of (key, step, path, probe) — see cpd.sample_tau).
+
+Implemented methods (paper §4.3 + baselines from §6):
+
+  tezo        G_t = κ_t · Σ_s τ_s (u_s∘v_s)                        [Alg.1 L11]
+  tezo_m      τ_M ← β₁τ_M + (1−β₁)κτ ;  G = recon(τ_M)             [L12-13]
+  tezo_adam   + τ_V ← β₂τ_V + (1−β₂)κ²τ² ; G = M/√(V+ε)            [L14-18]
+  mezo        dense z ~ N(0, I_d), G = κz                 (Malladi et al. 23)
+  mezo_m      dense momentum buffer (full d floats — the memory cost Fig.3a)
+  mezo_adam   dense m, v buffers (3× params — the paper's 35% comparison)
+  lozo        Z = U Vᵀ, U lazy (refresh every ν steps), V fresh    (Chen 24)
+  lozo_m      + momentum on the fresh-factor side within a window
+  subzo       Z = U Σ Vᵀ, U,V lazy + QR-orthonormal, Σ fresh       (Yu 24)
+
+All state lives in a ``mstate`` dict pytree; updates are functional.  q-SPSA
+multi-probe averaging (cfg.q_probes>1) is supported for every method by
+regenerating per-probe noise inside the update — no probe buffers are stored.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cpd import (
+    CPDFactor,
+    dense_noise,
+    init_factors,
+    is_lowrank_leaf,
+    reconstruct,
+    reconstruct_squared,
+    sample_tau,
+)
+from repro.utils.tree import fold_in_path, map_with_path
+
+
+@dataclass(frozen=True)
+class ZOConfig:
+    """Static configuration for a ZO fine-tuning run (hashable, jit-static)."""
+
+    method: str = "tezo_adam"
+    rho: float = 1e-3              # perturbation rate (paper: 1e-3 everywhere)
+    lr: float = 1e-6
+    rank: int = 64                 # default CP rank r (rank_mode=const)
+    rank_mode: str = "const"       # const | spectral (Eq. 7, resolved at setup)
+    rank_threshold: float = 0.25   # spectral threshold (App. A.3: 20–35%)
+    r_max: int = 64
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-5
+    weight_decay: float = 0.0
+    lazy_interval: int = 50        # LOZO/SubZO subspace refresh period ν
+    q_probes: int = 1              # q-SPSA ensemble size (variance reduction)
+    seed: int = 0
+    restore_mode: str = "inplace"  # inplace (Alg.1, 1× param mem) | exact
+    factor_dtype: Any = jnp.float32
+    lr_schedule: str = "const"     # const | cosine | linear_warmup_cosine
+    warmup_steps: int = 0
+    total_steps: int = 10_000
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        lr = jnp.asarray(self.lr, jnp.float32)
+        if self.lr_schedule == "const":
+            return lr
+        t = jnp.minimum(step, self.total_steps).astype(jnp.float32)
+        warm = jnp.where(
+            self.warmup_steps > 0,
+            jnp.minimum(1.0, (t + 1.0) / max(self.warmup_steps, 1)),
+            1.0,
+        )
+        if self.lr_schedule == "cosine" or self.lr_schedule == "linear_warmup_cosine":
+            prog = jnp.clip(
+                (t - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            return lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        raise ValueError(f"unknown lr_schedule {self.lr_schedule}")
+
+
+def _apply_wd(w: jax.Array, lr: jax.Array, cfg: ZOConfig) -> jax.Array:
+    if cfg.weight_decay == 0.0:
+        return w
+    return (w.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay)).astype(w.dtype)
+
+
+def _add_scaled(w: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    """w + scale·z with the product formed in f32 before the cast back to the
+    weight dtype (keeps ρ·z resolution under bf16 params)."""
+    return (w.astype(jnp.float32) + scale * z.astype(jnp.float32)).astype(w.dtype)
+
+
+class ZOMethod:
+    """Base class; subclasses override the four hooks.  Stateless — all run
+    state is in the mstate pytree."""
+
+    name: str = "base"
+
+    def init(self, params: Any, key: jax.Array, cfg: ZOConfig,
+             ranks: Optional[dict] = None, rank_masks: Optional[dict] = None) -> dict:
+        raise NotImplementedError
+
+    def begin_step(self, mstate: dict, key_t: jax.Array, step: jax.Array,
+                   cfg: ZOConfig) -> dict:
+        return mstate
+
+    def perturb(self, params: Any, mstate: dict, key_t: jax.Array, probe: int,
+                scale: float, cfg: ZOConfig, step: jax.Array) -> Any:
+        raise NotImplementedError
+
+    def update(self, params: Any, mstate: dict, key_t: jax.Array,
+               kappas: jax.Array, lr: jax.Array, cfg: ZOConfig,
+               step: jax.Array) -> tuple[Any, dict]:
+        raise NotImplementedError
+
+    # -- shared helpers -----------------------------------------------------
+
+    def _probe_mean_dense(self, path: str, leaf: jax.Array, key_t: jax.Array,
+                          kappas: jax.Array, noise_fn) -> jax.Array:
+        """mean_i κ_i · z_i for one leaf, regenerating z_i per probe."""
+        q = kappas.shape[0]
+        acc = jnp.zeros(leaf.shape, jnp.float32)
+        for i in range(q):
+            acc = acc + kappas[i] * noise_fn(leaf, key_t, path, i).astype(jnp.float32)
+        return acc / q
+
+
+# --------------------------------------------------------------------------
+# TeZO family
+# --------------------------------------------------------------------------
+
+
+class TeZO(ZOMethod):
+    """Plain TeZO (ZO-SGD update in τ-space)."""
+
+    name = "tezo"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        factors = init_factors(
+            params,
+            jax.random.fold_in(key, 1),
+            default_rank=cfg.rank,
+            ranks=ranks,
+            factor_dtype=cfg.factor_dtype,
+            rank_masks=rank_masks,
+        )
+        return {"factors": factors}
+
+    def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        factors = mstate["factors"]
+
+        def f(path, w):
+            if path in factors:
+                tau = sample_tau(factors[path], key_t, path, probe)
+                z = reconstruct(factors[path], tau)
+            else:
+                z = dense_noise(w, key_t, path, probe)
+            return _add_scaled(w, z, scale)
+
+        return map_with_path(f, params)
+
+    def _probe_mean_ktau(self, factor: CPDFactor, path: str, key_t, kappas):
+        """mean_i κ_i τ_i — an r-vector; the whole gradient signal of a leaf."""
+        q = kappas.shape[0]
+        acc = kappas[0] * sample_tau(factor, key_t, path, 0)
+        for i in range(1, q):
+            acc = acc + kappas[i] * sample_tau(factor, key_t, path, i)
+        return acc / q
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        factors = mstate["factors"]
+
+        def f(path, w):
+            if path in factors:
+                ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
+                g = reconstruct(factors[path], ktau)
+            else:
+                g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+
+        return map_with_path(f, params), mstate
+
+
+class TeZOMomentum(TeZO):
+    """TeZO-m: momentum accumulated on κτ (r floats per leaf, Alg.1 L12-13)."""
+
+    name = "tezo_m"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        mstate = super().init(params, key, cfg, ranks, rank_masks)
+        factors = mstate["factors"]
+        mstate["tau_m"] = {
+            p: jnp.zeros(f.u.shape[:-2] + (f.rank,), jnp.float32)
+            for p, f in factors.items()
+        }
+        # dense fallback leaves carry a dense momentum buffer (tiny: 1-D only)
+        dense_m = {}
+
+        def visit(path, leaf):
+            if path not in factors:
+                dense_m[path] = jnp.zeros(leaf.shape, jnp.float32)
+            return leaf
+
+        map_with_path(visit, params)
+        mstate["dense_m"] = dense_m
+        return mstate
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        factors = mstate["factors"]
+        new_tau_m = dict(mstate["tau_m"])
+        new_dense_m = dict(mstate["dense_m"])
+
+        def f(path, w):
+            if path in factors:
+                ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
+                tm = cfg.beta1 * mstate["tau_m"][path] + (1.0 - cfg.beta1) * ktau
+                new_tau_m[path] = tm
+                g = reconstruct(factors[path], tm)
+            else:
+                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+                dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
+                new_dense_m[path] = dm
+                g = dm
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+
+        params = map_with_path(f, params)
+        mstate = dict(mstate)
+        mstate["tau_m"] = new_tau_m
+        mstate["dense_m"] = new_dense_m
+        return params, mstate
+
+
+class TeZOAdam(TeZOMomentum):
+    """TeZO-Adam with the *lightweight separable* second moment (Eq. 8).
+
+    V is reconstructed as Σ_s (τ_V)_s (u_s²∘v_s²): every term is ≥0 so V ≥ 0
+    by construction (the true squared-Z accumulation can't go negative either,
+    but the separable form also can't *under*-flow through cancellation).
+    """
+
+    name = "tezo_adam"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        mstate = super().init(params, key, cfg, ranks, rank_masks)
+        factors = mstate["factors"]
+        mstate["tau_v"] = {
+            p: jnp.zeros(f.u.shape[:-2] + (f.rank,), jnp.float32)
+            for p, f in factors.items()
+        }
+        mstate["dense_v"] = {
+            p: jnp.zeros_like(m) for p, m in mstate["dense_m"].items()
+        }
+        return mstate
+
+    def _probe_mean_k2tau2(self, factor, path, key_t, kappas):
+        q = kappas.shape[0]
+        t0 = sample_tau(factor, key_t, path, 0)
+        acc = (kappas[0] ** 2) * (t0 * t0)
+        for i in range(1, q):
+            ti = sample_tau(factor, key_t, path, i)
+            acc = acc + (kappas[i] ** 2) * (ti * ti)
+        return acc / q
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        factors = mstate["factors"]
+        new_tau_m = dict(mstate["tau_m"])
+        new_tau_v = dict(mstate["tau_v"])
+        new_dense_m = dict(mstate["dense_m"])
+        new_dense_v = dict(mstate["dense_v"])
+
+        def f(path, w):
+            if path in factors:
+                fac = factors[path]
+                ktau = self._probe_mean_ktau(fac, path, key_t, kappas)
+                k2tau2 = self._probe_mean_k2tau2(fac, path, key_t, kappas)
+                tm = cfg.beta1 * mstate["tau_m"][path] + (1.0 - cfg.beta1) * ktau
+                tv = cfg.beta2 * mstate["tau_v"][path] + (1.0 - cfg.beta2) * k2tau2
+                new_tau_m[path] = tm
+                new_tau_v[path] = tv
+                m_full = reconstruct(fac, tm).astype(jnp.float32)
+                v_full = reconstruct_squared(fac, tv).astype(jnp.float32)
+                g = m_full * jax.lax.rsqrt(v_full + cfg.eps)
+            else:
+                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+                dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
+                dv = cfg.beta2 * mstate["dense_v"][path] + (1.0 - cfg.beta2) * gd * gd
+                new_dense_m[path] = dm
+                new_dense_v[path] = dv
+                g = dm * jax.lax.rsqrt(dv + cfg.eps)
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+        params = map_with_path(f, params)
+        mstate = dict(mstate)
+        mstate["tau_m"] = new_tau_m
+        mstate["tau_v"] = new_tau_v
+        mstate["dense_m"] = new_dense_m
+        mstate["dense_v"] = new_dense_v
+        return params, mstate
+
+
+# --------------------------------------------------------------------------
+# MeZO family (Malladi et al., 2023) — the dense baselines
+# --------------------------------------------------------------------------
+
+
+class MeZO(ZOMethod):
+    name = "mezo"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        return {}
+
+    def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        def f(path, w):
+            return _add_scaled(w, dense_noise(w, key_t, path, probe), scale)
+
+        return map_with_path(f, params)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        def f(path, w):
+            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+        return map_with_path(f, params), mstate
+
+
+class MeZOMomentum(MeZO):
+    name = "mezo_m"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        m = {}
+
+        def visit(path, leaf):
+            m[path] = jnp.zeros(leaf.shape, jnp.float32)
+            return leaf
+
+        map_with_path(visit, params)
+        return {"m": m}
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        new_m = dict(mstate["m"])
+
+        def f(path, w):
+            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            dm = cfg.beta1 * mstate["m"][path] + (1.0 - cfg.beta1) * g
+            new_m[path] = dm
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * dm).astype(w.dtype)
+
+        params = map_with_path(f, params)
+        return params, {"m": new_m}
+
+
+class MeZOAdam(MeZO):
+    name = "mezo_adam"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        m, v = {}, {}
+
+        def visit(path, leaf):
+            m[path] = jnp.zeros(leaf.shape, jnp.float32)
+            v[path] = jnp.zeros(leaf.shape, jnp.float32)
+            return leaf
+
+        map_with_path(visit, params)
+        return {"m": m, "v": v}
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        new_m = dict(mstate["m"])
+        new_v = dict(mstate["v"])
+
+        def f(path, w):
+            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            dm = cfg.beta1 * mstate["m"][path] + (1.0 - cfg.beta1) * g
+            dv = cfg.beta2 * mstate["v"][path] + (1.0 - cfg.beta2) * g * g
+            new_m[path] = dm
+            new_v[path] = dv
+            w = _apply_wd(w, lr, cfg)
+            return (
+                w.astype(jnp.float32) - lr * dm * jax.lax.rsqrt(dv + cfg.eps)
+            ).astype(w.dtype)
+
+        params = map_with_path(f, params)
+        return params, {"m": new_m, "v": new_v}
+
+
+# --------------------------------------------------------------------------
+# LOZO (Chen et al., 2024): Z = U Vᵀ, lazy U
+# --------------------------------------------------------------------------
+
+
+def _lozo_u(leaf, key_t_free, base_key, path, step, interval, rank):
+    """Lazy factor: pure function of the *window index* step//ν so it stays
+    fixed for ν consecutive steps without being stored."""
+    window = step // interval
+    k = fold_in_path(jax.random.fold_in(base_key, window), path + "#U")
+    batch, m = leaf.shape[:-2], leaf.shape[-2]
+    return jax.random.normal(k, batch + (m, rank), jnp.float32)
+
+
+def _lozo_v(leaf, key_t, path, probe, rank):
+    k = fold_in_path(jax.random.fold_in(key_t, probe), path + "#V")
+    batch, n = leaf.shape[:-2], leaf.shape[-1]
+    return jax.random.normal(k, batch + (n, rank), jnp.float32)
+
+
+class LOZO(ZOMethod):
+    name = "lozo"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        return {"base_key": jax.random.fold_in(key, 7)}
+
+    def _z(self, path, w, mstate, key_t, probe, cfg, step):
+        if not is_lowrank_leaf(path, w):
+            return dense_noise(w, key_t, path, probe)
+        r = min(cfg.rank, w.shape[-2], w.shape[-1])
+        u = _lozo_u(w, key_t, mstate["base_key"], path, step, cfg.lazy_interval, r)
+        v = _lozo_v(w, key_t, path, probe, r)
+        return jnp.einsum("...mr,...nr->...mn", u, v)
+
+    def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        def f(path, w):
+            return _add_scaled(w, self._z(path, w, mstate, key_t, probe, cfg, step), scale)
+
+        return map_with_path(f, params)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        q = kappas.shape[0]
+
+        def f(path, w):
+            acc = jnp.zeros(w.shape, jnp.float32)
+            for i in range(q):
+                acc = acc + kappas[i] * self._z(path, w, mstate, key_t, i, cfg, step).astype(jnp.float32)
+            g = acc / q
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+        return map_with_path(f, params), mstate
+
+
+class LOZOMomentum(LOZO):
+    """LOZO-m: momentum on the fresh V-factor side, reset at window boundary
+    (the subspace momentum of Chen et al. §3.2, factored storage)."""
+
+    name = "lozo_m"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        mstate = super().init(params, key, cfg)
+        vm = {}
+
+        def visit(path, leaf):
+            if is_lowrank_leaf(path, leaf):
+                r = min(cfg.rank, leaf.shape[-2], leaf.shape[-1])
+                vm[path] = jnp.zeros(leaf.shape[:-2] + (leaf.shape[-1], r), jnp.float32)
+            else:
+                vm[path] = jnp.zeros(leaf.shape, jnp.float32)
+            return leaf
+
+        map_with_path(visit, params)
+        mstate["v_m"] = vm
+        return mstate
+
+    def begin_step(self, mstate, key_t, step, cfg):
+        # reset the factored momentum when the lazy subspace rotates
+        boundary = (step % cfg.lazy_interval) == 0
+        new_vm = {
+            p: jnp.where(boundary, jnp.zeros_like(m), m)
+            for p, m in mstate["v_m"].items()
+        }
+        out = dict(mstate)
+        out["v_m"] = new_vm
+        return out
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        q = kappas.shape[0]
+        new_vm = dict(mstate["v_m"])
+
+        def f(path, w):
+            if is_lowrank_leaf(path, w):
+                r = min(cfg.rank, w.shape[-2], w.shape[-1])
+                u = _lozo_u(w, key_t, mstate["base_key"], path, step, cfg.lazy_interval, r)
+                acc = jnp.zeros(w.shape[:-2] + (w.shape[-1], r), jnp.float32)
+                for i in range(q):
+                    acc = acc + kappas[i] * _lozo_v(w, key_t, path, i, r)
+                kv = acc / q
+                vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * kv
+                new_vm[path] = vm
+                g = jnp.einsum("...mr,...nr->...mn", u, vm)
+            else:
+                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+                vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * gd
+                new_vm[path] = vm
+                g = vm
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+        params = map_with_path(f, params)
+        mstate = dict(mstate)
+        mstate["v_m"] = new_vm
+        return params, mstate
+
+
+# --------------------------------------------------------------------------
+# SubZO / SubZero (Yu et al., 2024): Z = U Σ Vᵀ with orthonormal lazy U, V
+# --------------------------------------------------------------------------
+
+
+class SubZO(ZOMethod):
+    name = "subzo"
+
+    def init(self, params, key, cfg, ranks=None, rank_masks=None):
+        base = jax.random.fold_in(key, 11)
+        U, V = {}, {}
+
+        def visit(path, leaf):
+            if is_lowrank_leaf(path, leaf):
+                r = min(cfg.rank, leaf.shape[-2], leaf.shape[-1])
+                U[path], V[path] = self._fresh_uv(
+                    leaf.shape[:-2], leaf.shape[-2], leaf.shape[-1], base, path, 0, r
+                )
+            return leaf
+
+        map_with_path(visit, params)
+        return {"base_key": base, "U": U, "V": V}
+
+    @staticmethod
+    def _fresh_uv(batch, m, n, base_key, path, window, r):
+        ku = fold_in_path(jax.random.fold_in(base_key, window), path + "#U")
+        kv = fold_in_path(jax.random.fold_in(base_key, window), path + "#V")
+        gu = jax.random.normal(ku, tuple(batch) + (m, r), jnp.float32)
+        gv = jax.random.normal(kv, tuple(batch) + (n, r), jnp.float32)
+        qu, _ = jnp.linalg.qr(gu)
+        qv, _ = jnp.linalg.qr(gv)
+        return qu, qv
+
+    def begin_step(self, mstate, key_t, step, cfg):
+        """Refresh the orthonormal subspace every ν steps (lazy update)."""
+        window = step // cfg.lazy_interval
+        boundary = (step % cfg.lazy_interval) == 0
+        new_U = dict(mstate["U"])
+        new_V = dict(mstate["V"])
+        for path in mstate["U"]:
+            u_old, v_old = mstate["U"][path], mstate["V"][path]
+            r = u_old.shape[-1]
+            u_new, v_new = self._fresh_uv(
+                u_old.shape[:-2], u_old.shape[-2], v_old.shape[-2],
+                mstate["base_key"], path, window, r,
+            )
+            new_U[path] = jnp.where(boundary, u_new, u_old)
+            new_V[path] = jnp.where(boundary, v_new, v_old)
+        out = dict(mstate)
+        out["U"] = new_U
+        out["V"] = new_V
+        return out
+
+    def _sigma(self, path, key_t, probe, r, batch):
+        k = fold_in_path(jax.random.fold_in(key_t, probe), path + "#S")
+        return jax.random.normal(k, batch + (r, r), jnp.float32)
+
+    def _z(self, path, w, mstate, key_t, probe, cfg):
+        if path not in mstate["U"]:
+            return dense_noise(w, key_t, path, probe)
+        u, v = mstate["U"][path], mstate["V"][path]
+        r = u.shape[-1]
+        s = self._sigma(path, key_t, probe, r, u.shape[:-2])
+        return jnp.einsum("...mr,...rk,...nk->...mn", u, s, v)
+
+    def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        def f(path, w):
+            return _add_scaled(w, self._z(path, w, mstate, key_t, probe, cfg), scale)
+
+        return map_with_path(f, params)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        q = kappas.shape[0]
+
+        def f(path, w):
+            acc = jnp.zeros(w.shape, jnp.float32)
+            for i in range(q):
+                acc = acc + kappas[i] * self._z(path, w, mstate, key_t, i, cfg).astype(jnp.float32)
+            g = acc / q
+            w = _apply_wd(w, lr, cfg)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+        return map_with_path(f, params), mstate
+
+
+METHODS: dict[str, ZOMethod] = {
+    m.name: m
+    for m in [
+        TeZO(),
+        TeZOMomentum(),
+        TeZOAdam(),
+        MeZO(),
+        MeZOMomentum(),
+        MeZOAdam(),
+        LOZO(),
+        LOZOMomentum(),
+        SubZO(),
+    ]
+}
+
+
+def get_method(name: str) -> ZOMethod:
+    if name not in METHODS:
+        raise KeyError(f"unknown ZO method {name!r}; available: {sorted(METHODS)}")
+    return METHODS[name]

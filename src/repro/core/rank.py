@@ -1,0 +1,142 @@
+"""Layer-wise rank selection (paper §4.2, Eq. 6–7).
+
+The paper's insight: gradient rank is bounded by the ranks of the *downstream
+weights* (rank propagation, Eq. 6), and weights stay effectively low-rank under
+weight decay — so ``r_l`` can be chosen from the weights alone, without ever
+computing a first-order gradient:
+
+    r_l = min( { Rank(W_{l_b}) }_{W in block b}, r_max )            (Eq. 7)
+
+``Rank(W)`` = number of singular values above ``threshold · σ_max(W)`` (the
+paper uses a uniform percentage threshold; Appendix A.3 searches
+{20%,25%,30%,35%}).
+
+This runs once, eagerly, at setup time (ranks must be static for factor
+shapes).  For very large matrices we estimate the spectrum with a Gaussian
+sketch (randomized range-finder): top singular values of ``W·G`` with
+``G ∈ R^{n×k}``, k = 4·r_max, approximate those of W — the thresholded count
+matches the exact SVD within ±2 on tested shapes (see tests/test_rank.py and
+DESIGN §7.4).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cpd import is_lowrank_leaf
+from repro.utils.tree import map_with_path
+
+# Matches the layer-block index in a leaf path, e.g. "['blocks']['3']['attn']..."
+_BLOCK_RE = re.compile(r"(?:blocks?|layers?)['\]\[]*(\d+)")
+
+
+def spectral_rank(
+    w: np.ndarray,
+    threshold: float = 0.25,
+    sketch_dim: Optional[int] = None,
+    seed: int = 0,
+) -> int:
+    """#{σ_i > threshold · σ_max} for a single 2-D matrix."""
+    w = np.asarray(w, dtype=np.float32)
+    m, n = w.shape
+    if sketch_dim is not None and min(m, n) > sketch_dim:
+        rng = np.random.default_rng(seed)
+        if n >= m:
+            g = rng.standard_normal((n, sketch_dim), dtype=np.float32)
+            w = w @ (g / np.sqrt(sketch_dim))
+        else:
+            g = rng.standard_normal((sketch_dim, m), dtype=np.float32)
+            w = (g / np.sqrt(sketch_dim)) @ w
+    s = np.linalg.svd(w, compute_uv=False)
+    if s.size == 0 or s[0] == 0.0:
+        return 1
+    return max(1, int(np.sum(s > threshold * s[0])))
+
+
+def leaf_spectral_ranks(
+    leaf: np.ndarray,
+    threshold: float = 0.25,
+    sketch_dim: Optional[int] = None,
+) -> np.ndarray:
+    """Per-batch-element ranks for a stacked leaf (..., m, n) -> (...) ints."""
+    arr = np.asarray(leaf, dtype=np.float32)
+    batch_shape = arr.shape[:-2]
+    flat = arr.reshape((-1,) + arr.shape[-2:])
+    ranks = np.array(
+        [spectral_rank(flat[i], threshold, sketch_dim, seed=i) for i in range(flat.shape[0])],
+        dtype=np.int32,
+    )
+    return ranks.reshape(batch_shape) if batch_shape else ranks[0]
+
+
+def _block_id(path: str) -> str:
+    m = _BLOCK_RE.search(path)
+    return m.group(1) if m else "__global__"
+
+
+def select_ranks(
+    params: Any,
+    threshold: float = 0.25,
+    r_max: int = 64,
+    sketch_dim: Optional[int] = 512,
+) -> tuple[dict, dict]:
+    """Apply Eq. (7) over a parameter tree.
+
+    Returns (ranks, rank_masks):
+      ranks:      {path: static int r}  — the factor width per leaf
+                  (= min over the leaf's block, capped at r_max; for stacked
+                  leaves, the max across batch elements so shapes are static),
+      rank_masks: {path: (batch..., r) float 0/1} masking τ down to the exact
+                  per-layer rank inside stacked leaves (see cpd.CPDFactor).
+    """
+    raw: dict[str, np.ndarray] = {}
+    shapes: dict[str, tuple] = {}
+
+    def visit(path: str, leaf: Any) -> Any:
+        if is_lowrank_leaf(path, leaf):
+            raw[path] = np.atleast_1d(
+                leaf_spectral_ranks(leaf, threshold, sketch_dim)
+            )
+            shapes[path] = leaf.shape
+        return leaf
+
+    map_with_path(visit, params)
+
+    # Eq. 7: within a block, every layer's rank is the min over that block's
+    # weights (rank propagation is truncated at block granularity so that very
+    # deep models don't collapse r to 1).
+    by_block: dict[str, list[str]] = {}
+    for path in raw:
+        by_block.setdefault(_block_id(path), []).append(path)
+
+    ranks: dict[str, int] = {}
+    masks: dict[str, np.ndarray] = {}
+    for block, paths in by_block.items():
+        # Stacked leaves carry the per-layer axis inside the leaf: reduce the
+        # block-min elementwise across leaves (they share leading dims) when
+        # shapes agree, else across scalars.
+        per_leaf = [np.minimum(raw[p], r_max) for p in paths]
+        if all(a.shape == per_leaf[0].shape for a in per_leaf):
+            block_min = np.minimum.reduce(per_leaf)
+        else:
+            block_min = np.full((1,), min(int(a.min()) for a in per_leaf))
+        for p in paths:
+            leaf_shape = shapes[p]
+            batch = leaf_shape[:-2]
+            vals = block_min
+            if vals.shape != batch:
+                vals = np.broadcast_to(np.min(vals), batch if batch else (1,))
+            r_static = max(1, int(vals.max()))
+            r_static = min(r_static, leaf_shape[-2], leaf_shape[-1])
+            ranks[p] = r_static
+            if batch and vals.size > 1 and (vals.min() != vals.max()):
+                # per-layer mask: row l keeps vals[l] leading components
+                idx = np.arange(r_static)[None, :]
+                flat_vals = vals.reshape(-1)[:, None]
+                mask = (idx < flat_vals).astype(np.float32)
+                masks[p] = mask.reshape(batch + (r_static,))
+    return ranks, masks

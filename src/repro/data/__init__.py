@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM, batch_at_step

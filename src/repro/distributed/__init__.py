@@ -1,0 +1,20 @@
+from repro.distributed.sharding import (
+    batch_axes,
+    batch_shardings,
+    cache_shardings,
+    mstate_shardings,
+    param_shardings,
+    spec_for_axes,
+    zo_state_shardings,
+)
+from repro.distributed.collectives import (
+    apply_kappa_weights,
+    build_ensemble_zo_train_step,
+    kappa_allreduce_bytes,
+)
+from repro.distributed.fault import (
+    FailureReport,
+    Heartbeat,
+    StragglerSim,
+    elastic_restart_plan,
+)

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the ZO hot loops (perturb / adam-update / forward
+# flash attention) + jit wrappers (ops.py) + pure-jnp oracles (ref.py).
+from repro.kernels import ops, ref

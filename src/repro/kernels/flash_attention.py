@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: forward-only FlashAttention (causal, GQA, sliding
+window).
+
+ZO fine-tuning is 100% forward passes, so the forward attention kernel is the
+compute hot-spot of the whole system (the dry-run's memory term is dominated
+by materialized S×T score buffers in the XLA path).  Online-softmax tiling
+keeps the score block (bq×bk f32) in VMEM.
+
+Canonical TPU accumulation pattern: grid = (B, H, nq, nk) with the kv-block
+index innermost ("arbitrary" dimension semantics ⇒ sequential on TPU);
+running (m, l, acc) live in VMEM scratch across the nk iterations and the
+output tile is written on the last one.  Fully-masked blocks (above the
+causal diagonal / outside the sliding window) still iterate but skip the
+matmuls via @pl.when.
+
+VMEM working set at (bq=512, bk=512, dh=128):
+  q tile 128 KiB (bf16) + k/v tiles 256 KiB + f32 scores 1 MiB + acc 256 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, nk: int, scale: float,
+    causal: bool, window: int, q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    allow = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        allow = allow & (kpos <= qpos)
+    if window > 0:
+        allow = allow & (qpos - kpos < window)
+
+    # cheap block-level skip: block is live iff its corner positions overlap
+    q_lo = iq * bq + q_offset
+    q_hi = q_lo + bq - 1
+    k_lo = ik * bk
+    k_hi = k_lo + bk - 1
+    live = jnp.asarray(True)
+    if causal:
+        live = live & (k_lo <= q_hi)
+    if window > 0:
+        live = live & (q_lo - k_hi < window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # [bq, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # [bq, bk]
+        s = jnp.where(allow, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,        # [B, S, H, dh]
+    k: jax.Array,        # [B, T, KV, dh]
+    v: jax.Array,        # [B, T, KV, dh]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+    scale = dh ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq, bk=bk, nk=nk, scale=scale,
+        causal=causal, window=window, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

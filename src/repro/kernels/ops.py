@@ -1,0 +1,94 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` resolves automatically: on CPU (this container) kernels run in
+interpret mode (the kernel body executed in Python — correctness path); on
+TPU they compile to Mosaic.  Wrappers also handle rank padding (r → multiple
+of 128 for MXU lane alignment, zero-padded so the math is unchanged) and
+batched leaves via vmap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.tezo_adam import tezo_adam_update as _adam
+from repro.kernels.tezo_perturb import tezo_perturb as _perturb
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def set_interpret(value: bool | None) -> None:
+    """Override interpret-mode detection (tests force True)."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rank(u, v, *taus, multiple: int = 128):
+    r = u.shape[-1]
+    r_pad = -(-r // multiple) * multiple
+    if r_pad == r:
+        return (u, v) + taus
+    pad = [(0, 0)] * (u.ndim - 1) + [(0, r_pad - r)]
+    return (
+        jnp.pad(u, pad),
+        jnp.pad(v, pad),
+    ) + tuple(jnp.pad(t, [(0, r_pad - t.shape[-1])]) for t in taus)
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (power-of-two-ish search)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def tezo_perturb(w, u, v, tau, scale, *, pad_rank: bool = True):
+    """W + scale·(u·diag(τ))·vᵀ for 2-D or leading-batched W."""
+    if w.ndim > 2:
+        fn = functools.partial(tezo_perturb, scale=scale, pad_rank=pad_rank)
+        return jax.vmap(fn)(w, u, v, tau)
+    if pad_rank and not _interpret():
+        u, v, tau = _pad_rank(u, v, tau)
+    bm = _tile(w.shape[0], 256)
+    bn = _tile(w.shape[1], 512)
+    return _perturb(w, u, v, tau, scale, bm=bm, bn=bn, interpret=_interpret())
+
+
+def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = True):
+    if w.ndim > 2:
+        fn = functools.partial(tezo_adam_update, lr=lr, eps=eps, pad_rank=pad_rank)
+        return jax.vmap(fn)(w, u, v, tau_m, tau_v)
+    if pad_rank and not _interpret():
+        u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
+    bm = _tile(w.shape[0], 256)
+    bn = _tile(w.shape[1], 512)
+    return _adam(w, u, v, tau_m, tau_v, lr, eps, bm=bm, bn=bn, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, bq=512, bk=512):
+    bq = _tile(q.shape[1], bq)
+    bk = _tile(k.shape[1], bk)
+    return _flash(
+        q, k, v, causal=causal, window=window, q_offset=int(q_offset),
+        bq=bq, bk=bk, interpret=_interpret(),
+    )
+
+
+def selective_scan(x, dt, a, b, c, h0, *, bd=128, bs=2048):
+    """Mamba-1 selective scan; VMEM-resident state on TPU (see
+    kernels/selective_scan.py), interpret-mode oracle path on CPU."""
+    from repro.kernels.selective_scan import selective_scan as _scan
+
+    bd_t = _tile(x.shape[2], bd)
+    bs_t = _tile(x.shape[1], bs)
+    return _scan(x, dt, a, b, c, h0, bd=bd_t, bs=bs_t, interpret=_interpret())

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the math of its kernel exactly, with f32 accumulation
+where the kernel accumulates in f32.  tests/test_kernels.py sweeps shapes and
+dtypes asserting allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tezo_perturb_ref(
+    w: jax.Array,      # [m, n]
+    u: jax.Array,      # [m, r]
+    v: jax.Array,      # [n, r]
+    tau: jax.Array,    # [r] f32
+    scale: float,
+) -> jax.Array:
+    """W + scale · (u·diag(τ))·vᵀ  with f32 accumulation, cast to W dtype."""
+    z = (u.astype(jnp.float32) * tau[None, :]) @ v.astype(jnp.float32).T
+    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+
+
+def tezo_adam_update_ref(
+    w: jax.Array,       # [m, n]
+    u: jax.Array,       # [m, r]
+    v: jax.Array,       # [n, r]
+    tau_m: jax.Array,   # [r] f32
+    tau_v: jax.Array,   # [r] f32 (nonnegative)
+    lr: float,
+    eps: float,
+) -> jax.Array:
+    """W − lr · M/√(V+ε);  M = recon(τ_M), V = Σ_s (τ_V)_s (u_s²∘v_s²)."""
+    uf = u.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    m = (uf * tau_m[None, :]) @ vf.T
+    vv = ((uf * uf) * tau_v[None, :]) @ (vf * vf).T
+    g = m * jax.lax.rsqrt(vv + eps)
+    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,       # [B, S, H, dh]
+    k: jax.Array,       # [B, T, KV, dh]
+    v: jax.Array,       # [B, T, KV, dh]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, S, KV, G, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    allow = jnp.ones((S, T), bool)
+    if causal:
+        allow = allow & (kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        allow = allow & (qpos[:, None] - kpos[None, :] < window)
+    s = jnp.where(allow[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def selective_scan_ref(
+    x: jax.Array,      # [B, S, D]
+    dt: jax.Array,     # [B, S, D]
+    a: jax.Array,      # [D, N]
+    b: jax.Array,      # [B, S, N]
+    c: jax.Array,      # [B, S, N]
+    h0: jax.Array,     # [B, D, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential Mamba-1 selective scan (matches models/hymba._ssm_scan)."""
+    af = a.astype(jnp.float32)
+
+    def step(h, z):
+        x_t, dt_t, b_t, c_t = z
+        da = jnp.exp(dt_t[..., None] * af[None])
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (x, dt, b, c)
+    )
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_last

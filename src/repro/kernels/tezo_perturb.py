@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused TeZO perturbation  W ← W + scale·(u·diag(τ))·vᵀ.
+
+This is the per-step hot loop of Algorithm 1 (three calls per step: +ρ, −2ρ,
++ρ).  The fusion matters on TPU because the naive XLA lowering materializes
+Z = (u·diag(τ))·vᵀ in HBM (a full parameter-sized buffer, 3× per step);
+here Z never leaves VMEM — each weight tile is loaded HBM→VMEM once, the
+rank-r outer product for that tile is computed by the MXU ([bm,r]×[r,bn]),
+added, and stored back.  HBM traffic drops from ~4·mn·bytes to 2·mn·bytes
+per call (read+write W only; u/v tiles are r/bn-fraction noise).
+
+Tiling: (bm=256, bn=512) bf16 tiles (256 KiB W-tile) + u/v slices
+(bm·r + bn·r) ≤ ~1.5 MiB VMEM at r=128 — comfortably inside the ~16 MiB
+budget, with MXU-aligned dims (bm, bn, r multiples of 128 — ops.py zero-pads
+r).  input_output_aliasing makes the update in-place in HBM (the functional
+JAX view still sees a fresh array).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref):
+    scale = scale_ref[0]
+    u = u_ref[...].astype(jnp.float32)          # [bm, r]
+    v = v_ref[...].astype(jnp.float32)          # [bn, r]
+    tau = tau_ref[...].astype(jnp.float32)      # [1, r]
+    ut = u * tau                                 # broadcast over rows
+    z = jax.lax.dot_general(
+        ut, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # [bm, bn]
+    o_ref[...] = (w_ref[...].astype(jnp.float32) + scale * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def tezo_perturb(
+    w: jax.Array,       # [m, n]
+    u: jax.Array,       # [m, r]
+    v: jax.Array,       # [n, r]
+    tau: jax.Array,     # [r] f32
+    scale: jax.Array | float,
+    *,
+    bm: int = 256,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = w.shape
+    r = u.shape[-1]
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _perturb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(scale_arr, w, u, v, tau.reshape(1, r))

@@ -1,0 +1,53 @@
+"""Re-run the HLO cost analysis over saved dry-run HLO dumps (no recompile).
+
+Used when the analyzer's cost model improves (e.g. the slice-aware fusion
+byte model): refreshes hlo_cost + roofline in every results JSON.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze [results/dryrun]
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+
+def reanalyze(out_dir: str = "results/dryrun") -> int:
+    out = Path(out_dir)
+    n = 0
+    for jpath in sorted(out.glob("*.json")):
+        rec = json.loads(jpath.read_text())
+        hpath = out / "hlo" / (jpath.stem + ".txt.gz")
+        if not hpath.exists():
+            continue
+        with gzip.open(hpath, "rt") as fh:
+            hlo = fh.read()
+        cost = analyze_hlo(hlo, rec["n_devices"])
+        rec["hlo_cost"] = {
+            "flops_per_device": cost.flops,
+            "bytes_raw_per_device": cost.bytes_raw,
+            "bytes_bf16_per_device": cost.bytes_bf16,
+            "collective_traffic_raw": cost.collective_traffic_raw,
+            "collective_traffic_bf16": cost.collective_traffic_bf16,
+            "collective_ops": cost.collective_ops,
+            "collective_counts": cost.collective_counts,
+        }
+        rec["roofline"] = roofline_terms(
+            cost.flops, cost.bytes_bf16, cost.collective_traffic_bf16
+        )
+        mf = rec.get("model_flops", {})
+        if mf:
+            rec["useful_flops_fraction"] = (
+                mf["model_flops_step"] / rec["n_devices"] / max(cost.flops, 1e-30)
+            )
+        jpath.write_text(json.dumps(rec, indent=1))
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    print(f"reanalyzed {reanalyze(d)} records in {d}")

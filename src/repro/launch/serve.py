@@ -1,0 +1,109 @@
+"""Batched serving driver: continuous prefill + greedy/temperature decode.
+
+The production shape is the same (prefill, decode_step) pair the dry-run
+lowers on the 16×16 / 2×16×16 meshes; here it serves real batched requests
+on host devices with a simple two-queue scheduler:
+
+  * requests accumulate into a prefill batch (padded to the bucket size),
+  * one fused prefill builds the KV/recurrent cache,
+  * the decode loop emits one token per step for the whole batch until every
+    sequence hit EOS or max_new_tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --smoke \
+        --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+
+
+class BatchedServer:
+    def __init__(self, cfg, params=None, max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (
+            params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        )
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        prompts: np.ndarray,          # [B, S] int32 (right-aligned, padded)
+        max_new_tokens: int = 32,
+        eos_id: int = -1,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> tuple[np.ndarray, dict]:
+        B = prompts.shape[0]
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        prefill_s = time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        out = []
+        done = np.zeros(B, bool)
+        tok = self._sample(logits, temperature, key)
+        t1 = time.time()
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            done |= np.asarray(tok) == eos_id
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, temperature, key)
+        decode_s = time.time() - t1
+        tokens = np.stack(out, axis=1)
+        stats = {
+            "prefill_s": round(prefill_s, 4),
+            "decode_s": round(decode_s, 4),
+            "decode_tok_per_s": round(tokens.size / max(decode_s, 1e-9), 1),
+        }
+        return tokens, stats
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+            jnp.int32
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    server = BatchedServer(cfg, max_len=args.prompt_len + args.max_new + 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        2, cfg.vocab_size, size=(args.batch, args.prompt_len)
+    ).astype(np.int32)
+    tokens, stats = server.generate(
+        prompts, max_new_tokens=args.max_new, temperature=args.temperature
+    )
+    print(json.dumps({"generated_shape": list(tokens.shape), **stats}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""End-to-end ZO fine-tuning driver.
+
+Single-host execution of the same step that the dry-run lowers for the
+production meshes: build model -> init/restore -> jit ZO step (scalar-κ DP
+by construction) -> loop with prefetch, periodic eval, async checkpoints,
+straggler simulation, and crash-safe restart.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch opt-125m --smoke --method tezo_adam --steps 300
+
+``--mesh host:D,M`` runs sharded on fake host devices (set
+XLA_FLAGS=--xla_force_host_platform_device_count=N first) — used by the
+multi-device integration tests; default is single-device.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, get_smoke_config
+from repro.core import ZOConfig, ZOTrainState, build_zo_train_step, init_zo_state
+from repro.core.rank import select_ranks
+from repro.data import DataConfig, Prefetcher, batch_at_step
+from repro.distributed import (
+    StragglerSim,
+    batch_shardings,
+    build_ensemble_zo_train_step,
+    zo_state_shardings,
+)
+from repro.models import build_model
+from repro.optim import adamw, build_fo_train_step, init_fo_state
+
+
+def train(
+    arch: str = "opt-125m",
+    smoke: bool = False,
+    method: str = "tezo_adam",
+    steps: int = 300,
+    seq_len: int = 128,
+    global_batch: int = 8,
+    lr: float = 1e-6,
+    rho: float = 1e-3,
+    rank: int = 24,
+    rank_mode: str = "const",
+    q_probes: int = 1,
+    seed: int = 0,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    eval_every: int = 50,
+    log_every: int = 10,
+    mesh=None,
+    ensemble: int = 0,
+    straggler_prob: float = 0.0,
+    pretrain_steps: int = 0,
+    pretrain_lr: float = 3e-3,
+    data_cfg: DataConfig | None = None,
+    log_file: str | None = None,
+    verbose: bool = True,
+) -> dict:
+    cfg = (get_smoke_config(arch) if smoke else get_config(arch))
+    model = build_model(cfg)
+    data = data_cfg or DataConfig(
+        seq_len=seq_len, global_batch=global_batch,
+        vocab_size=min(cfg.vocab_size, 512), seed=seed,
+    )
+
+    zo_cfg = ZOConfig(
+        method=method, lr=lr, rho=rho, rank=rank, rank_mode=rank_mode,
+        q_probes=q_probes, seed=seed, total_steps=steps,
+    )
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+
+    # optional FO pretraining so ZO starts from a sensible point (the paper
+    # fine-tunes pretrained checkpoints; examples use this to mimic that)
+    if pretrain_steps > 0:
+        opt = adamw(lr=pretrain_lr)
+        fo_state = init_fo_state(params, opt)
+        fo_step = jax.jit(build_fo_train_step(model.loss_fn, opt))
+        for s in range(pretrain_steps):
+            batch = {k: jnp.asarray(w) for k, w in batch_at_step(data, 10_000_000 + s).items()}
+            fo_state, m = fo_step(fo_state, batch)
+        params = fo_state.params
+        del fo_state
+
+    ranks = masks = None
+    if zo_cfg.rank_mode == "spectral":
+        ranks, masks = select_ranks(
+            params, threshold=zo_cfg.rank_threshold, r_max=zo_cfg.r_max
+        )
+    state = init_zo_state(params, zo_cfg, ranks, masks)
+
+    if ensemble > 1:
+        sim = StragglerSim(ensemble, straggler_prob, seed=seed + 99)
+        step_fn = build_ensemble_zo_train_step(
+            model.loss_fn, zo_cfg, ensemble,
+            straggler_mask_fn=sim.mask_fn() if straggler_prob > 0 else None,
+        )
+    else:
+        step_fn = build_zo_train_step(model.loss_fn, zo_cfg)
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if ckpt and ckpt.latest_step() is not None:
+        template = jax.eval_shape(lambda: state)
+        shardings = (
+            zo_state_shardings(mesh, model.logical_axes(), template) if mesh else None
+        )
+        state, extra = ckpt.restore(template, shardings=shardings)
+        start_step = int(extra.get("step", int(state.step)))
+        print(f"[train] restored step {start_step} from {ckpt.dir}")
+
+    if mesh is not None:
+        state_sh = zo_state_shardings(
+            mesh, model.logical_axes(), jax.eval_shape(lambda: state)
+        )
+        batch_abs = jax.eval_shape(
+            lambda: {k: jnp.asarray(v) for k, v in batch_at_step(data, 0).items()}
+        )
+        step_fn = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_shardings(mesh, batch_abs)),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        state = jax.device_put(state, state_sh)
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    eval_fn = jax.jit(model.loss_fn)
+    eval_batch = {k: jnp.asarray(v) for k, v in batch_at_step(data, 999_999_999).items()}
+
+    prefetch = Prefetcher(data, start_step=start_step)
+    history: list[dict] = []
+    losses_window: list[float] = []
+    t_start = time.time()
+    try:
+        for step_idx, host_batch in prefetch:
+            if step_idx >= steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+            state, metrics = step_fn(state, batch)
+            losses_window.append(float(metrics["loss"]))
+            if (step_idx + 1) % log_every == 0:
+                rec = {
+                    "step": step_idx + 1,
+                    "loss": float(np.mean(losses_window)),
+                    "kappa_abs": float(metrics["kappa_abs"]),
+                    "wall_s": round(time.time() - t_start, 1),
+                }
+                losses_window.clear()
+                if (step_idx + 1) % eval_every == 0:
+                    rec["eval_loss"] = float(eval_fn(state.params, eval_batch))
+                history.append(rec)
+                if verbose:
+                    print(f"[train] {json.dumps(rec)}", flush=True)
+            if ckpt and (step_idx + 1) % ckpt_every == 0:
+                ckpt.save_async(step_idx + 1, state, extra={"step": step_idx + 1})
+    finally:
+        prefetch.close()
+        if ckpt:
+            ckpt.wait()
+
+    final_eval = float(eval_fn(state.params, eval_batch))
+    result = {
+        "arch": cfg.name,
+        "method": method,
+        "steps": steps,
+        "final_eval_loss": final_eval,
+        "history": history,
+        "wall_s": round(time.time() - t_start, 1),
+    }
+    if log_file:
+        Path(log_file).parent.mkdir(parents=True, exist_ok=True)
+        Path(log_file).write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--method", default="tezo_adam")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-6)
+    ap.add_argument("--rho", type=float, default=1e-3)
+    ap.add_argument("--rank", type=int, default=24)
+    ap.add_argument("--rank-mode", default="const", choices=["const", "spectral"])
+    ap.add_argument("--q-probes", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--pretrain-steps", type=int, default=0)
+    ap.add_argument("--ensemble", type=int, default=0)
+    ap.add_argument("--straggler-prob", type=float, default=0.0)
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args()
+    result = train(**{k.replace("-", "_"): v for k, v in vars(args).items()})
+    print(json.dumps({k: v for k, v in result.items() if k != "history"}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.model import LM, build_model
+from repro.models.spec import PSpec, abstract_params, init_params, logical_axes

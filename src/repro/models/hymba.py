@@ -1,0 +1,337 @@
+"""Hymba-style hybrid LM (arXiv:2411.13676): every block runs sliding-window
+attention heads and Mamba (selective-SSM) heads IN PARALLEL on the same input,
+fuses the two paths through per-path RMSNorm + averaging, then a SwiGLU FFN.
+
+Decode state is O(1) in context (ring KV window + SSM state), so this arch
+runs the long_500k shape.  Simplifications (DESIGN §5): all layers use the
+sliding window (the paper keeps a few global-attention layers and meta
+tokens); the Mamba path follows Mamba-1 selective scan with depthwise conv.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.spec import PSpec
+
+
+class HymbaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.dt_rank = max(1, math.ceil(cfg.d_model / 16))
+
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        c = self.cfg
+        L, D, dh = c.n_layers, c.d_model, c.head_dim
+        H, KV, F = c.n_heads, c.n_kv_heads, c.d_ff
+        Di, N, Cw, dtr = self.d_inner, c.ssm_state, c.conv_width, self.dt_rank
+        s = 1.0 / math.sqrt(D)
+        si = 1.0 / math.sqrt(Di)
+        blocks = {
+            "ln1": PSpec((L, D), ("layers", "embed"), "zeros"),
+            # attention path
+            "wq": PSpec((L, D, H * dh), ("layers", "embed", "heads"), scale=s),
+            "wk": PSpec((L, D, KV * dh), ("layers", "embed", "kv_heads"), scale=s),
+            "wv": PSpec((L, D, KV * dh), ("layers", "embed", "kv_heads"), scale=s),
+            "wo": PSpec((L, H * dh, D), ("layers", "heads", "embed"), scale=s),
+            # mamba path
+            "w_in": PSpec((L, D, 2 * Di), ("layers", "embed", "heads"), scale=s),
+            "conv_w": PSpec((L, Cw, Di), ("layers", None, "heads"), scale=0.5),
+            "w_bc": PSpec((L, Di, 2 * N), ("layers", "heads", None), scale=si),
+            "w_dt1": PSpec((L, Di, dtr), ("layers", "heads", None), scale=si),
+            "w_dt2": PSpec((L, dtr, Di), ("layers", None, "heads"), scale=1.0 / math.sqrt(dtr)),
+            "dt_bias": PSpec((L, Di), ("layers", "heads"), "zeros"),
+            "a_log": PSpec((L, Di, N), ("layers", "heads", None), "zeros"),
+            "d_skip": PSpec((L, Di), ("layers", "heads"), "ones"),
+            "w_ssm_out": PSpec((L, Di, D), ("layers", "heads", "embed"), scale=si),
+            # path fusion (per-path norm scales)
+            "beta_attn": PSpec((L, D), ("layers", "embed"), "zeros"),
+            "beta_ssm": PSpec((L, D), ("layers", "embed"), "zeros"),
+            # FFN
+            "ln2": PSpec((L, D), ("layers", "embed"), "zeros"),
+            "w_gate": PSpec((L, D, F), ("layers", "embed", "ff"), scale=s),
+            "w_up": PSpec((L, D, F), ("layers", "embed", "ff"), scale=s),
+            "w_down": PSpec((L, F, D), ("layers", "ff", "embed"), scale=1.0 / math.sqrt(F)),
+        }
+        return {
+            "embed": PSpec((c.vocab_size, D), ("vocab", "embed"), scale=1.0),
+            "blocks": blocks,
+            "final_norm": PSpec((D,), ("embed",), "zeros"),
+            "lm_head": PSpec((D, c.vocab_size), ("embed", "vocab"), scale=s),
+        }
+
+    # ------------------------------------------------------------------
+    # mamba path
+    # ------------------------------------------------------------------
+    def _ssm_scan(self, p, xc, dt, B_in, C_in, h0):
+        """Selective scan.  xc [B,S,Di]; dt [B,S,Di]; B_in/C_in [B,S,N];
+        h0 [B,Di,N] initial state.  Returns (y [B,S,Di], h_last).
+
+        Mamba-1's per-(channel,state) gating makes the recurrence
+        chunk-UNparallelizable (unlike mLSTM); the hardware answer is the
+        VMEM-resident-state Pallas kernel (kernels/selective_scan.py) — on
+        the CPU dry-run host the same scan runs inside the kernel-modeled
+        region so the roofline reflects the deployed kernel (DESIGN §6)."""
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [Di,N]
+        use_kernel = self.cfg.attention_impl == "pallas" and xc.shape[1] > 1
+        if use_kernel and jax.default_backend() == "tpu":
+            from repro.kernels import ops as kernel_ops
+
+            y, h_last = kernel_ops.selective_scan(
+                xc.astype(jnp.float32), dt.astype(jnp.float32), A,
+                B_in.astype(jnp.float32), C_in.astype(jnp.float32), h0,
+            )
+            y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+            return y, h_last
+
+        def step(h, z):
+            x_t, dt_t, b_t, c_t = z       # [B,Di], [B,Di], [B,N], [B,N]
+            da = jnp.exp(dt_t[..., None] * A[None])             # [B,Di,N]
+            h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        def run_scan():
+            xs = tuple(
+                jnp.moveaxis(t, 1, 0)
+                for t in (
+                    xc.astype(jnp.float32),
+                    dt.astype(jnp.float32),
+                    B_in.astype(jnp.float32),
+                    C_in.astype(jnp.float32),
+                )
+            )
+            h_last, ys = jax.lax.scan(step, h0, xs)
+            return jnp.moveaxis(ys, 0, 1), h_last
+
+        if use_kernel:  # CPU dry-run: model the kernel's HBM behavior
+            with jax.named_scope("PALLAS_FLASH_REGION"):
+                y, h_last = run_scan()
+        else:
+            y, h_last = run_scan()
+        y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+        return y, h_last
+
+    def _mamba(self, p, h, ssm_state=None, conv_state=None):
+        """h [B,S,D] (pre-normed) -> (out [B,S,D], ssm_state, conv_state)."""
+        c = self.cfg
+        B, S, D = h.shape
+        Di, N, Cw = self.d_inner, c.ssm_state, c.conv_width
+        up = h @ p["w_in"]
+        xc, res = jnp.split(up, 2, axis=-1)                    # [B,S,Di]
+        # causal depthwise conv (width Cw) with carried state for decode
+        if conv_state is None:
+            ctx = jnp.pad(xc, ((0, 0), (Cw - 1, 0), (0, 0)))
+        else:
+            ctx = jnp.concatenate([conv_state.astype(xc.dtype), xc], axis=1)
+        idx = jnp.arange(S)[:, None] + jnp.arange(Cw)[None, :]  # [S,Cw]
+        windows = ctx[:, idx, :]                                 # [B,S,Cw,Di]
+        xc = jnp.einsum("bscd,cd->bsd", windows.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32))
+        xc = jax.nn.silu(xc).astype(h.dtype)
+        new_conv_state = ctx[:, -(Cw - 1):, :] if Cw > 1 else None
+
+        bc = xc @ p["w_bc"]
+        B_in, C_in = jnp.split(bc, 2, axis=-1)                  # [B,S,N]
+        dt = jax.nn.softplus(
+            (xc @ p["w_dt1"] @ p["w_dt2"]).astype(jnp.float32)
+            + p["dt_bias"].astype(jnp.float32)
+        )
+        if ssm_state is None:
+            ssm_state = jnp.zeros((B, Di, N), jnp.float32)
+        # keep the scan carry batch-sharded (GSPMD otherwise reshards the
+        # state every timestep — the same involuntary-replication failure
+        # mode as xlstm's sLSTM, §Perf B1/D)
+        ssm_state = layers.shard_hint(
+            ssm_state, (c.batch_axis_names, None, None), c.spmd_hints
+        )
+        y, h_last = self._ssm_scan(p, xc, dt, B_in, C_in, ssm_state)
+        y = y.astype(h.dtype) * jax.nn.silu(res.astype(jnp.float32)).astype(h.dtype)
+        return y @ p["w_ssm_out"], h_last, new_conv_state
+
+    # ------------------------------------------------------------------
+    def _attn(self, p, h, sin, cos, q_offset):
+        c = self.cfg
+        B, S, D = h.shape
+        dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+        q = (h @ p["wq"]).reshape(B, S, H, dh)
+        k = (h @ p["wk"]).reshape(B, S, KV, dh)
+        v = (h @ p["wv"]).reshape(B, S, KV, dh)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+        o = layers.attention(
+            q, k, v, window=c.window, q_offset=q_offset, impl=c.attention_impl,
+            chunk_q=c.attn_chunk_q, chunk_k=c.attn_chunk_k,
+            chunked_min_seq=c.attn_chunked_min_seq,
+        )
+        return o.reshape(B, S, H * dh) @ p["wo"], (k, v)
+
+    def _block(self, p, x, sin, cos):
+        c = self.cfg
+        h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+        attn_o, kv = self._attn(p, h, sin, cos, 0)
+        ssm_o, _, _ = self._mamba(p, h)
+        fused = 0.5 * (
+            layers.rms_norm(attn_o, p["beta_attn"], c.norm_eps)
+            + layers.rms_norm(ssm_o, p["beta_ssm"], c.norm_eps)
+        )
+        x = x + fused
+        h2 = layers.rms_norm(x, p["ln2"], c.norm_eps)
+        x = x + layers.gated_mlp(h2, p["w_gate"], p["w_up"], p["w_down"], c.activation)
+        return x, kv
+
+    # ------------------------------------------------------------------
+    def hidden_states(self, params, batch, collect_kv: bool = False):
+        c = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if batch.get("embeds") is not None:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        x = layers.shard_hint(x, (c.batch_axis_names, None, None), c.spmd_hints)
+        S = x.shape[1]
+        sin, cos = layers.rope_angles(jnp.arange(S), c.head_dim, c.rope_theta)
+        sin, cos = sin[None], cos[None]
+
+        def body(carry, p):
+            y, kv = self._block(p, carry, sin, cos)
+            return y, (kv if collect_kv else None)
+
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, kvs
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        x, _ = self.hidden_states(params, batch)
+        P = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
+        logits = x[:, P:, :] @ params["lm_head"]
+        return layers.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+    # ------------------------------------------------------------------
+    # serving: ring-window KV + SSM state (O(1) in context length)
+    # ------------------------------------------------------------------
+    def cache_capacity(self, max_len: int) -> int:
+        c = self.cfg
+        return min(max_len, c.window) if c.window > 0 else max_len
+
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        c = self.cfg
+        L, B = c.n_layers, batch_size
+        Tc = self.cache_capacity(max_len)
+        Di, N, Cw = self.d_inner, c.ssm_state, c.conv_width
+        dt = jnp.dtype(c.decode_cache_dtype)
+
+        def mk(shape, dtype):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, dtype)
+            return jnp.zeros(shape, dtype)
+
+        return {
+            "k": mk((L, B, Tc, c.n_kv_heads, c.head_dim), dt),
+            "v": mk((L, B, Tc, c.n_kv_heads, c.head_dim), dt),
+            "ssm": mk((L, B, Di, N), jnp.float32),
+            "conv": mk((L, B, Cw - 1, Di), dt),
+            "pos": mk((), jnp.int32),
+        }
+
+    def prefill(self, params, batch, max_len: int):
+        c = self.cfg
+        # run the full forward once, collecting KV; then run the mamba states
+        # forward again per layer to harvest final SSM/conv states.
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if batch.get("embeds") is not None:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        B, S, D = x.shape
+        sin, cos = layers.rope_angles(jnp.arange(S), c.head_dim, c.rope_theta)
+        sin, cos = sin[None], cos[None]
+        Tc = self.cache_capacity(max_len)
+        dt = jnp.dtype(c.decode_cache_dtype)
+
+        def body(carry, p):
+            xcur = carry
+            h = layers.rms_norm(xcur, p["ln1"], c.norm_eps)
+            attn_o, (k, v) = self._attn(p, h, sin, cos, 0)
+            ssm_o, ssm_state, conv_ctx = self._mamba(p, h)
+            fused = 0.5 * (
+                layers.rms_norm(attn_o, p["beta_attn"], c.norm_eps)
+                + layers.rms_norm(ssm_o, p["beta_ssm"], c.norm_eps)
+            )
+            xcur = xcur + fused
+            h2 = layers.rms_norm(xcur, p["ln2"], c.norm_eps)
+            xcur = xcur + layers.gated_mlp(
+                h2, p["w_gate"], p["w_up"], p["w_down"], c.activation
+            )
+            if S >= Tc:
+                shift = S % Tc
+                k_c = jnp.roll(k[:, S - Tc :], shift, axis=1).astype(dt)
+                v_c = jnp.roll(v[:, S - Tc :], shift, axis=1).astype(dt)
+            else:
+                pad = Tc - S
+                k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dt)
+                v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dt)
+            conv_state = (
+                conv_ctx.astype(dt)
+                if conv_ctx is not None
+                else jnp.zeros((B, 0, self.d_inner), dt)
+            )
+            return xcur, (k_c, v_c, ssm_state, conv_state)
+
+        x, (k_all, v_all, ssm_all, conv_all) = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = x[:, -1, :] @ params["lm_head"]
+        cache = {
+            "k": k_all, "v": v_all, "ssm": ssm_all, "conv": conv_all,
+            "pos": jnp.asarray(S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        c = self.cfg
+        pos = cache["pos"]
+        Tc = cache["k"].shape[2]
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]
+        sin, cos = layers.rope_angles(pos[None], c.head_dim, c.rope_theta)
+        sin, cos = sin[None], cos[None]
+        slot = pos % Tc
+        valid = (jnp.arange(Tc) <= pos) | (pos >= Tc)
+
+        def body(x, xs):
+            p, k_l, v_l, ssm_l, conv_l = xs
+            B = x.shape[0]
+            dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+            h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+            q = (h @ p["wq"]).reshape(B, 1, H, dh)
+            k = (h @ p["wk"]).reshape(B, 1, KV, dh)
+            v = (h @ p["wv"]).reshape(B, 1, KV, dh)
+            q = layers.apply_rope(q, sin, cos)
+            k = layers.apply_rope(k, sin, cos)
+            k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, slot, 0, 0))
+            v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, slot, 0, 0))
+            o = layers.decode_attention(q, k_l, v_l, valid)
+            attn_o = o.reshape(B, 1, H * dh) @ p["wo"]
+            ssm_o, ssm_new, conv_new = self._mamba(
+                p, h, ssm_state=ssm_l, conv_state=conv_l
+            )
+            fused = 0.5 * (
+                layers.rms_norm(attn_o, p["beta_attn"], c.norm_eps)
+                + layers.rms_norm(ssm_o, p["beta_ssm"], c.norm_eps)
+            )
+            x = x + fused
+            h2 = layers.rms_norm(x, p["ln2"], c.norm_eps)
+            x = x + layers.gated_mlp(h2, p["w_gate"], p["w_up"], p["w_down"], c.activation)
+            conv_out = conv_new.astype(conv_l.dtype) if conv_new is not None else conv_l
+            return x, (k_l, v_l, ssm_new, conv_out)
+
+        x, (k_new, v_new, ssm_new, conv_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"], cache["ssm"], cache["conv"])
+        )
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = x[:, 0, :] @ params["lm_head"]
+        return logits, {
+            "k": k_new, "v": v_new, "ssm": ssm_new, "conv": conv_new, "pos": pos + 1,
+        }

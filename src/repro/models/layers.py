@@ -1,0 +1,287 @@
+"""Shared neural layers: norms, RoPE, attention (full / chunked online-softmax
+/ decode), gated MLPs, cross-entropy.  Pure functions over raw arrays; all
+softmax/norm math in f32, activations bf16 (config dtype).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def shard_hint(x: jax.Array, spec, enabled: bool) -> jax.Array:
+    """with_sharding_constraint, active only when the launcher enables SPMD
+    hints (smoke tests run on one device with no mesh context)."""
+    if not enabled:
+        return x
+    from jax.sharding import PartitionSpec
+
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (llama-style half rotation)
+# --------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions [...,] int -> (sin, cos) each [..., head_dim/2] f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, S, N, dh]; sin/cos [B?, S, dh/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _gqa_mask(qpos, kpos, window: int):
+    """[.., Sq, Sk] bool allow-mask: causal + optional sliding window."""
+    allow = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        allow = allow & (qpos[:, None] - kpos[None, :] < window)
+    return allow
+
+
+def full_attention(
+    q: jax.Array,        # [B, S, H, dh]
+    k: jax.Array,        # [B, T, KV, dh]
+    v: jax.Array,        # [B, T, KV, dh]
+    *,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Materialized-scores causal attention (S² memory). Fine for S ≤ ~4k."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, S, KV, G, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    allow = _gqa_mask(qpos, kpos, window)
+    s = jnp.where(allow, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(B, S, H, dh)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+) -> jax.Array:
+    """Online-softmax (flash-style) attention in pure XLA: nested scan over
+    (q-chunks × kv-chunks) with running (m, l, acc).  Peak score buffer is
+    chunk_q × chunk_k instead of S×T — this is the XLA twin of the Pallas
+    kernel in repro/kernels/flash_attention.py."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    assert S % cq == 0 and T % ck == 0, (S, T, cq, ck)
+    nq, nk = S // cq, T // ck
+
+    qc = q.reshape(B, nq, cq, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, qi_and_blk):
+        qi, qblk = qi_and_blk  # qblk [B, cq, KV, G, dh]
+        qpos = qi * cq + jnp.arange(cq) + q_offset
+
+        def kv_block(carry, ki_and_blks):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_blks
+            kpos = ki * ck + jnp.arange(ck)
+            s = (
+                jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk).astype(jnp.float32)
+                * scale
+            )
+            allow = _gqa_mask(qpos, kpos, window)  # [cq, ck]
+            s = jnp.where(allow[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B, KV, G, cq, dh] -> [B, cq, KV, G, dh]
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qc))
+    # blocks [nq, B, cq, KV, G, dh] -> [B, S, H, dh]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV * G, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # [B, 1, H, dh]
+    k_cache: jax.Array,    # [B, T, KV, dh]  (T = cache capacity)
+    v_cache: jax.Array,
+    valid_mask: jax.Array,  # [T] or [B, T] bool
+) -> jax.Array:
+    B, _, H, dh = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32) * scale
+    mask = valid_mask if valid_mask.ndim == 2 else valid_mask[None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache)
+    return out.reshape(B, 1, H, dh)
+
+
+def attention(
+    q, k, v, *, window=0, q_offset=0, impl="xla",
+    chunk_q=1024, chunk_k=1024, chunked_min_seq=8192,
+):
+    """Dispatch between materialized and online-softmax attention.
+
+    impl="pallas": on TPU, the fused flash kernel (repro/kernels).  On CPU
+    (dry-run host) the same online-softmax math runs as XLA inside a
+    PALLAS_FLASH_REGION named scope — the HLO analyzer recognizes the marker
+    and costs the region with the kernel's HBM model (q/k/v/o traffic only;
+    score blocks live in VMEM), while FLOPs/collectives are counted normally
+    (launch/hlo_analysis.py, DESIGN §6)."""
+    S = q.shape[1]
+    if impl == "pallas":
+        if jax.default_backend() == "tpu":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.flash_attention(
+                q, k, v, window=window, q_offset=q_offset
+            )
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return chunked_attention(
+                q, k, v, window=window, q_offset=q_offset,
+                chunk_q=chunk_q, chunk_k=chunk_k,
+            )
+    if S >= chunked_min_seq:
+        return chunked_attention(
+            q, k, v, window=window, q_offset=q_offset,
+            chunk_q=chunk_q, chunk_k=chunk_k,
+        )
+    return full_attention(q, k, v, window=window, q_offset=q_offset)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def gated_mlp(x, w_gate, w_up, w_down, activation="swiglu"):
+    u = x @ w_up
+    if activation == "gelu":  # classic 2-matrix FFN (musicgen / OPT style)
+        a = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(x.dtype)
+        return a @ w_down
+    g = x @ w_gate
+    if activation == "swiglu":
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    elif activation == "geglu":
+        a = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(activation)
+    return (a * u) @ w_down
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(
+    logits: jax.Array,    # [B, S, V]
+    targets: jax.Array,   # [B, S] int32
+    mask: Optional[jax.Array] = None,  # [B, S] {0,1}
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(
+    x: jax.Array,          # [B, S, D] final hidden states
+    lm_head: jax.Array,    # [D, V]
+    targets: jax.Array,
+    mask: Optional[jax.Array],
+    chunk: int,
+) -> jax.Array:
+    """Never materializes the full [B,S,V] logits: scan over S-chunks.
+    Used by the §Perf memory-term hillclimb (logits_chunk > 0)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    while S % chunk != 0:  # largest divisor <= requested chunk
+        chunk -= 1
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mc = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xb, tb, mb = xs
+        logits = (xb @ lm_head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mb.astype(jnp.float32)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mb)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, tc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,116 @@
+"""Unified LM wrapper: one object per architecture exposing
+
+    init(key)                       -> params
+    abstract_params()               -> ShapeDtypeStruct tree (dry-run)
+    logical_axes()                  -> logical sharding axes tree
+    loss_fn(params, batch)          -> scalar  (train_step body)
+    prefill / decode_step           -> serving
+    input_specs(shape)              -> ShapeDtypeStruct batch (dry-run)
+    make_inputs(key, shape, ...)    -> real synthetic batch (smoke/bench)
+
+The modality stubs live here: for ``vlm``/``audio`` families the batch carries
+``embeds [B, P, D]`` prefix embeddings ("precomputed frame/patch embeddings"
+per the assignment) alongside the token stream.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.hymba import HymbaLM
+from repro.models.spec import abstract_params, init_params, logical_axes
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm import XLSTMLM
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            self.impl = TransformerLM(cfg)
+        elif cfg.family == "ssm":
+            self.impl = XLSTMLM(cfg)
+        elif cfg.family == "hybrid":
+            self.impl = HymbaLM(cfg)
+        else:
+            raise ValueError(f"unknown family {cfg.family}")
+        self._specs = self.impl.param_specs()
+
+    # ---- parameters -------------------------------------------------------
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def init(self, key: jax.Array) -> Any:
+        return init_params(self._specs, key, self.dtype)
+
+    def abstract_params(self) -> Any:
+        return abstract_params(self._specs, self.dtype)
+
+    def logical_axes(self) -> Any:
+        return logical_axes(self._specs)
+
+    # ---- train ----------------------------------------------------------
+    def loss_fn(self, params: Any, batch: Any) -> jax.Array:
+        return self.impl.loss_fn(params, batch)
+
+    # ---- serve ----------------------------------------------------------
+    def prefill(self, params: Any, batch: Any, max_len: int):
+        return self.impl.prefill(params, batch, max_len)
+
+    def decode_step(self, params: Any, cache: Any, tokens: jax.Array):
+        return self.impl.decode_step(params, cache, tokens)
+
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        return self.impl.init_cache(batch_size, max_len, abstract)
+
+    # ---- inputs ----------------------------------------------------------
+    def _batch_layout(self, shape: ShapeConfig) -> dict:
+        """Sequence budget split between stub prefix embeds and tokens."""
+        c = self.cfg
+        P = min(c.n_prefix_embeds, max(shape.seq_len - 1, 0))
+        S_tok = shape.seq_len - P
+        return {"prefix": P, "tokens": S_tok}
+
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for a *training* batch of this shape."""
+        c = self.cfg
+        lay = self._batch_layout(shape)
+        B, P, S = shape.global_batch, lay["prefix"], lay["tokens"]
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if P > 0:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, P, c.d_model), self.dtype)
+        return batch
+
+    def decode_input_specs(self, shape: ShapeConfig) -> dict:
+        """(cache, tokens) stand-ins for a decode-shape cell: one new token
+        against a cache of shape.seq_len context."""
+        B = shape.global_batch
+        cache = self.init_cache(B, shape.seq_len, abstract=True)
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def make_inputs(self, key: jax.Array, shape: ShapeConfig) -> dict:
+        c = self.cfg
+        lay = self._batch_layout(shape)
+        B, P, S = shape.global_batch, lay["prefix"], lay["tokens"]
+        kt, ke = jax.random.split(key)
+        tokens = jax.random.randint(kt, (B, S + 1), 0, c.vocab_size, jnp.int32)
+        batch = {"tokens": tokens[:, :-1], "targets": tokens[:, 1:]}
+        if P > 0:
+            batch["embeds"] = (
+                jax.random.normal(ke, (B, P, c.d_model), jnp.float32) * 0.02
+            ).astype(self.dtype)
+        return batch
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,60 @@
+"""Parameter-spec machinery: models declare shapes + logical axes once;
+init / abstract (dry-run) / sharding views are derived from the same tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import fold_in_path, map_with_path
+
+
+@dataclass(frozen=True)
+class PSpec:
+    """Declarative spec for one parameter leaf."""
+
+    shape: tuple
+    axes: tuple                # logical axis names, len == len(shape)
+    init: str = "normal"       # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Optional[Any] = None  # None -> model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(specs: Any, key: jax.Array, default_dtype: Any) -> Any:
+    """Materialize a spec tree into real parameters (per-leaf derived keys)."""
+
+    def make(path: str, spec: PSpec):
+        dtype = spec.dtype or default_dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        k = fold_in_path(key, path)
+        return (
+            jax.random.normal(k, spec.shape, jnp.float32) * spec.scale
+        ).astype(dtype)
+
+    return map_with_path(make, specs)
+
+
+def abstract_params(specs: Any, default_dtype: Any) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        specs,
+        is_leaf=_is_pspec,
+    )
+
+
+def logical_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_pspec)

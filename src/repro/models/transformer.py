@@ -1,0 +1,397 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM / audio
+families (7 of the 10 assigned archs).  One stacked-parameter block scanned
+with ``lax.scan`` (compile-time O(1) in depth); GQA/MQA attention with RoPE,
+optional qk-norm, QKV biases, sliding window; SwiGLU/GeGLU FFN or GShard-style
+top-k capacity MoE.
+
+Modality frontends (paligemma, musicgen) are stubs per the assignment: the
+batch carries precomputed prefix embeddings ``embeds [B, P, D]`` that are
+concatenated before the token embeddings; loss is computed on token positions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.spec import PSpec
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        c = self.cfg
+        L, D, dh = c.n_layers, c.d_model, c.head_dim
+        H, KV, F, V = c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size
+        s_attn = 1.0 / math.sqrt(D)
+        s_ff = 1.0 / math.sqrt(max(F, D))
+        blocks: dict[str, PSpec] = {
+            "ln1": PSpec((L, D), ("layers", "embed"), "zeros"),
+            "wq": PSpec((L, D, H * dh), ("layers", "embed", "heads"), scale=s_attn),
+            "wk": PSpec((L, D, KV * dh), ("layers", "embed", "kv_heads"), scale=s_attn),
+            "wv": PSpec((L, D, KV * dh), ("layers", "embed", "kv_heads"), scale=s_attn),
+            "wo": PSpec((L, H * dh, D), ("layers", "heads", "embed"), scale=s_attn),
+            "ln2": PSpec((L, D), ("layers", "embed"), "zeros"),
+        }
+        if c.qkv_bias:
+            blocks["bq"] = PSpec((L, H * dh), ("layers", "heads"), "zeros")
+            blocks["bk"] = PSpec((L, KV * dh), ("layers", "kv_heads"), "zeros")
+            blocks["bv"] = PSpec((L, KV * dh), ("layers", "kv_heads"), "zeros")
+        if c.qk_norm:
+            blocks["q_norm"] = PSpec((L, dh), ("layers", None), "zeros")
+            blocks["k_norm"] = PSpec((L, dh), ("layers", None), "zeros")
+        if c.n_experts > 0:
+            E = c.n_experts
+            blocks["router"] = PSpec((L, D, E), ("layers", "embed", None), scale=s_attn)
+            blocks["we_gate"] = PSpec(
+                (L, E, D, F), ("layers", "experts", "embed", "ff_expert"), scale=s_attn
+            )
+            blocks["we_up"] = PSpec(
+                (L, E, D, F), ("layers", "experts", "embed", "ff_expert"), scale=s_attn
+            )
+            blocks["we_down"] = PSpec(
+                (L, E, F, D), ("layers", "experts", "ff_expert", "embed"), scale=s_ff
+            )
+        else:
+            if c.activation != "gelu":
+                blocks["w_gate"] = PSpec((L, D, F), ("layers", "embed", "ff"), scale=s_attn)
+            blocks["w_up"] = PSpec((L, D, F), ("layers", "embed", "ff"), scale=s_attn)
+            blocks["w_down"] = PSpec((L, F, D), ("layers", "ff", "embed"), scale=s_ff)
+        return {
+            "embed": PSpec((V, D), ("vocab", "embed"), scale=1.0),
+            "blocks": blocks,
+            "final_norm": PSpec((D,), ("embed",), "zeros"),
+            "lm_head": PSpec((D, V), ("embed", "vocab"), scale=s_attn),
+        }
+
+    # ------------------------------------------------------------------
+    # block
+    # ------------------------------------------------------------------
+    def _attn(self, p, x, sin, cos, q_offset):
+        c = self.cfg
+        B, S, D = x.shape
+        dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+        h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+        q = h @ p["wq"]
+        k = h @ p["wk"]
+        v = h @ p["wv"]
+        if c.qkv_bias:
+            q = q + p["bq"].astype(q.dtype)
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+        q = q.reshape(B, S, H, dh)
+        k = k.reshape(B, S, KV, dh)
+        v = v.reshape(B, S, KV, dh)
+        if c.qk_norm:
+            q = layers.rms_norm(q, p["q_norm"], c.norm_eps)
+            k = layers.rms_norm(k, p["k_norm"], c.norm_eps)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+        o = layers.attention(
+            q, k, v,
+            window=c.window, q_offset=q_offset, impl=c.attention_impl,
+            chunk_q=c.attn_chunk_q, chunk_k=c.attn_chunk_k,
+            chunked_min_seq=c.attn_chunked_min_seq,
+        )
+        return o.reshape(B, S, H * dh) @ p["wo"], (k, v)
+
+    def _ffn(self, p, x):
+        c = self.cfg
+        h = layers.rms_norm(x, p["ln2"], c.norm_eps)
+        if c.n_experts > 0:
+            return self._moe(p, h)
+        return layers.gated_mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], c.activation)
+
+    def _moe(self, p, h):
+        if self.cfg.moe_impl == "ep" and self.cfg.spmd_hints:
+            return self._moe_ep(p, h)
+        return self._moe_gspmd(p, h)
+
+    def _moe_ep(self, p, h):
+        """Expert-parallel MoE via shard_map (§Perf hillclimb for the most
+        collective-bound cell).
+
+        Layout: tokens sharded over the batch axes; experts over "model";
+        activations replicated along "model" — so each device already holds
+        every token its local experts might need and DISPATCH NEEDS NO
+        COMMUNICATION.  Per layer the only collectives are (a) the shard_map
+        boundary all-gather of the local experts' weights over "data" (their
+        storage is 2-D sharded; ~2 GB/layer for kimi-k2) and (b) one psum of
+        the combined output over "model".  This replaces the GSPMD scatter
+        lowering that replicated the 150 GB dispatch buffer through
+        all-gather + all-reduce (see EXPERIMENTS.md §Perf)."""
+        import math as _math
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.context import current_mesh
+
+        c = self.cfg
+        mesh = current_mesh()
+        assert mesh is not None, "moe_impl=ep needs distributed.context mesh"
+        B, S, D = h.shape
+        E, K, F = c.n_experts, c.n_experts_per_token, c.d_ff
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        tp = sizes["model"]
+        ba = tuple(a for a in c.batch_axis_names if a in sizes)
+        dp = 1
+        for a in ba:
+            dp *= sizes[a]
+        assert E % tp == 0, (E, tp)
+        E_loc = E // tp
+        N_l = (B // dp if B % dp == 0 else B) * S
+        capacity = max(1, int(_math.ceil(N_l * K / E * c.moe_capacity_factor)))
+
+        def local_fn(h_l, router, wg, wu, wd):
+            # h_l [B_l,S,D]; router [D,E]; wg/wu [E_loc,D,F]; wd [E_loc,F,D]
+            col = jax.lax.axis_index("model")
+            Bl = h_l.shape[0]
+            xt = h_l.reshape(Bl * S, D)
+            n_l = xt.shape[0]
+            logits = (xt @ router).astype(jnp.float32)          # [n_l, E]
+            probs = jax.nn.softmax(logits, axis=-1)
+            gate, eidx = jax.lax.top_k(probs, K)                # [n_l, K]
+            gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+            e_rel = eidx - col * E_loc                          # [n_l, K]
+            is_local = (e_rel >= 0) & (e_rel < E_loc)
+            e_flat = jnp.clip(e_rel.reshape(-1), 0, E_loc - 1)
+            loc_flat = is_local.reshape(-1)
+            onehot = jax.nn.one_hot(e_flat, E_loc, dtype=jnp.int32)
+            onehot = onehot * loc_flat[:, None].astype(jnp.int32)
+            pos = jnp.cumsum(onehot, axis=0) * onehot
+            pos_flat = jnp.sum(pos, axis=-1) - 1
+            in_cap = loc_flat & (pos_flat >= 0) & (pos_flat < capacity)
+            pos_clip = jnp.clip(pos_flat, 0, capacity - 1)
+            w_in = in_cap.astype(xt.dtype)
+            buf = jnp.zeros((E_loc, capacity, D), xt.dtype)
+            src = jnp.repeat(xt, K, axis=0) * w_in[:, None]
+            buf = buf.at[e_flat, pos_clip].add(src)
+            ge = jnp.einsum("ecd,edf->ecf", buf, wg)
+            ue = jnp.einsum("ecd,edf->ecf", buf, wu)
+            if c.activation == "swiglu":
+                ae = jax.nn.silu(ge.astype(jnp.float32)).astype(ue.dtype)
+            else:
+                ae = jax.nn.gelu(ge.astype(jnp.float32), approximate=True).astype(ue.dtype)
+            ye = jnp.einsum("ecf,efd->ecd", ae * ue, wd)        # [E_loc,C,D]
+            out_flat = ye[e_flat, pos_clip]
+            out_flat = out_flat * (gate.reshape(-1) * w_in.astype(jnp.float32)).astype(
+                out_flat.dtype
+            )[:, None]
+            y_l = jnp.sum(out_flat.reshape(n_l, K, D), axis=1)
+            y_l = jax.lax.psum(y_l, "model")                    # combine experts
+            return y_l.reshape(Bl, S, D)
+
+        ba_spec = ba if ba else None
+        fn = jax.shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(
+                P(ba_spec, None, None),
+                P(None, None),
+                P("model", None, None),
+                P("model", None, None),
+                P("model", None, None),
+            ),
+            out_specs=P(ba_spec, None, None),
+            check_vma=False,
+        )
+        return fn(h, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+
+    def _moe_gspmd(self, p, h):
+        """Capacity-bounded top-k MoE with scatter dispatch / gather combine
+        (static shapes everywhere; experts shard over the "model" axis)."""
+        c = self.cfg
+        B, S, D = h.shape
+        E, K = c.n_experts, c.n_experts_per_token
+        N = B * S
+        capacity = max(1, int(math.ceil(N * K / E * c.moe_capacity_factor)))
+        xt = h.reshape(N, D)
+        logits = (xt @ p["router"]).astype(jnp.float32)      # [N, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, K)                 # [N, K]
+        gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+        e_flat = eidx.reshape(-1)                            # [N*K]
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) * onehot            # 1-based
+        pos_flat = jnp.sum(pos, axis=-1) - 1                 # [N*K]
+        in_cap = (pos_flat < capacity) & (pos_flat >= 0)
+        pos_clip = jnp.clip(pos_flat, 0, capacity - 1)
+
+        ba = c.batch_axis_names
+        xt_rep = jnp.repeat(xt, K, axis=0)                   # [N*K, D]
+        xt_rep = layers.shard_hint(xt_rep, (ba, "model"), c.spmd_hints)
+        w = in_cap.astype(xt.dtype)[:, None]
+        buf = jnp.zeros((E, capacity, D), xt.dtype)
+        buf = layers.shard_hint(buf, ("model", ba, None), c.spmd_hints)
+        buf = buf.at[e_flat, pos_clip].add(xt_rep * w)
+        buf = layers.shard_hint(buf, ("model", ba, None), c.spmd_hints)
+
+        ge = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+        ue = jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+        if c.activation == "swiglu":
+            ae = jax.nn.silu(ge.astype(jnp.float32)).astype(ue.dtype)
+        else:
+            ae = jax.nn.gelu(ge.astype(jnp.float32), approximate=True).astype(ue.dtype)
+        ye = jnp.einsum("ecf,efd->ecd", ae * ue, p["we_down"])  # [E, C, D]
+
+        gathered = ye[e_flat, pos_clip]                       # [N*K, D]
+        gathered = layers.shard_hint(gathered, (ba, "model"), c.spmd_hints)
+        gathered = gathered * (gate.reshape(-1)[:, None].astype(gathered.dtype) * w)
+        out = jnp.sum(gathered.reshape(N, K, D), axis=1)
+        out = layers.shard_hint(out, (ba, None), c.spmd_hints)
+        return out.reshape(B, S, D)
+
+    def _block(self, p, x, sin, cos, q_offset):
+        o, kv = self._attn(p, x, sin, cos, q_offset)
+        x = x + o
+        x = x + self._ffn(p, x)
+        return x, kv
+
+    # ------------------------------------------------------------------
+    # forward / loss
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        c = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if batch.get("embeds") is not None:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        return layers.shard_hint(x, (c.batch_axis_names, None, None), c.spmd_hints)
+
+    def hidden_states(self, params, batch, collect_kv: bool = False):
+        c = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, D = x.shape
+        positions = jnp.arange(S)
+        sin, cos = layers.rope_angles(positions, c.head_dim, c.rope_theta)
+        sin, cos = sin[None], cos[None]  # [1, S, dh/2]
+
+        def body(carry, p):
+            y, kv = self._block(p, carry, sin, cos, 0)
+            return y, (kv if collect_kv else None)
+
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, kvs
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        c = self.cfg
+        x, _ = self.hidden_states(params, batch)
+        P = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
+        x_tok = x[:, P:, :]
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if c.logits_chunk > 0:
+            return layers.chunked_cross_entropy(
+                x_tok, params["lm_head"], targets, mask, c.logits_chunk
+            )
+        logits = x_tok @ params["lm_head"]
+        return layers.cross_entropy(logits, targets, mask)
+
+    # ------------------------------------------------------------------
+    # serving: prefill + single-token decode against a KV cache
+    # ------------------------------------------------------------------
+    def cache_capacity(self, max_len: int) -> int:
+        c = self.cfg
+        return min(max_len, c.window) if c.window > 0 else max_len
+
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        c = self.cfg
+        Tc = self.cache_capacity(max_len)
+        shape = (c.n_layers, batch_size, Tc, c.n_kv_heads, c.head_dim)
+        dt = jnp.dtype(c.decode_cache_dtype)
+        if abstract:
+            return {
+                "k": jax.ShapeDtypeStruct(shape, dt),
+                "v": jax.ShapeDtypeStruct(shape, dt),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        return {
+            "k": jnp.zeros(shape, dt),
+            "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params, batch, max_len: int):
+        """Full forward over the prompt; returns last-position logits and a
+        populated cache (ring-buffered when sliding-window)."""
+        c = self.cfg
+        x, kvs = self.hidden_states(params, batch, collect_kv=True)
+        k_all, v_all = kvs  # [L, B, S, KV, dh]
+        B, S = k_all.shape[1], k_all.shape[2]
+        Tc = self.cache_capacity(max_len)
+        dt = jnp.dtype(c.decode_cache_dtype)
+        if S >= Tc:
+            k_keep = k_all[:, :, S - Tc :, :, :]
+            v_keep = v_all[:, :, S - Tc :, :, :]
+            # absolute position p lives at ring slot p % Tc
+            shift = S % Tc
+            k_cache = jnp.roll(k_keep, shift, axis=2).astype(dt)
+            v_cache = jnp.roll(v_keep, shift, axis=2).astype(dt)
+        else:
+            pad = Tc - S
+            k_cache = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dt)
+            v_cache = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dt)
+        logits = x[:, -1, :] @ params["lm_head"]
+        cache = {"k": k_cache, "v": v_cache, "pos": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """One token for the whole batch: tokens [B] -> logits [B, V]."""
+        c = self.cfg
+        pos = cache["pos"]
+        Tc = cache["k"].shape[2]
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # [B,1,D]
+        sin, cos = layers.rope_angles(pos[None], c.head_dim, c.rope_theta)
+        sin, cos = sin[None], cos[None]
+        slot = pos % Tc
+        # slot j valid if already written: j <= pos (cold) or always (warm ring)
+        valid = (jnp.arange(Tc) <= pos) | (pos >= Tc)
+
+        def body(x, xs):
+            p, k_l, v_l = xs
+            B = x.shape[0]
+            dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+            h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+            q = h @ p["wq"]
+            k = h @ p["wk"]
+            v = h @ p["wv"]
+            if c.qkv_bias:
+                q = q + p["bq"].astype(q.dtype)
+                k = k + p["bk"].astype(k.dtype)
+                v = v + p["bv"].astype(v.dtype)
+            q = q.reshape(B, 1, H, dh)
+            k = k.reshape(B, 1, KV, dh)
+            v = v.reshape(B, 1, KV, dh)
+            if c.qk_norm:
+                q = layers.rms_norm(q, p["q_norm"], c.norm_eps)
+                k = layers.rms_norm(k, p["k_norm"], c.norm_eps)
+            q = layers.apply_rope(q, sin, cos)
+            k = layers.apply_rope(k, sin, cos)
+            k_l = jax.lax.dynamic_update_slice(
+                k_l, k.astype(k_l.dtype), (0, slot, 0, 0)
+            )
+            v_l = jax.lax.dynamic_update_slice(
+                v_l, v.astype(v_l.dtype), (0, slot, 0, 0)
+            )
+            o = layers.decode_attention(q, k_l, v_l, valid)
+            x = x + o.reshape(B, 1, H * dh) @ p["wo"]
+            x = x + self._ffn(p, x)
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = x[:, 0, :] @ params["lm_head"]
+        return logits, {"k": k_new, "v": v_new, "pos": pos + 1}

@@ -1,0 +1,307 @@
+"""xLSTM LM (Beck et al., arXiv:2405.04517): mLSTM (matrix-memory) blocks with
+a few sLSTM (scalar-memory) blocks, no separate FFN (d_ff=0 — the projection
+lives inside the block).
+
+Faithfulness notes (DESIGN §5): exponential gating with the paper's log-space
+stabilizer ``m_t``; mLSTM matrix memory C ∈ R^{h×dh×dh} with normalizer n and
+denominator max(|nᵀq|, e^{-m}); sLSTM with block-diagonal recurrence R per
+head.  Simplifications (documented): the causal-conv front of the mLSTM cell
+is omitted; the sLSTM block uses a single output projection instead of the
+pf=4/3 up/down pair.  Training uses the recurrent scan (ZO is forward-only so
+no activation storage is needed); decode is the same cell at S=1 — O(1) state,
+which is why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.spec import PSpec
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # mLSTM inner dim: proj factor 2
+        self.d_inner = 2 * cfg.d_model
+        self.dh_m = self.d_inner // cfg.n_heads      # mLSTM head dim
+        self.dh_s = cfg.d_model // cfg.n_heads       # sLSTM head dim
+
+    def _is_slstm(self, layer_idx: int) -> bool:
+        return layer_idx in self.cfg.slstm_layers
+
+    # ------------------------------------------------------------------
+    def param_specs(self) -> dict:
+        c = self.cfg
+        D, Di, Nh = c.d_model, self.d_inner, c.n_heads
+        s = 1.0 / math.sqrt(D)
+        si = 1.0 / math.sqrt(Di)
+        blocks = {}
+        for l in range(c.n_layers):
+            if self._is_slstm(l):
+                blocks[f"l{l:02d}_s"] = {
+                    "ln": PSpec((D,), ("embed",), "zeros"),
+                    # gates i,f,z,o each take x and recurrent h
+                    "w_x": PSpec((D, 4 * D), ("embed", "heads"), scale=s),
+                    "r_h": PSpec((Nh, self.dh_s, 4 * self.dh_s), (None, None, None), scale=1.0 / math.sqrt(self.dh_s)),
+                    "b": PSpec((4 * D,), ("heads",), "zeros"),
+                    "w_out": PSpec((D, D), ("heads", "embed"), scale=s),
+                }
+            else:
+                blocks[f"l{l:02d}_m"] = {
+                    "ln": PSpec((D,), ("embed",), "zeros"),
+                    "w_up": PSpec((D, 2 * Di), ("embed", "heads"), scale=s),
+                    "w_q": PSpec((Di, Di), ("heads", "kv_heads"), scale=si),
+                    "w_k": PSpec((Di, Di), ("heads", "kv_heads"), scale=si),
+                    "w_v": PSpec((Di, Di), ("heads", "kv_heads"), scale=si),
+                    "w_if": PSpec((Di, 2 * Nh), ("heads", None), scale=si),
+                    "b_if": PSpec((2 * Nh,), (None,), "zeros"),
+                    "w_down": PSpec((Di, D), ("heads", "embed"), scale=si),
+                }
+        return {
+            "embed": PSpec((c.vocab_size, D), ("vocab", "embed"), scale=1.0),
+            "blocks": blocks,
+            "final_norm": PSpec((D,), ("embed",), "zeros"),
+            "lm_head": PSpec((D, c.vocab_size), ("embed", "vocab"), scale=s),
+        }
+
+    # ------------------------------------------------------------------
+    # mLSTM cell — one step (shared by train scan and decode)
+    # ------------------------------------------------------------------
+    def _mlstm_step(self, state, qkvif):
+        """state: (C [B,Nh,dh,dh], n [B,Nh,dh], m [B,Nh]) ; one timestep."""
+        C, n, m = state
+        q, k, v, it, ft = qkvif  # q,k,v [B,Nh,dh]; it,ft [B,Nh]
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)[..., None]                       # [B,Nh,1]
+        f_g = jnp.exp(ft + m - m_new)[..., None]
+        C = f_g[..., None] * C + i_g[..., None] * (v[..., :, None] * k[..., None, :])
+        n = f_g * n + i_g * k
+        num = jnp.einsum("bhij,bhj->bhi", C, q)                    # C q
+        den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, q))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        h = num / den
+        return (C, n, m_new), h
+
+    def _mlstm_chunk_scan(self, q, k, v, it, ft, state, chunk: int):
+        """Chunkwise-parallel stabilized mLSTM (§Perf hillclimb for the
+        worst-roofline cell).  The per-step stabilizer recurrence
+        m_t = max(f_t + m_{t-1}, i_t) is a max-plus scan, so within a chunk
+
+            m_j = g_j + M_j,   M_j = max(m₀, cummax_{l≤j}(i_l − g_l)),
+            g_j = Σ_{l≤j} f_l                      (cumsum, parallel)
+
+        and all gate products become closed-form exponents ≤ 0 (stable):
+            intra:  S_jl = exp(i_l − g_l − M_j)·(k_l·q_j),  l ≤ j
+            inter:  c_j  = exp(m₀ − M_j)
+            carry:  C' = exp(m₀ − M_Q)·C + Σ_j exp(i_j − g_j − M_Q)·v_j k_jᵀ.
+
+        State HBM traffic drops from O(S) read-modify-writes of the d×d
+        matrix memory to O(S/chunk); intra-chunk math is MXU matmuls."""
+        B, S, Nh, dh = q.shape
+        nc = S // chunk
+        C0, n0, m0 = state
+
+        def to_chunks(t):
+            # [B,S,...] -> [nc, B, Nh, chunk, ...]
+            t = t.reshape((B, nc, chunk) + t.shape[2:])
+            if t.ndim == 5:
+                return t.transpose(1, 0, 3, 2, 4)   # [nc,B,Nh,chunk,dh]
+            return t.transpose(1, 0, 3, 2)          # [nc,B,Nh,chunk]
+
+        qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+        ic, fc = to_chunks(it), to_chunks(ft)
+        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+        def body(carry, zs):
+            C, n, m = carry                          # [B,Nh,dh,dh],[B,Nh,dh],[B,Nh]
+            qb, kb, vb, ib, fb = zs                  # [B,Nh,Q,(dh)]
+            g = jnp.cumsum(fb, axis=-1)              # [B,Nh,Q]
+            a = ib - g                               # i_l − g_l
+            M = jnp.maximum(
+                m[..., None], jax.lax.cummax(a, axis=a.ndim - 1)
+            )                                        # [B,Nh,Q]
+            c_inter = jnp.exp(m[..., None] - M)      # ≤ 1
+            d_w = jnp.exp(a[..., None, :] - M[..., :, None])  # [B,Nh,Q(j),Q(l)]
+            scores = jnp.einsum("bhqd,bhld->bhql", qb, kb) * d_w * causal
+            num = jnp.einsum("bhql,bhli->bhqi", scores, vb)
+            num = num + c_inter[..., None] * jnp.einsum("bhij,bhqj->bhqi", C, qb)
+            nq = jnp.sum(scores, axis=-1) + c_inter * jnp.einsum(
+                "bhj,bhqj->bhq", n, qb
+            )
+            m_j = g + M
+            denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_j))[..., None]
+            h = num / denom                          # [B,Nh,Q,dh]
+            # carry update
+            M_Q = M[..., -1]
+            G = g[..., -1]
+            cg = jnp.exp(m - M_Q)[..., None]
+            w = jnp.exp(a - M_Q[..., None])          # [B,Nh,Q]
+            C_new = cg[..., None] * C + jnp.einsum("bhq,bhqi,bhqj->bhij", w, vb, kb)
+            n_new = cg * n + jnp.einsum("bhq,bhqj->bhj", w, kb)
+            m_new = G + M_Q
+            return (C_new, n_new, m_new), h
+
+        state, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+        # [nc,B,Nh,chunk,dh] -> [B,S,Nh,dh]
+        hs = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, Nh, dh)
+        return state, hs
+
+    def _mlstm_block(self, p, x, state=None):
+        """x [B,S,D] -> (y [B,S,D], new_state).  Sequential scan over S, or
+        chunkwise-parallel when cfg.mlstm_chunk divides S (exact same math —
+        tests assert equality)."""
+        c = self.cfg
+        B, S, D = x.shape
+        Nh, dh = c.n_heads, self.dh_m
+        Di = self.d_inner
+        h = layers.rms_norm(x, p["ln"], c.norm_eps)
+        up = h @ p["w_up"]
+        xc, gate = jnp.split(up, 2, axis=-1)                       # [B,S,Di] each
+        q = (xc @ p["w_q"]).reshape(B, S, Nh, dh).astype(jnp.float32)
+        k = (xc @ p["w_k"]).reshape(B, S, Nh, dh).astype(jnp.float32) / math.sqrt(dh)
+        v = (xc @ p["w_v"]).reshape(B, S, Nh, dh).astype(jnp.float32)
+        gif = (xc @ p["w_if"] + p["b_if"].astype(xc.dtype)).astype(jnp.float32)
+        it, ft = jnp.split(gif.reshape(B, S, 2 * Nh), 2, axis=-1)  # [B,S,Nh]
+        ft = jax.nn.log_sigmoid(ft)                                # log f ∈ (-inf, 0)
+
+        if state is None:
+            state = (
+                jnp.zeros((B, Nh, dh, dh), jnp.float32),
+                jnp.zeros((B, Nh, dh), jnp.float32),
+                jnp.full((B, Nh), -1e30, jnp.float32),
+            )
+        chunk = c.mlstm_chunk
+        if chunk and S > chunk and S % chunk == 0:
+            state, hs4 = self._mlstm_chunk_scan(q, k, v, it, ft, state, chunk)
+            hs = hs4.reshape(B, S, Di).astype(x.dtype)
+        else:
+            xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, it, ft))
+            state, hs = jax.lax.scan(lambda s, z: self._mlstm_step(s, z), state, xs)
+            hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, Di).astype(x.dtype)
+        out = (hs * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)) @ p["w_down"]
+        return x + out, state
+
+    # ------------------------------------------------------------------
+    # sLSTM cell
+    # ------------------------------------------------------------------
+    def _slstm_step(self, p, state, xw):
+        """state: (c, n, h, m) each [B,Nh,dh] (m is [B,Nh]); xw [B,4D] is the
+        input contribution; recurrence adds R·h_{t-1} per head."""
+        cfg = self.cfg
+        Nh, dh = cfg.n_heads, self.dh_s
+        c, n, h, m = state
+        B = c.shape[0]
+        rec = jnp.einsum("bhd,hdk->bhk", h, p["r_h"].astype(jnp.float32))  # [B,Nh,4dh]
+        z = xw.reshape(B, Nh, 4 * dh).astype(jnp.float32) + rec
+        zi, zf, zz, zo = jnp.split(z, 4, axis=-1)                   # [B,Nh,dh]
+        # per-head scalar gates from the mean pre-activation (scalar memory)
+        it = jnp.mean(zi, axis=-1)                                  # [B,Nh]
+        ft = jax.nn.log_sigmoid(jnp.mean(zf, axis=-1))
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)[..., None]
+        f_g = jnp.exp(ft + m - m_new)[..., None]
+        c_new = f_g * c + i_g * jnp.tanh(zz)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    def _slstm_block(self, p, x, state=None):
+        c = self.cfg
+        B, S, D = x.shape
+        Nh, dh = c.n_heads, self.dh_s
+        h = layers.rms_norm(x, p["ln"], c.norm_eps)
+        xw = h @ p["w_x"] + p["b"].astype(h.dtype)                  # [B,S,4D]
+        if state is None:
+            state = (
+                jnp.zeros((B, Nh, dh), jnp.float32),
+                jnp.zeros((B, Nh, dh), jnp.float32),
+                jnp.zeros((B, Nh, dh), jnp.float32),
+                jnp.full((B, Nh), -1e30, jnp.float32),
+            )
+        state = tuple(
+            layers.shard_hint(s, (c.batch_axis_names,) + (None,) * (s.ndim - 1),
+                              c.spmd_hints)
+            for s in state
+        )
+        xs = jnp.moveaxis(xw, 1, 0)
+        state, hs = jax.lax.scan(lambda s, z: self._slstm_step(p, s, z), state, xs)
+        hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+        return x + hs @ p["w_out"], state
+
+    # ------------------------------------------------------------------
+    def hidden_states(self, params, batch, states=None):
+        c = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if batch.get("embeds") is not None:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        x = layers.shard_hint(x, (c.batch_axis_names, None, None), c.spmd_hints)
+        new_states = {}
+        for l in range(c.n_layers):
+            key = f"l{l:02d}_s" if self._is_slstm(l) else f"l{l:02d}_m"
+            p = params["blocks"][key]
+            st = None if states is None else states[key]
+            if self._is_slstm(l):
+                x, st = self._slstm_block(p, x, st)
+            else:
+                x, st = self._mlstm_block(p, x, st)
+            new_states[key] = st
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, new_states
+
+    def loss_fn(self, params, batch) -> jax.Array:
+        x, _ = self.hidden_states(params, batch)
+        P = 0 if batch.get("embeds") is None else batch["embeds"].shape[1]
+        logits = x[:, P:, :] @ params["lm_head"]
+        return layers.cross_entropy(logits, batch["targets"], batch.get("mask"))
+
+    # ------------------------------------------------------------------
+    # serving — recurrent state IS the cache (O(1) in context length)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
+        c = self.cfg
+        B, Nh = batch_size, c.n_heads
+        cache: dict[str, Any] = {}
+
+        def mk(shape, fill=0.0):
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, jnp.float32)
+            return jnp.full(shape, fill, jnp.float32)
+
+        for l in range(c.n_layers):
+            if self._is_slstm(l):
+                dh = self.dh_s
+                cache[f"l{l:02d}_s"] = (
+                    mk((B, Nh, dh)), mk((B, Nh, dh)), mk((B, Nh, dh)),
+                    mk((B, Nh), -1e30),
+                )
+            else:
+                dh = self.dh_m
+                cache[f"l{l:02d}_m"] = (
+                    mk((B, Nh, dh, dh)), mk((B, Nh, dh)), mk((B, Nh), -1e30),
+                )
+        cache["pos"] = (
+            jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.zeros((), jnp.int32)
+        )
+        return cache
+
+    def prefill(self, params, batch, max_len: int):
+        x, states = self.hidden_states(params, batch)
+        logits = x[:, -1, :] @ params["lm_head"]
+        S = x.shape[1]
+        states["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, states
+
+    def decode_step(self, params, cache, tokens):
+        batch = {"tokens": tokens[:, None]}
+        pos = cache["pos"]
+        states = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_states = self.hidden_states(params, batch, states)
+        logits = x[:, 0, :] @ params["lm_head"]
+        new_states["pos"] = pos + 1
+        return logits, new_states

@@ -1,0 +1,8 @@
+from repro.optim.fo import (
+    FOTrainState,
+    Optimizer,
+    adamw,
+    build_fo_train_step,
+    init_fo_state,
+    sgd,
+)

@@ -1,0 +1,111 @@
+"""First-order baselines (the paper's "FT" rows): AdamW and SGD-momentum.
+
+Self-contained optax-style (init, update) pairs — no external dependency.
+Used by examples/compare_optimizers.py and by the pretrain-then-ZO-finetune
+integration test (ZO needs a sensible starting point to show its fine-tuning
+behaviour, exactly like the paper fine-tunes pretrained checkpoints).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def adamw(
+    lr: float = 1e-3,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, zeros)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - beta1 ** t
+        bc2 = 1.0 - beta2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = beta1 * m + (1.0 - beta1) * g
+            v = beta2 * v + (1.0 - beta2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            step_val = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_val).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new_p, state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["m"], grads
+        )
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m
+        )
+        return new_p, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FOTrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def build_fo_train_step(loss_fn, optimizer: Optimizer):
+    """Standard backprop step — the paper's FT baseline."""
+
+    def step_fn(state: FOTrainState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        return (
+            FOTrainState(new_params, new_opt, state.step + 1),
+            {"loss": loss},
+        )
+
+    return step_fn
+
+
+def init_fo_state(params, optimizer: Optimizer) -> FOTrainState:
+    return FOTrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))

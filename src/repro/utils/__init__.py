@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    leaf_paths,
+    path_str,
+    tree_size_bytes,
+    tree_num_params,
+    fold_in_path,
+    map_with_path,
+)

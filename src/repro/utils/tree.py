@@ -1,0 +1,60 @@
+"""Pytree utilities shared across the framework.
+
+Everything here is pure and jit-safe unless noted. Paths are the canonical
+way we derive per-leaf RNG streams: a leaf's random stream is a pure function
+of (base_key, leaf_path, step), which makes perturbation regeneration
+order-independent and mesh-independent (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import tree_flatten_with_path, tree_unflatten, keystr
+
+
+def leaf_paths(tree: Any) -> list[str]:
+    """Stable string path for every leaf, in registration order."""
+    flat, _ = tree_flatten_with_path(tree)
+    return [keystr(path) for path, _ in flat]
+
+
+def path_str(path) -> str:
+    return keystr(path)
+
+
+def _path_hash(path: str) -> int:
+    """Deterministic 31-bit hash of a path string (stable across processes,
+    unlike Python's salted ``hash``)."""
+    digest = hashlib.sha256(path.encode("utf-8")).digest()
+    return int.from_bytes(digest[:4], "little") & 0x7FFFFFFF
+
+
+def fold_in_path(key: jax.Array, path: str) -> jax.Array:
+    """Derive a per-leaf key from a base key and the leaf's tree path."""
+    return jax.random.fold_in(key, _path_hash(path))
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """Like ``tree_map`` but ``fn`` receives the leaf path string first."""
+    flat, treedef = tree_flatten_with_path(tree)
+    rest_leaves = [treedef.flatten_up_to(r) for r in rest]
+    out = [
+        fn(keystr(path), leaf, *(r[i] for r in rest_leaves))
+        for i, (path, leaf) in enumerate(flat)
+    ]
+    return tree_unflatten(treedef, out)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes across all array leaves (works on ShapeDtypeStruct too)."""
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_num_params(tree: Any) -> int:
+    return sum(leaf.size for leaf in jax.tree_util.tree_leaves(tree))

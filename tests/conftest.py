@@ -1,0 +1,11 @@
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benchmarks must see exactly 1 device (assignment, dry-run §0).
+# Multi-device sharding tests spawn subprocesses with their own XLA_FLAGS.
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield

@@ -1,0 +1,123 @@
+"""Distributed ZO semantics: ensemble step, straggler masking, fault plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+from repro.distributed import (
+    FailureReport,
+    Heartbeat,
+    StragglerSim,
+    apply_kappa_weights,
+    build_ensemble_zo_train_step,
+    elastic_restart_plan,
+    kappa_allreduce_bytes,
+)
+
+PARAMS = {"w": jnp.zeros((16, 12)), "b": jnp.zeros((12,))}
+
+
+def _loss(p, batch):
+    return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+
+def _batch(n=8, seed=0):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (n, 16))
+    y = jnp.tanh(x.sum(axis=1, keepdims=True)) * jnp.ones((n, 12))
+    return {"x": x, "y": y}
+
+
+def test_apply_kappa_weights_masked_mean():
+    kappas = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    eff = apply_kappa_weights(kappas, w)
+    # mean of eff must equal masked mean of kappas
+    np.testing.assert_allclose(float(jnp.mean(eff)), (1 + 3 + 4) / 3, rtol=1e-6)
+
+
+def test_ensemble_step_matches_q_probes():
+    """Distinct-seed ensemble (n members, split batch) == q-SPSA with q=n
+    when every member sees the same data — same τ streams, same update."""
+    cfg_q = ZOConfig(method="tezo", rank=4, lr=1e-2, q_probes=2, restore_mode="exact")
+    cfg_e = ZOConfig(method="tezo", rank=4, lr=1e-2)
+    batch_half = _batch(8)
+    batch_dup = {k: jnp.concatenate([v, v]) for k, v in batch_half.items()}
+
+    s_q = init_zo_state(PARAMS, cfg_q)
+    step_q = jax.jit(build_zo_train_step(_loss, cfg_q))
+    s_q2, m_q = step_q(s_q, batch_half)
+
+    s_e = init_zo_state(PARAMS, cfg_e)
+    step_e = jax.jit(build_ensemble_zo_train_step(_loss, cfg_e, n_ensemble=2))
+    s_e2, m_e = step_e(s_e, batch_dup)
+
+    np.testing.assert_allclose(
+        np.asarray(s_q2.params["w"]), np.asarray(s_e2.params["w"]), atol=1e-6
+    )
+
+
+def test_ensemble_with_stragglers_still_trains():
+    cfg = ZOConfig(method="tezo_adam", rank=4, lr=5e-3)
+    sim = StragglerSim(n_members=4, drop_prob=0.5, seed=1)
+    step = jax.jit(build_ensemble_zo_train_step(_loss, cfg, 4, sim.mask_fn()))
+    s = init_zo_state(PARAMS, cfg)
+    batch = _batch(16)
+    l0 = float(_loss(s.params, batch))
+    for _ in range(60):
+        s, m = step(s, batch)
+    l1 = float(_loss(s.params, batch))
+    assert np.isfinite(l1)
+    assert l1 < l0
+
+
+def test_straggler_mask_never_all_zero():
+    sim = StragglerSim(n_members=3, drop_prob=0.999, seed=0)
+    fn = sim.mask_fn()
+    for step in range(20):
+        mask = np.asarray(fn(jnp.asarray(step)))
+        assert mask.sum() >= 1
+
+
+def test_dropping_member_changes_update_but_not_structure():
+    cfg = ZOConfig(method="tezo", rank=4, lr=1e-2)
+    batch = _batch(8)
+    s0 = init_zo_state(PARAMS, cfg)
+    step_all = jax.jit(build_ensemble_zo_train_step(_loss, cfg, 2))
+    mask_fn = lambda step: jnp.asarray([1.0, 0.0])
+    step_drop = jax.jit(build_ensemble_zo_train_step(_loss, cfg, 2, mask_fn))
+    sa, _ = step_all(s0, batch)
+    sd, _ = step_drop(init_zo_state(PARAMS, cfg), batch)
+    assert not np.allclose(np.asarray(sa.params["w"]), np.asarray(sd.params["w"]))
+    assert np.all(np.isfinite(np.asarray(sd.params["w"])))
+
+
+def test_kappa_allreduce_bytes_is_tiny():
+    cfg = ZOConfig(method="tezo", rank=8)
+    s = init_zo_state({"w": jnp.zeros((512, 256)), "w2": jnp.zeros((4, 128, 64))}, cfg)
+    nbytes = kappa_allreduce_bytes(s.mstate, 2)
+    assert nbytes == (8 + 4 * 8) * 4  # r + L·r floats
+
+
+def test_elastic_restart_plan():
+    plan = elastic_restart_plan(FailureReport(failed_pods=(1,), n_pods=2))
+    assert plan["action"] == "restart"
+    assert plan["multi_pod"] is False
+    assert tuple(plan["mesh_shape"]) == (16, 16)
+    plan3 = elastic_restart_plan(FailureReport(failed_pods=(0,), n_pods=4))
+    assert plan3["multi_pod"] and plan3["mesh_shape"][0] == 3
+    halt = elastic_restart_plan(FailureReport(failed_pods=(0, 1), n_pods=2))
+    assert halt["action"] == "halt"
+
+
+def test_heartbeat_detects_timeouts():
+    t = [0.0]
+    hb = Heartbeat(3, timeout_s=5.0, clock=lambda: t[0])
+    t[0] = 3.0
+    hb.beat(0)
+    hb.beat(2)
+    t[0] = 7.0
+    assert hb.healthy() == [0, 2]
+    rep = hb.report(n_pods=3)
+    assert rep.failed_pods == (1,)

@@ -1,0 +1,91 @@
+"""Unit tests for the CPD perturbation machinery (repro.core.cpd)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cpd
+
+
+def _params():
+    return {
+        "w2d": jnp.zeros((24, 16)),
+        "stack": jnp.zeros((3, 12, 20)),       # scanned-layer style leaf
+        "experts": jnp.zeros((2, 4, 8, 10)),   # [L, E, m, n]
+        "bias": jnp.zeros((16,)),
+        "scalar_mat": jnp.zeros((2, 4)),       # below min_dim -> dense
+    }
+
+
+def test_is_lowrank_leaf():
+    p = _params()
+    assert cpd.is_lowrank_leaf("a", p["w2d"])
+    assert cpd.is_lowrank_leaf("b", p["stack"])
+    assert cpd.is_lowrank_leaf("c", p["experts"])
+    assert not cpd.is_lowrank_leaf("d", p["bias"])
+    assert not cpd.is_lowrank_leaf("e", p["scalar_mat"])
+
+
+def test_factor_shapes_and_rank_cap():
+    p = _params()
+    f = cpd.init_factors(p, jax.random.PRNGKey(0), default_rank=64)
+    # rank capped at min(m, n)
+    assert f["['w2d']"].u.shape == (24, 16) and f["['w2d']"].v.shape == (16, 16)
+    assert f["['stack']"].u.shape == (3, 12, 12)
+    assert f["['experts']"].u.shape == (2, 4, 8, 8)
+    assert "['bias']" not in f
+
+
+def test_tau_deterministic_and_probe_distinct():
+    p = _params()
+    f = cpd.init_factors(p, jax.random.PRNGKey(0), default_rank=8)
+    key = jax.random.PRNGKey(7)
+    t1 = cpd.sample_tau(f["['w2d']"], key, "['w2d']", probe=0)
+    t2 = cpd.sample_tau(f["['w2d']"], key, "['w2d']", probe=0)
+    t3 = cpd.sample_tau(f["['w2d']"], key, "['w2d']", probe=1)
+    np.testing.assert_array_equal(t1, t2)          # regeneration is exact
+    assert not np.allclose(t1, t3)                  # probes independent
+    assert t1.shape == (8,)
+    tb = cpd.sample_tau(f["['stack']"], key, "['stack']")
+    assert tb.shape == (3, 8)
+    # per-batch-element draws differ
+    assert not np.allclose(tb[0], tb[1])
+
+
+def test_reconstruct_matches_sum_of_outer_products():
+    key = jax.random.PRNGKey(1)
+    u = jax.random.normal(key, (6, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (5, 4))
+    tau = jax.random.normal(jax.random.fold_in(key, 2), (4,))
+    fac = cpd.CPDFactor(u=u, v=v)
+    z = cpd.reconstruct(fac, tau)
+    want = sum(tau[s] * jnp.outer(u[:, s], v[:, s]) for s in range(4))
+    np.testing.assert_allclose(z, want, rtol=1e-5)
+    z2 = cpd.reconstruct_squared(fac, tau**2)
+    want2 = sum((tau[s] ** 2) * jnp.outer(u[:, s] ** 2, v[:, s] ** 2) for s in range(4))
+    np.testing.assert_allclose(z2, want2, rtol=1e-5)
+    assert bool(jnp.all(z2 >= 0))
+
+
+def test_rank_mask_zeroes_tail_components():
+    p = {"w": jnp.zeros((3, 16, 16))}
+    mask = np.zeros((3, 8), np.float32)
+    mask[0, :2] = 1
+    mask[1, :5] = 1
+    mask[2, :8] = 1
+    f = cpd.init_factors(
+        p, jax.random.PRNGKey(0), default_rank=8, rank_masks={"['w']": mask}
+    )
+    tau = cpd.sample_tau(f["['w']"], jax.random.PRNGKey(3), "['w']")
+    assert np.all(np.asarray(tau[0, 2:]) == 0)
+    assert np.all(np.asarray(tau[1, 5:]) == 0)
+    assert np.any(np.asarray(tau[2]) != 0)
+
+
+def test_num_sampled_elements_table2():
+    """Table 2 of the paper: TeZO samples (m+n+T)r total over T steps for a
+    2-D weight; per step that's just r (u, v are init-only)."""
+    p = {"w": jnp.zeros((128, 64)), "b": jnp.zeros((7,))}
+    f = cpd.init_factors(p, jax.random.PRNGKey(0), default_rank=16)
+    n = cpd.num_sampled_elements_per_step(p, f)
+    assert n == 16 + 7  # r for the matrix + dense bias fallback

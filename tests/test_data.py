@@ -1,0 +1,66 @@
+"""Data pipeline: determinism, resume, packing, host sharding, prefetch."""
+import numpy as np
+
+from repro.data import DataConfig, Prefetcher, batch_at_step
+
+
+def test_batch_deterministic():
+    cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=64, seed=3)
+    a = batch_at_step(cfg, 7)
+    b = batch_at_step(cfg, 7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = batch_at_step(cfg, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_shapes_and_mask_semantics():
+    cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=64)
+    b = batch_at_step(cfg, 0)
+    assert b["tokens"].shape == (4, 64)
+    assert b["targets"].shape == (4, 64)
+    assert b["mask"].shape == (4, 64)
+    # next-token alignment within unmasked positions
+    assert set(np.unique(b["mask"])) <= {0.0, 1.0}
+    # some packing boundaries exist and are masked
+    assert b["mask"].mean() > 0.5
+    assert b["mask"].mean() < 1.0
+
+
+def test_host_sharding_partitions_global_batch():
+    cfg = DataConfig(seq_len=32, global_batch=8, vocab_size=64)
+    full = batch_at_step(cfg, 3, host_slice=False)
+    h0 = batch_at_step(
+        DataConfig(seq_len=32, global_batch=8, vocab_size=64, host_index=0, host_count=2), 3
+    )
+    h1 = batch_at_step(
+        DataConfig(seq_len=32, global_batch=8, vocab_size=64, host_index=1, host_count=2), 3
+    )
+    np.testing.assert_array_equal(full["tokens"][:4], h0["tokens"])
+    np.testing.assert_array_equal(full["tokens"][4:], h1["tokens"])
+
+
+def test_prefetcher_resumes_at_step():
+    cfg = DataConfig(seq_len=32, global_batch=2, vocab_size=64)
+    pf = Prefetcher(cfg, start_step=5, depth=2)
+    step, batch = next(pf)
+    pf.close()
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"], batch_at_step(cfg, 5)["tokens"])
+
+
+def test_synthetic_tasks_are_learnable_structures():
+    """Copy documents must contain their repeated prefix (signal exists)."""
+    from repro.data.pipeline import SyntheticLM
+
+    cfg = DataConfig(seq_len=32, global_batch=1, vocab_size=32)
+    src = SyntheticLM(cfg)
+    rng = np.random.default_rng(0)
+    found_copy = False
+    for _ in range(40):
+        doc = src.document(rng)
+        if 1 in doc[:-1]:
+            sep = int(np.argmax(doc == 1))
+            if sep > 1 and len(doc) > 2 * sep:
+                found_copy |= np.array_equal(doc[:sep], doc[sep + 1 : 2 * sep + 1])
+    assert found_copy

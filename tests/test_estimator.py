@@ -1,0 +1,164 @@
+"""ZO method semantics: perturb/restore identity, update rules, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ZOConfig, get_method
+from repro.core.estimator import METHODS
+
+PARAMS = {
+    "w": jnp.ones((16, 12)) * 0.1,
+    "stack": jnp.full((2, 8, 10), 0.05),
+    "b": jnp.zeros((12,)),
+}
+ALL_METHODS = sorted(METHODS)
+
+
+def _cfg(method, **kw):
+    kw.setdefault("rank", 4)
+    kw.setdefault("lazy_interval", 3)
+    return ZOConfig(method=method, **kw)
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_perturb_restore_identity(name):
+    """The Algorithm-1 chain +ρ, −2ρ, +ρ returns to the start (f32 ~exact)."""
+    cfg = _cfg(name)
+    m = get_method(name)
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    step = jnp.asarray(1, jnp.int32)
+    st = m.begin_step(st, key, step, cfg)
+    p = m.perturb(PARAMS, st, key, 0, +cfg.rho, cfg, step)
+    p = m.perturb(p, st, key, 0, -2 * cfg.rho, cfg, step)
+    p = m.perturb(p, st, key, 0, +cfg.rho, cfg, step)
+    for a, b in zip(jax.tree.leaves(PARAMS), jax.tree.leaves(p)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_perturb_actually_perturbs(name):
+    cfg = _cfg(name)
+    m = get_method(name)
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    step = jnp.asarray(0, jnp.int32)
+    st = m.begin_step(st, key, step, cfg)
+    p = m.perturb(PARAMS, st, key, 0, cfg.rho, cfg, step)
+    diffs = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(PARAMS), jax.tree.leaves(p))
+    ]
+    assert max(diffs) > 1e-6
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_update_moves_params_and_returns_state(name):
+    cfg = _cfg(name, lr=1e-2)
+    m = get_method(name)
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    step = jnp.asarray(0, jnp.int32)
+    st = m.begin_step(st, key, step, cfg)
+    kappas = jnp.asarray([2.0], jnp.float32)
+    p2, st2 = m.update(PARAMS, st, key, kappas, jnp.asarray(1e-2), cfg, step)
+    moved = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(PARAMS), jax.tree.leaves(p2))
+    ]
+    assert max(moved) > 0
+    assert jax.tree.structure(st2) == jax.tree.structure(st)
+
+
+def test_tezo_update_stays_in_uv_subspace():
+    """TeZO's update for a 2-D leaf must lie in span{u_s v_sᵀ}."""
+    cfg = _cfg("tezo", lr=1.0)
+    m = get_method("tezo")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(9)
+    step = jnp.asarray(0, jnp.int32)
+    p2, _ = m.update(PARAMS, st, key, jnp.asarray([1.0]), jnp.asarray(1.0), cfg, step)
+    delta = np.asarray(p2["w"] - PARAMS["w"])
+    fac = st["factors"]["['w']"]
+    u = np.asarray(fac.u)
+    # each column space: delta columns must lie in span(u)
+    proj = u @ np.linalg.lstsq(u, delta, rcond=None)[0]
+    np.testing.assert_allclose(proj, delta, atol=1e-4)
+
+
+def test_tezo_m_momentum_accumulates():
+    cfg = _cfg("tezo_m", beta1=0.5)
+    m = get_method("tezo_m")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    step = jnp.asarray(0, jnp.int32)
+    _, st1 = m.update(PARAMS, st, key, jnp.asarray([1.0]), jnp.asarray(0.0), cfg, step)
+    tm0 = st["tau_m"]["['w']"]
+    tm1 = st1["tau_m"]["['w']"]
+    assert float(jnp.max(jnp.abs(tm1))) > 0
+    assert np.all(np.asarray(tm0) == 0)
+
+
+def test_tezo_adam_second_moment_nonnegative():
+    cfg = _cfg("tezo_adam")
+    m = get_method("tezo_adam")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(5)
+    step = jnp.asarray(0, jnp.int32)
+    _, st1 = m.update(PARAMS, st, key, jnp.asarray([3.0]), jnp.asarray(1e-3), cfg, step)
+    for path, tv in st1["tau_v"].items():
+        assert float(jnp.min(tv)) >= 0.0, path
+
+
+def test_lozo_lazy_window():
+    """LOZO's U factor is constant within a lazy window, rotates across."""
+    from repro.core.estimator import _lozo_u
+
+    leaf = jnp.zeros((10, 8))
+    base = jax.random.PRNGKey(3)
+    u0 = _lozo_u(leaf, None, base, "p", jnp.asarray(0), 5, 4)
+    u4 = _lozo_u(leaf, None, base, "p", jnp.asarray(4), 5, 4)
+    u5 = _lozo_u(leaf, None, base, "p", jnp.asarray(5), 5, 4)
+    np.testing.assert_array_equal(u0, u4)
+    assert not np.allclose(u0, u5)
+
+
+def test_subzo_orthonormal_and_refresh():
+    cfg = _cfg("subzo")
+    m = get_method("subzo")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    u = np.asarray(st["U"]["['w']"])
+    np.testing.assert_allclose(u.T @ u, np.eye(u.shape[1]), atol=1e-5)
+    key = jax.random.PRNGKey(5)
+    st_same = m.begin_step(st, key, jnp.asarray(1, jnp.int32), cfg)  # not boundary
+    np.testing.assert_array_equal(st["U"]["['w']"], st_same["U"]["['w']"])
+    st_new = m.begin_step(st, key, jnp.asarray(3, jnp.int32), cfg)  # boundary (ν=3)
+    assert not np.allclose(st["U"]["['w']"], st_new["U"]["['w']"])
+
+
+def test_mezo_adam_state_is_full_size():
+    """MeZO-Adam stores two dense trees (the 3× memory the paper plots)."""
+    cfg = _cfg("mezo_adam")
+    m = get_method("mezo_adam")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(PARAMS))
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    assert n_state == 2 * n_params
+
+
+def test_tezo_state_is_tiny():
+    """TeZO-Adam state is r-vectors (+1-D dense fallback) — the paper's
+    memory claim in miniature."""
+    cfg = _cfg("tezo_adam", rank=4)
+    m = get_method("tezo_adam")
+    st = m.init(PARAMS, jax.random.PRNGKey(0), cfg)
+    moment_sizes = sum(
+        x.size for x in jax.tree.leaves({"m": st["tau_m"], "v": st["tau_v"]})
+    )
+    dense_sizes = sum(
+        x.size for x in jax.tree.leaves({"m": st["dense_m"], "v": st["dense_v"]})
+    )
+    # tau moments: w(4) + stack(2*4) each for m and v
+    assert moment_sizes == 2 * (4 + 8)
+    assert dense_sizes == 2 * 12  # bias only

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment: per-kernel allclose against the ref.py oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+PERTURB_SHAPES = [
+    (128, 128, 1), (256, 512, 8), (384, 128, 64), (512, 256, 3), (128, 640, 16),
+]
+
+
+@pytest.mark.parametrize("m,n,r", PERTURB_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tezo_perturb_sweep(m, n, r, dtype):
+    key = jax.random.PRNGKey(m * 1000 + n + r)
+    w = (jax.random.normal(key, (m, n), jnp.float32) * 0.1).astype(dtype)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (m, r), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, r), jnp.float32)
+    tau = jax.random.normal(jax.random.fold_in(key, 3), (r,), jnp.float32)
+    for scale in (1e-3, -2e-3):
+        got = ops.tezo_perturb(w, u, v, tau, scale)
+        want = ref.tezo_perturb_ref(w, u, v, tau, scale)
+        atol = 1e-6 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+        )
+
+
+@pytest.mark.parametrize("m,n,r", [(256, 512, 8), (128, 128, 32), (512, 384, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tezo_adam_sweep(m, n, r, dtype):
+    key = jax.random.PRNGKey(r * 7 + m)
+    w = (jax.random.normal(key, (m, n), jnp.float32) * 0.1).astype(dtype)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (m, r), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, r), jnp.float32)
+    tm = jax.random.normal(jax.random.fold_in(key, 3), (r,), jnp.float32)
+    tv = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (r,), jnp.float32))
+    got = ops.tezo_adam_update(w, u, v, tm, tv, 1e-4)
+    want = ref.tezo_adam_update_ref(w, u, v, tm, tv, 1e-4, 1e-5)
+    atol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_kernels_batched_leaves():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (3, 128, 256)) * 0.1
+    u = jax.random.normal(jax.random.fold_in(key, 1), (3, 128, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (3, 256, 8))
+    tau = jax.random.normal(jax.random.fold_in(key, 3), (3, 8))
+    got = ops.tezo_perturb(w, u, v, tau, 0.5)
+    want = jax.vmap(lambda a, b, c, d: ref.tezo_perturb_ref(a, b, c, d, 0.5))(
+        w, u, v, tau
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+FLASH_CASES = [
+    # B, S, T, H, KV, dh, window, q_offset
+    (2, 128, 128, 4, 2, 32, 0, 0),
+    (1, 256, 256, 4, 4, 64, 0, 0),
+    (2, 128, 128, 8, 1, 32, 0, 0),      # MQA
+    (1, 128, 128, 4, 2, 32, 48, 0),     # sliding window
+    (1, 64, 192, 2, 2, 32, 0, 128),     # cross-chunk offset (q after kv prefix)
+]
+
+
+@pytest.mark.parametrize("B,S,T,H,KV,dh,window,q_offset", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, T, H, KV, dh, window, q_offset, dtype):
+    key = jax.random.PRNGKey(S + T + H)
+    q = (jax.random.normal(key, (B, S, H, dh), jnp.float32) * 0.3).astype(dtype)
+    k = (
+        jax.random.normal(jax.random.fold_in(key, 1), (B, T, KV, dh), jnp.float32)
+        * 0.3
+    ).astype(dtype)
+    v = (
+        jax.random.normal(jax.random.fold_in(key, 2), (B, T, KV, dh), jnp.float32)
+        * 0.3
+    ).astype(dtype)
+    got = ops.flash_attention(q, k, v, window=window, q_offset=q_offset, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, window=window, q_offset=q_offset)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_flash_block_shapes_sweep():
+    """Different BlockSpec tilings must give identical results."""
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 256, 2, 32)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 32)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 32)) * 0.3
+    want = ref.flash_attention_ref(q, k, v)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        got = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=2e-5, err_msg=f"bq={bq} bk={bk}"
+        )
+
+
+def test_perturb_kernel_matches_model_path():
+    """The kernel must agree with the estimator's jnp perturbation so
+    attention_impl/kernel toggles never change semantics."""
+    from repro.core import cpd
+
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (128, 256)) * 0.1
+    fac_tree = cpd.init_factors({"w": w}, key, default_rank=8)
+    fac = fac_tree["['w']"]
+    tau = cpd.sample_tau(fac, jax.random.PRNGKey(5), "['w']")
+    jnp_path = w + 1e-3 * cpd.reconstruct(fac, tau)
+    kern = ops.tezo_perturb(w, fac.u, fac.v, tau, 1e-3)
+    np.testing.assert_allclose(np.asarray(jnp_path), np.asarray(kern), atol=1e-5)

@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) + Monte-Carlo validation of the paper's
+Theorem 1: unbiasedness and the closed-form variance constant δ."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ZOConfig, cpd, get_method
+from repro.core.rank import spectral_rank
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: E[(1/r)·limρ→0 ∇⁰f] = ∇f  for f(W)=⟨G,W⟩ (limit exact at any ρ)
+# ---------------------------------------------------------------------------
+def _mc_estimates(m, n, r, n_samples, seed=0):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+
+    def one(k):
+        ku, kv, kt = jax.random.split(k, 3)
+        u = jax.random.normal(ku, (m, r))
+        v = jax.random.normal(kv, (n, r))
+        tau = jax.random.normal(kt, (r,))
+        z = (u * tau[None, :]) @ v.T
+        kappa = jnp.sum(g * z)            # ⟨∇f, Z⟩ — exact SPSA limit for linear f
+        return (kappa / r) * z
+
+    keys = jax.random.split(jax.random.fold_in(key, 2), n_samples)
+    ests = jax.vmap(one)(keys)
+    return g, ests
+
+
+def test_theorem1_unbiased():
+    m, n, r = 6, 5, 3
+    g, ests = _mc_estimates(m, n, r, 200_000)
+    mean = jnp.mean(ests, axis=0)
+    # MC std of the mean ~ sqrt(δ)·|g|/sqrt(N); δ≈mn=30 ⇒ tolerance ~0.1
+    err = float(jnp.max(jnp.abs(mean - g)))
+    assert err < 0.25, err
+
+
+def test_theorem1_variance_constant():
+    """E‖(1/r)∇⁰f − ∇f‖² = δ‖∇f‖², δ = 1 + mn + 2mn/r + 6(m+n)/r + 10/r."""
+    m, n, r = 4, 3, 2
+    g, ests = _mc_estimates(m, n, r, 400_000, seed=3)
+    var = float(jnp.mean(jnp.sum((ests - g[None]) ** 2, axis=(1, 2))))
+    g2 = float(jnp.sum(g * g))
+    delta = 1 + m * n + 2 * m * n / r + 6 * (m + n) / r + 10 / r
+    ratio = var / (delta * g2)
+    # 4th-moment MC noise is heavy-tailed; 12% tolerance at 400k samples
+    assert abs(ratio - 1.0) < 0.12, (ratio, var, delta * g2)
+
+
+def test_eq8_cross_term_zero_mean():
+    """Paper Eq. 8: the cross term of Z² has zero expectation coordinatewise."""
+    m, n, r = 4, 4, 3
+    key = jax.random.PRNGKey(0)
+
+    def cross(k):
+        ku, kv, kt = jax.random.split(k, 3)
+        u = jax.random.normal(ku, (m, r))
+        v = jax.random.normal(kv, (n, r))
+        tau = jax.random.normal(kt, (r,))
+        z = (u * tau[None, :]) @ v.T
+        sep = ((u * u) * (tau**2)[None, :]) @ (v * v).T
+        return z * z - sep  # == cross term
+
+    keys = jax.random.split(key, 300_000)
+    mean_cross = jnp.mean(jax.vmap(cross)(keys), axis=0)
+    assert float(jnp.max(jnp.abs(mean_cross))) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests on system invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(8, 40),
+    n=st.integers(8, 40),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_perturb_restore_roundtrip_property(m, n, r, seed):
+    """For any shape/rank/seed: +ρ −2ρ +ρ restores params (f32)."""
+    cfg = ZOConfig(method="tezo", rank=r, rho=1e-3)
+    params = {"w": jnp.full((m, n), 0.25)}
+    meth = get_method("tezo")
+    stt = meth.init(params, jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 1)
+    step = jnp.asarray(0, jnp.int32)
+    p = meth.perturb(params, stt, key, 0, +cfg.rho, cfg, step)
+    p = meth.perturb(p, stt, key, 0, -2 * cfg.rho, cfg, step)
+    p = meth.perturb(p, stt, key, 0, +cfg.rho, cfg, step)
+    np.testing.assert_allclose(p["w"], params["w"], atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(4, 32),
+    n=st.integers(4, 32),
+    true_rank=st.integers(1, 4),
+)
+def test_spectral_rank_detects_true_rank(m, n, true_rank):
+    true_rank = min(true_rank, m, n)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((m, true_rank))
+    b = rng.standard_normal((true_rank, n))
+    w = (a @ b).astype(np.float32)
+    assert spectral_rank(w, threshold=1e-4) == true_rank
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.integers(1, 8),
+    batch=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+def test_reconstruct_linear_in_tau(r, batch, seed):
+    """Z(aτ₁+bτ₂) = a·Z(τ₁) + b·Z(τ₂) — the linearity the κτ all-reduce and
+    the τ-space momentum both rely on (DESIGN §4)."""
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (batch, 9, r))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (batch, 7, r))
+    fac = cpd.CPDFactor(u=u, v=v)
+    t1 = jax.random.normal(jax.random.fold_in(key, 2), (batch, r))
+    t2 = jax.random.normal(jax.random.fold_in(key, 3), (batch, r))
+    lhs = cpd.reconstruct(fac, 2.0 * t1 - 0.5 * t2)
+    rhs = 2.0 * cpd.reconstruct(fac, t1) - 0.5 * cpd.reconstruct(fac, t2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), q=st.integers(1, 3))
+def test_multi_probe_mean_matches_manual(seed, q):
+    """update with kappas [q] must equal the mean of single-probe updates
+    (SGD method, lr linearity)."""
+    cfg = ZOConfig(method="tezo", rank=3, lr=1.0)
+    params = {"w": jnp.zeros((10, 8))}
+    meth = get_method("tezo")
+    stt = meth.init(params, jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 5)
+    step = jnp.asarray(0, jnp.int32)
+    kappas = jnp.arange(1.0, q + 1.0)
+    p_multi, _ = meth.update(params, stt, key, kappas, jnp.asarray(1.0), cfg, step)
+    deltas = []
+    for i in range(q):
+        fac = stt["factors"]["['w']"]
+        tau = cpd.sample_tau(fac, key, "['w']", probe=i)
+        deltas.append(kappas[i] * cpd.reconstruct(fac, tau))
+    manual = -jnp.mean(jnp.stack(deltas), axis=0)
+    np.testing.assert_allclose(p_multi["w"], manual, rtol=1e-4, atol=1e-5)
