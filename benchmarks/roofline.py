@@ -3,6 +3,17 @@ and --compare two tag sets for the §Perf before/after log.
 
     PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
     PYTHONPATH=src python -m benchmarks.roofline --compare baseline=.. tag=..
+
+Kernel-dispatch comparison: ``python -m repro.launch.dryrun --kernel-mode
+both`` writes both hot-path lowerings as tagged record sets in one
+invocation; this module then reports them side by side with
+
+    PYTHONPATH=src python -m benchmarks.roofline \
+        --tag kernel-xla --compare kernel-pallas
+
+(``run()`` also auto-emits a comparison for every tag against the untagged
+baseline, and for every ``[prefix-]kernel-xla`` / ``[prefix-]kernel-pallas``
+tag pair it finds.)
 """
 from __future__ import annotations
 
@@ -11,6 +22,19 @@ import json
 from pathlib import Path
 
 from benchmarks.common import emit_csv
+
+
+def _is_kernel_tag(tag: str) -> bool:
+    """Tags written by `dryrun --kernel-mode both` — reported only by the
+    dedicated kernel-pair comparison, never as a baseline-vs-tag §Perf row."""
+    return tag.endswith("kernel-xla") or tag.endswith("kernel-pallas")
+
+
+def _interpret_note(recs: dict) -> str:
+    """Label comparisons whose records came from interpret-mode kernels."""
+    if any(r.get("kernel_interpret") for r in recs.values()):
+        return " (pallas leg = interpret-mode emulation, not Mosaic)"
+    return ""
 
 
 def load_records(directory: str, mesh: str = "single", tag: str = "") -> dict:
@@ -34,6 +58,11 @@ def table_rows(recs: dict) -> list[dict]:
             {
                 "arch": arch,
                 "shape": shape,
+                "kernel": (
+                    "pallas-interpret"
+                    if r.get("kernel_interpret")
+                    else r.get("kernel_mode", "-")
+                ),
                 "compute_s": f"{rf['compute_s']:.3e}",
                 "memory_s": f"{rf['memory_s']:.3e}",
                 "collective_s": f"{rf['collective_s']:.3e}",
@@ -79,8 +108,11 @@ def main() -> None:
     base = load_records(args.dir, args.mesh, args.tag)
     if args.compare is not None:
         new = load_records(args.dir, args.mesh, args.compare)
-        emit_csv(f"roofline_compare[{args.tag or 'baseline'} -> {args.compare}]",
-                 compare_rows(base, new))
+        note = _interpret_note(base) or _interpret_note(new)
+        emit_csv(
+            f"roofline_compare[{args.tag or 'baseline'} -> {args.compare}]{note}",
+            compare_rows(base, new),
+        )
     else:
         emit_csv(f"roofline[{args.mesh}]", table_rows(base))
 
@@ -101,10 +133,31 @@ def run() -> list[dict]:
         - {""}
     )
     for tag in tags:
+        if _is_kernel_tag(tag):
+            continue  # reported by the kernel-pair comparison below
         new = load_records("results/dryrun", "single", tag)
         cr = compare_rows(recs, new)
         if cr:
             emit_csv(f"roofline_perf_compare[baseline -> {tag}]", cr)
+    # kernel-dispatch pairs (written by dryrun --kernel-mode both)
+    for xla_tag in tags:
+        if not xla_tag.endswith("kernel-xla"):
+            continue
+        pallas_tag = xla_tag[: -len("kernel-xla")] + "kernel-pallas"
+        if pallas_tag not in tags:
+            continue
+        for mesh in ("single", "multi"):
+            pallas_recs = load_records("results/dryrun", mesh, pallas_tag)
+            cr = compare_rows(
+                load_records("results/dryrun", mesh, xla_tag), pallas_recs
+            )
+            if not cr:
+                continue
+            emit_csv(
+                f"roofline_kernel_compare[{xla_tag} -> {pallas_tag}]"
+                f"[{mesh}]{_interpret_note(pallas_recs)}",
+                cr,
+            )
     return rows
 
 

@@ -4,6 +4,12 @@ CPU analogue of the paper's H100 table: per-step time of the jitted ZO step
 on the opt-125m smoke model at two widths.  The paper's qualitative claims to
 check: low-rank methods ≈ MeZO speed (small models may be slightly slower);
 TeZO-Adam ≪ MeZO-Adam because moments live in τ-space.
+
+Kernel dispatch: each TeZO-family method is timed on BOTH hot-path lowerings
+in the same invocation — ``kernel_mode="xla"`` (dense reconstruct) and
+``kernel_mode="pallas"`` (fused kernels; on CPU these run in interpret mode,
+so the pallas column is a *semantics/plumbing* check here and only a speed
+claim on TPU).  Baselines have no kernel path and report a single xla row.
 """
 from __future__ import annotations
 
@@ -13,7 +19,8 @@ import jax.numpy as jnp
 from benchmarks.common import emit_csv, time_fn
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
-from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+from repro.core import KERNEL_METHODS, ZOConfig, build_zo_train_step, init_zo_state
+from repro.kernels.ops import is_interpret
 from repro.models import build_model
 
 METHODS = ["mezo", "mezo_m", "mezo_adam", "lozo", "subzo", "tezo", "tezo_m", "tezo_adam"]
@@ -34,20 +41,31 @@ def run() -> list[dict]:
         batch = model.make_inputs(jax.random.PRNGKey(1), shape)
         base = None
         for method in METHODS:
-            zo_cfg = ZOConfig(method=method, rank=16, lr=1e-5, lazy_interval=50)
-            state = init_zo_state(params, zo_cfg)
-            step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
-            sec = time_fn(lambda s=state, b=batch: step(s, b)[1]["loss"], iters=4)
-            if method == "mezo":
-                base = sec
-            rows.append(
-                {
-                    "model": f"{cfg.name}-x{width_mult}",
-                    "method": method,
-                    "ms_per_iter": round(sec * 1e3, 2),
-                    "vs_mezo": round(sec / base, 3) if base else 1.0,
-                }
-            )
+            modes = ("xla", "pallas") if method in KERNEL_METHODS else ("xla",)
+            for kernel_mode in modes:
+                zo_cfg = ZOConfig(
+                    method=method, kernel_mode=kernel_mode, rank=16,
+                    lr=1e-5, lazy_interval=50,
+                )
+                state = init_zo_state(params, zo_cfg)
+                step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
+                sec = time_fn(lambda s=state, b=batch: step(s, b)[1]["loss"], iters=4)
+                if method == "mezo":
+                    base = sec
+                kernel_label = (
+                    "pallas-interpret"
+                    if kernel_mode == "pallas" and is_interpret()
+                    else kernel_mode
+                )
+                rows.append(
+                    {
+                        "model": f"{cfg.name}-x{width_mult}",
+                        "method": method,
+                        "kernel": kernel_label,
+                        "ms_per_iter": round(sec * 1e3, 2),
+                        "vs_mezo": round(sec / base, 3) if base else 1.0,
+                    }
+                )
     emit_csv("table8_walltime", rows)
     return rows
 

@@ -1,7 +1,8 @@
 # The paper's primary contribution: TeZO — temporal low-rank zeroth-order
 # optimization.  cpd.py owns the CP-decomposed perturbation, estimator.py the
 # ZO methods (TeZO family + MeZO/LOZO/SubZO baselines), rank.py the Eq.(7)
-# layer-wise rank selection, zo_step.py the Algorithm-1 train step.
+# layer-wise rank selection, zo_step.py the Algorithm-1 train step,
+# dispatch.py the per-leaf Pallas-kernel vs XLA routing (ZOConfig.kernel_mode).
 from repro.core.cpd import (
     CPDFactor,
     dense_noise,
@@ -11,6 +12,13 @@ from repro.core.cpd import (
     reconstruct,
     reconstruct_squared,
     sample_tau,
+)
+from repro.core.dispatch import (
+    KERNEL_METHODS,
+    KERNEL_MODES,
+    kernel_execution,
+    resolve_kernel_mode,
+    use_pallas,
 )
 from repro.core.estimator import METHODS, ZOConfig, ZOMethod, get_method
 from repro.core.rank import leaf_spectral_ranks, select_ranks, spectral_rank

@@ -1,0 +1,176 @@
+"""Kernel-dispatch layer: route TeZO leaf ops to fused Pallas kernels or XLA.
+
+The TeZO family touches every low-rank parameter leaf four times per step
+(three Algorithm-1 perturbation passes + one τ-space optimizer update).  The
+naive XLA lowering materializes ``Z = (u·diag(τ))·vᵀ`` — a dense
+parameter-sized buffer — in HBM for each of those touches; the fused kernels
+in ``repro.kernels.tezo_perturb`` / ``tezo_adam`` keep Z (and, for Adam, the
+reconstructed moments M and V) tile-resident in VMEM so each weight leaf makes
+exactly one HBM round-trip per touch.  This module is the single place that
+decides, per leaf, which lowering runs.
+
+Dispatch rules
+--------------
+* ``kernel_mode`` (a jit-static field on :class:`repro.core.ZOConfig`):
+
+  - ``"auto"``   → ``"pallas"`` when the default JAX backend is TPU, else
+    ``"xla"``.  (The Pallas kernels *can* run anywhere via interpret mode —
+    that is the correctness/testing path, not a speed path, so CPU autos to
+    XLA.)
+  - ``"pallas"`` → force the fused kernels.  On non-TPU backends the kernel
+    wrappers in ``repro.kernels.ops`` fall back to interpret mode
+    automatically (or via ``ops.set_interpret(True)``), so this mode is
+    usable in tests on CPU.
+  - ``"xla"``    → force the dense-reconstruct jnp path everywhere.
+
+* Per-leaf eligibility: only leaves that own a CPD factor (2-D matrices and
+  leading-batched stacks of them, see ``cpd.is_lowrank_leaf``) can take the
+  kernel path; the wrappers handle leading-batch dims via vmap, rank padding
+  to MXU lanes, and tile-size selection.  Dense-fallback leaves (biases,
+  norm scales) always use the jnp path regardless of ``kernel_mode``.
+
+Numerics: with f32 factors (the default) the two paths are interchangeable —
+the add/update is computed in f32 and cast back to the weight dtype either
+way, and ``tests/test_dispatch_parity.py`` locks tight agreement end-to-end
+through a jitted train step.  With ``factor_dtype=bfloat16`` (the
+HBM-halving production setting) the XLA path deliberately rounds the dense
+``Z`` to bf16 before the add (see ``cpd.reconstruct``) while the kernels
+accumulate in f32 without materializing Z at all — the kernel path is
+strictly *tighter*, and the per-add difference is bounded by a bf16 ulp of
+``ρ·Z`` (covered at matching tolerance by the bf16 case in the parity test).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cpd import CPDFactor, reconstruct, reconstruct_squared
+from repro.kernels import ops
+
+KERNEL_MODES = ("auto", "pallas", "xla")
+
+# The methods whose perturb/update actually route through this layer; the
+# MeZO/LOZO/SubZO baselines ignore kernel_mode entirely.  Launchers and
+# benchmarks use this to avoid timing/recording a "pallas" run that never
+# touched the kernels.
+KERNEL_METHODS = ("tezo", "tezo_m", "tezo_adam")
+
+
+def add_scaled(w: jax.Array, z: jax.Array, scale) -> jax.Array:
+    """w + scale·z with the product formed in f32 before the cast back to the
+    weight dtype (keeps ρ·z resolution under bf16 params).  The single
+    source of truth for the XLA-path accumulation numerics — the Pallas
+    kernels implement the same f32-accumulate-then-cast contract in-kernel.
+    """
+    return (w.astype(jnp.float32) + scale * z.astype(jnp.float32)).astype(w.dtype)
+
+
+def resolve_kernel_mode(mode: str) -> str:
+    """Resolve a ZOConfig.kernel_mode to the concrete path ("pallas"|"xla").
+
+    Raises early (at trace/build time, not step time) on unknown modes.
+    """
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"unknown kernel_mode {mode!r}; expected one of {KERNEL_MODES}"
+        )
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def kernel_execution(method: str, mode: str) -> tuple[str, bool]:
+    """What actually executes for (method, kernel_mode): (path, interpret).
+
+    ``path`` is the hot-path lowering the method will really take — always
+    "xla" for baselines, which ignore the knob entirely.  ``interpret`` marks
+    a pallas path that runs via the interpreter (off-TPU or forced), i.e. a
+    correctness run whose timings are not fused-kernel measurements.  The
+    single definition launchers use to label records and warnings.
+    """
+    if method not in KERNEL_METHODS:
+        return "xla", False
+    resolved = resolve_kernel_mode(mode)
+    if resolved == "pallas":
+        return "pallas", bool(ops.is_interpret())
+    return resolved, False
+
+
+def use_pallas(cfg) -> bool:
+    """True iff cfg routes eligible leaves through the fused Pallas kernels.
+
+    Static at trace time: depends only on the (hashable) config and the
+    backend, never on traced values — so it never adds a lax.cond.
+    """
+    return resolve_kernel_mode(cfg.kernel_mode) == "pallas"
+
+
+def kernel_eligible(factor: CPDFactor, w: jax.Array) -> bool:
+    """Can this (factor, leaf) pair be lowered to the fused kernels?
+
+    Any leaf that owns a factor qualifies: init_factors only decorates leaves
+    with two trailing matrix dims (≥ 8 each), and the ops wrappers vmap over
+    arbitrary leading batch dims and tile any (m, n).  Kept as an explicit
+    predicate so future exotic leaves (e.g. ragged stacks) can opt out here
+    without touching the estimator.
+    """
+    return factor is not None and w.ndim >= 2
+
+
+def perturb_leaf(
+    w: jax.Array,
+    factor: CPDFactor,
+    tau: jax.Array,
+    scale,
+    *,
+    use_kernel: bool,
+) -> jax.Array:
+    """W + scale·(u·diag(τ))·vᵀ for one low-rank leaf.
+
+    Kernel path: fused HBM-resident add (Z never materialized).  XLA path:
+    dense reconstruct + f32 add (the pre-dispatch behaviour).
+    """
+    if use_kernel and kernel_eligible(factor, w):
+        return ops.tezo_perturb(w, factor.u, factor.v, tau, scale)
+    return add_scaled(w, reconstruct(factor, tau), scale)
+
+
+def sgd_update_leaf(
+    w: jax.Array,
+    factor: CPDFactor,
+    ktau: jax.Array,
+    lr,
+    *,
+    use_kernel: bool,
+) -> jax.Array:
+    """W − lr·reconstruct(ktau): the TeZO / TeZO-m descent step for one leaf.
+
+    ``ktau`` is the probe-averaged κτ (plain TeZO) or the τ-space momentum
+    (TeZO-m) — either way the update is a scaled rank-r reconstruction, so
+    the kernel path reuses the fused perturb kernel with scale = −lr.
+    """
+    if use_kernel and kernel_eligible(factor, w):
+        return ops.tezo_perturb(w, factor.u, factor.v, ktau, -lr)
+    return add_scaled(w, reconstruct(factor, ktau), -lr)
+
+
+def adam_update_leaf(
+    w: jax.Array,
+    factor: CPDFactor,
+    tau_m: jax.Array,
+    tau_v: jax.Array,
+    lr,
+    eps: float,
+    *,
+    use_kernel: bool,
+) -> jax.Array:
+    """W − lr·M/√(V+ε) with M, V reconstructed from τ-space moments (Eq. 8).
+
+    Kernel path: both reconstructions stay in VMEM (one HBM round-trip per W
+    tile instead of materializing two parameter-sized moment buffers).
+    """
+    if use_kernel and kernel_eligible(factor, w):
+        return ops.tezo_adam_update(w, factor.u, factor.v, tau_m, tau_v, lr, eps)
+    m_full = reconstruct(factor, tau_m).astype(jnp.float32)
+    v_full = reconstruct_squared(factor, tau_v).astype(jnp.float32)
+    return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr)

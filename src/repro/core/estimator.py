@@ -25,6 +25,19 @@ Implemented methods (paper §4.3 + baselines from §6):
 All state lives in a ``mstate`` dict pytree; updates are functional.  q-SPSA
 multi-probe averaging (cfg.q_probes>1) is supported for every method by
 regenerating per-probe noise inside the update — no probe buffers are stored.
+
+Kernel dispatch: the TeZO family routes every low-rank leaf's perturb and
+update through ``repro.core.dispatch``, which picks between the fused Pallas
+kernels (``kernels/tezo_perturb.py`` / ``tezo_adam.py`` — Z and the Adam
+moments stay tile-resident in VMEM, one HBM round-trip per leaf touch) and
+the dense-reconstruct XLA path.  The choice is the jit-static
+``ZOConfig.kernel_mode`` knob: ``"auto"`` (pallas on TPU, xla elsewhere),
+``"pallas"`` (force kernels; interpret mode on CPU), or ``"xla"`` (force the
+dense path).  Dense-fallback leaves (biases / norm scales) and the MeZO /
+LOZO / SubZO baselines always use the jnp path.  The two lowerings agree
+tightly for f32 factors and within bf16 rounding of ρ·Z for bf16 factors
+(the kernels accumulate in f32; the dense path rounds Z to the factor
+dtype) — ``tests/test_dispatch_parity.py`` locks both end-to-end.
 """
 from __future__ import annotations
 
@@ -34,13 +47,12 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.cpd import (
     CPDFactor,
     dense_noise,
     init_factors,
     is_lowrank_leaf,
-    reconstruct,
-    reconstruct_squared,
     sample_tau,
 )
 from repro.utils.tree import fold_in_path, map_with_path
@@ -51,6 +63,7 @@ class ZOConfig:
     """Static configuration for a ZO fine-tuning run (hashable, jit-static)."""
 
     method: str = "tezo_adam"
+    kernel_mode: str = "auto"      # auto (pallas on TPU, else xla) | pallas | xla
     rho: float = 1e-3              # perturbation rate (paper: 1e-3 everywhere)
     lr: float = 1e-6
     rank: int = 64                 # default CP rank r (rank_mode=const)
@@ -96,10 +109,9 @@ def _apply_wd(w: jax.Array, lr: jax.Array, cfg: ZOConfig) -> jax.Array:
     return (w.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay)).astype(w.dtype)
 
 
-def _add_scaled(w: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
-    """w + scale·z with the product formed in f32 before the cast back to the
-    weight dtype (keeps ρ·z resolution under bf16 params)."""
-    return (w.astype(jnp.float32) + scale * z.astype(jnp.float32)).astype(w.dtype)
+# Shared with the dispatch layer so the XLA-path accumulation numerics have
+# exactly one definition (see dispatch.add_scaled).
+_add_scaled = dispatch.add_scaled
 
 
 class ZOMethod:
@@ -160,14 +172,15 @@ class TeZO(ZOMethod):
 
     def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
         factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
 
         def f(path, w):
             if path in factors:
                 tau = sample_tau(factors[path], key_t, path, probe)
-                z = reconstruct(factors[path], tau)
-            else:
-                z = dense_noise(w, key_t, path, probe)
-            return _add_scaled(w, z, scale)
+                return dispatch.perturb_leaf(
+                    w, factors[path], tau, scale, use_kernel=use_kernel
+                )
+            return _add_scaled(w, dense_noise(w, key_t, path, probe), scale)
 
         return map_with_path(f, params)
 
@@ -181,13 +194,16 @@ class TeZO(ZOMethod):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
 
         def f(path, w):
             if path in factors:
                 ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
-                g = reconstruct(factors[path], ktau)
-            else:
-                g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.sgd_update_leaf(
+                    w, factors[path], ktau, lr, use_kernel=use_kernel
+                )
+            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
             w = _apply_wd(w, lr, cfg)
             return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
 
@@ -220,6 +236,7 @@ class TeZOMomentum(TeZO):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
         new_tau_m = dict(mstate["tau_m"])
         new_dense_m = dict(mstate["dense_m"])
 
@@ -228,14 +245,15 @@ class TeZOMomentum(TeZO):
                 ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
                 tm = cfg.beta1 * mstate["tau_m"][path] + (1.0 - cfg.beta1) * ktau
                 new_tau_m[path] = tm
-                g = reconstruct(factors[path], tm)
-            else:
-                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-                dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
-                new_dense_m[path] = dm
-                g = dm
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.sgd_update_leaf(
+                    w, factors[path], tm, lr, use_kernel=use_kernel
+                )
+            gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
+            new_dense_m[path] = dm
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+            return (w.astype(jnp.float32) - lr * dm.astype(jnp.float32)).astype(w.dtype)
 
         params = map_with_path(f, params)
         mstate = dict(mstate)
@@ -277,6 +295,7 @@ class TeZOAdam(TeZOMomentum):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
         new_tau_m = dict(mstate["tau_m"])
         new_tau_v = dict(mstate["tau_v"])
         new_dense_m = dict(mstate["dense_m"])
@@ -291,16 +310,16 @@ class TeZOAdam(TeZOMomentum):
                 tv = cfg.beta2 * mstate["tau_v"][path] + (1.0 - cfg.beta2) * k2tau2
                 new_tau_m[path] = tm
                 new_tau_v[path] = tv
-                m_full = reconstruct(fac, tm).astype(jnp.float32)
-                v_full = reconstruct_squared(fac, tv).astype(jnp.float32)
-                g = m_full * jax.lax.rsqrt(v_full + cfg.eps)
-            else:
-                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-                dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
-                dv = cfg.beta2 * mstate["dense_v"][path] + (1.0 - cfg.beta2) * gd * gd
-                new_dense_m[path] = dm
-                new_dense_v[path] = dv
-                g = dm * jax.lax.rsqrt(dv + cfg.eps)
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.adam_update_leaf(
+                    w, fac, tm, tv, lr, cfg.eps, use_kernel=use_kernel
+                )
+            gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
+            dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
+            dv = cfg.beta2 * mstate["dense_v"][path] + (1.0 - cfg.beta2) * gd * gd
+            new_dense_m[path] = dm
+            new_dense_v[path] = dv
+            g = dm * jax.lax.rsqrt(dv + cfg.eps)
             w = _apply_wd(w, lr, cfg)
             return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
 

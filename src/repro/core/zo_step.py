@@ -13,6 +13,12 @@ memory, bit-exact restore) for numerical studies.
 q-SPSA: with cfg.q_probes = q > 1 the step runs q independent ±probes and the
 optimizer consumes the κ vector — for TeZO this collapses to the r-vector
 mean_i κᵢτᵢ per leaf, i.e. ensemble variance reduction at zero memory.
+
+Kernel dispatch: ``cfg.kernel_mode`` ("auto" | "pallas" | "xla", jit-static)
+selects whether the TeZO family's perturb/update leaf ops lower to the fused
+Pallas kernels or the dense-reconstruct XLA path — see repro.core.dispatch.
+build_zo_train_step validates the mode eagerly so a typo fails at build time,
+not inside the jitted step.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.dispatch import resolve_kernel_mode
 from repro.core.estimator import ZOConfig, get_method
 
 
@@ -62,6 +69,7 @@ def build_zo_train_step(
     scalar-κ DP) — GSPMD emits one f32 all-reduce for it.
     """
     method = get_method(cfg.method)
+    resolve_kernel_mode(cfg.kernel_mode)  # fail fast on unknown modes
 
     def step_fn(state: ZOTrainState, batch: Any) -> tuple[ZOTrainState, dict]:
         key_t = jax.random.fold_in(state.base_key, state.step)

@@ -5,6 +5,18 @@ interpret mode (the kernel body executed in Python — correctness path); on
 TPU they compile to Mosaic.  Wrappers also handle rank padding (r → multiple
 of 128 for MXU lane alignment, zero-padded so the math is unchanged) and
 batched leaves via vmap.
+
+These wrappers are the *production* hot path, not just a test surface: the
+TeZO family in ``repro.core.estimator`` routes every low-rank leaf's perturb
+and τ-space update through ``repro.core.dispatch``, which calls
+``tezo_perturb`` / ``tezo_adam_update`` here whenever ``ZOConfig.kernel_mode``
+resolves to "pallas" (default on TPU; force with kernel_mode="pallas", which
+on CPU runs these kernels in interpret mode — or pin it with
+``set_interpret``).  Dispatch rules: only leaves with a CPD factor (trailing
+2-D matrix dims, optionally leading-batched — vmap'd here) take the kernel
+path; everything else (biases, norm scales, dense baselines) stays on the
+jnp path.  ``input_output_aliases`` inside the kernels keeps the three
+Algorithm-1 perturbation passes in-place in HBM.
 """
 from __future__ import annotations
 
@@ -29,7 +41,18 @@ def set_interpret(value: bool | None) -> None:
 def _interpret() -> bool:
     if _FORCE_INTERPRET is not None:
         return _FORCE_INTERPRET
-    return jax.default_backend() == "cpu"
+    # Mosaic lowering exists only on TPU; every other backend (cpu, gpu)
+    # gets the interpret path so kernel_mode="pallas" stays usable anywhere.
+    return jax.default_backend() != "tpu"
+
+
+def is_interpret() -> bool:
+    """Will these kernels run in interpret mode (emulation, not Mosaic)?
+
+    Public query for launchers/benchmarks that need to label or warn about
+    interpret-mode results — True off-TPU or when forced via set_interpret.
+    """
+    return _interpret()
 
 
 def _pad_rank(u, v, *taus, multiple: int = 128):

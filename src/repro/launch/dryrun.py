@@ -25,7 +25,13 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, runnable_cells
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+from repro.core import (
+    KERNEL_METHODS,
+    ZOConfig,
+    build_zo_train_step,
+    init_zo_state,
+    kernel_execution,
+)
 from repro.distributed.sharding import (
     batch_axes,
     batch_shardings,
@@ -110,6 +116,7 @@ def run_cell(
     overrides: dict | None = None,
     verbose: bool = True,
     save_hlo: bool = False,
+    kernel_mode: str = "auto",
 ) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     from repro.distributed.context import set_current_mesh
@@ -142,7 +149,18 @@ def run_cell(
 
     t0 = time.time()
     if shape.kind == "train":
-        zo_cfg = ZOConfig(method=method, rank=rank, factor_dtype=jnp.bfloat16)
+        if method in KERNEL_METHODS:
+            # only TeZO-family train cells actually route through the
+            # kernels; mark interpret-mode pallas legs (off-TPU emulation,
+            # not Mosaic) so the roofline numbers aren't misread
+            resolved, interp = kernel_execution(method, kernel_mode)
+            record["kernel_mode"] = resolved
+            if resolved == "pallas":
+                record["kernel_interpret"] = interp
+        zo_cfg = ZOConfig(
+            method=method, kernel_mode=kernel_mode, rank=rank,
+            factor_dtype=jnp.bfloat16,
+        )
         state_abs = jax.eval_shape(
             lambda p: init_zo_state(p, zo_cfg), model.abstract_params()
         )
@@ -257,6 +275,16 @@ def main() -> None:
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--method", default="tezo_adam")
+    ap.add_argument(
+        "--kernel-mode", default="auto",
+        choices=["auto", "pallas", "xla", "both"],
+        help="TeZO hot-path lowering for train cells; 'both' runs each train "
+        "cell twice (prefill/decode cells never touch the ZO step and run "
+        "once), tagging records [TAG-]kernel-xla / [TAG-]kernel-pallas so "
+        "`benchmarks.roofline --tag [TAG-]kernel-xla --compare "
+        "[TAG-]kernel-pallas` reports the two paths from this one "
+        "invocation (the exact command is printed at the end)",
+    )
     ap.add_argument("--rank", type=int, default=64)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
@@ -291,27 +319,68 @@ def main() -> None:
             ov["batch_axis_names"] = ("data", "model")
         return ov
 
+    if args.kernel_mode == "both" and args.method not in KERNEL_METHODS:
+        # baseline methods never touch the kernels: both legs would be
+        # identical XLA runs, so don't fabricate a kernel comparison
+        print(
+            f"[dryrun] --kernel-mode both ignored: method {args.method!r} "
+            "has no kernel path (TeZO family only); running once",
+            flush=True,
+        )
+        kernel_runs = [("xla", args.tag)]
+    elif args.kernel_mode == "both":
+        # one invocation → two tagged record sets for benchmarks.roofline
+        prefix = args.tag + "-" if args.tag else ""
+        kernel_runs = [
+            ("xla", prefix + "kernel-xla"),
+            ("pallas", prefix + "kernel-pallas"),
+        ]
+    else:
+        kernel_runs = [(args.kernel_mode, args.tag)]
+
     failures = []
+    n_cells = 0
     for arch, shape in cells:
+        # kernel_mode only reaches the ZO train step; prefill/decode cells
+        # are identical under both lowerings, so run them once — under the
+        # base tag, so they stay visible to the baseline roofline tables.
+        if SHAPES[shape].kind == "train":
+            runs = kernel_runs
+        else:
+            runs = [(kernel_runs[0][0], args.tag)]
         for mp in meshes:
-            try:
-                run_cell(
-                    arch, shape, mp,
-                    method=args.method, rank=args.rank,
-                    out_dir=args.out, tag=args.tag, save_hlo=args.save_hlo,
-                    overrides=preset_overrides(arch, shape),
-                )
-                jax.clear_caches()
-            except Exception as e:
-                failures.append((arch, shape, mp, repr(e)))
-                print(f"[dryrun] FAIL {arch} {shape} mp={mp}: {e}", flush=True)
-                traceback.print_exc()
-                if not args.continue_on_error:
-                    raise
+            for kmode, tag in runs:
+                try:
+                    run_cell(
+                        arch, shape, mp,
+                        method=args.method, rank=args.rank,
+                        out_dir=args.out, tag=tag, save_hlo=args.save_hlo,
+                        overrides=preset_overrides(arch, shape),
+                        kernel_mode=kmode,
+                    )
+                    n_cells += 1
+                    jax.clear_caches()
+                except Exception as e:
+                    failures.append((arch, shape, mp, kmode, repr(e)))
+                    print(
+                        f"[dryrun] FAIL {arch} {shape} mp={mp} kernel={kmode}: {e}",
+                        flush=True,
+                    )
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        raise
     if failures:
         print(f"[dryrun] {len(failures)} failures")
         raise SystemExit(1)
-    print(f"[dryrun] all {len(cells) * len(meshes)} cells OK")
+    print(f"[dryrun] all {n_cells} cells OK")
+    if len(kernel_runs) == 2:
+        mesh_hint = "multi" if args.mesh == "multi" else "single"
+        print(
+            "[dryrun] compare the two lowerings with: "
+            f"python -m benchmarks.roofline --dir {args.out} "
+            f"--mesh {mesh_hint} "
+            f"--tag {kernel_runs[0][1]} --compare {kernel_runs[1][1]}"
+        )
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ import numpy as np
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
 from repro.core import ZOConfig, ZOTrainState, build_zo_train_step, init_zo_state
+from repro.core import kernel_execution
 from repro.core.rank import select_ranks
 from repro.data import DataConfig, Prefetcher, batch_at_step
 from repro.distributed import (
@@ -43,6 +44,7 @@ def train(
     arch: str = "opt-125m",
     smoke: bool = False,
     method: str = "tezo_adam",
+    kernel_mode: str = "auto",
     steps: int = 300,
     seq_len: int = 128,
     global_batch: int = 8,
@@ -73,9 +75,18 @@ def train(
     )
 
     zo_cfg = ZOConfig(
-        method=method, lr=lr, rho=rho, rank=rank, rank_mode=rank_mode,
-        q_probes=q_probes, seed=seed, total_steps=steps,
+        method=method, kernel_mode=kernel_mode, lr=lr, rho=rho, rank=rank,
+        rank_mode=rank_mode, q_probes=q_probes, seed=seed, total_steps=steps,
     )
+    # baselines ignore the knob: report what will actually execute
+    resolved_kernel, kernel_interpret = kernel_execution(method, kernel_mode)
+    if kernel_interpret and verbose:
+        print(
+            "[train] warning: kernel_mode=pallas is running in interpret mode "
+            "(no Mosaic on this backend) — correct but slow; walltime is not "
+            "a fused-kernel measurement",
+            flush=True,
+        )
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
 
@@ -173,6 +184,8 @@ def train(
     result = {
         "arch": cfg.name,
         "method": method,
+        "kernel_mode": resolved_kernel,
+        "kernel_interpret": kernel_interpret,
         "steps": steps,
         "final_eval_loss": final_eval,
         "history": history,
@@ -189,6 +202,11 @@ def main() -> None:
     ap.add_argument("--arch", default="opt-125m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--method", default="tezo_adam")
+    ap.add_argument(
+        "--kernel-mode", default="auto", choices=["auto", "pallas", "xla"],
+        help="fused Pallas kernels vs dense XLA for the TeZO hot path "
+        "(auto: pallas on TPU, xla elsewhere)",
+    )
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--global-batch", type=int, default=8)

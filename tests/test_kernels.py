@@ -56,6 +56,32 @@ def test_tezo_adam_sweep(m, n, r, dtype):
     )
 
 
+def test_rank_padding_matches_unpadded():
+    """The MXU rank-padding path (r → multiple of 128, zero-padded) is only
+    taken on real TPU, so exercise _pad_rank explicitly against the
+    unpadded oracle: zero-padded τ components must contribute nothing to
+    either kernel (including tezo_adam's V, where padded τ_V entries are 0
+    and the matching M rows are 0, so g is 0 there too)."""
+    key = jax.random.PRNGKey(11)
+    m, n, r = 128, 256, 24
+    w = jax.random.normal(key, (m, n), jnp.float32) * 0.1
+    u = jax.random.normal(jax.random.fold_in(key, 1), (m, r), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, r), jnp.float32)
+    tau = jax.random.normal(jax.random.fold_in(key, 3), (r,), jnp.float32)
+    tv = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (r,), jnp.float32))
+
+    u_p, v_p, tau_p = ops._pad_rank(u, v, tau)
+    assert u_p.shape[-1] == 128 and tau_p.shape[-1] == 128
+    got = ops.tezo_perturb(w, u_p, v_p, tau_p, 1e-3, pad_rank=False)
+    want = ref.tezo_perturb_ref(w, u, v, tau, 1e-3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    u_p, v_p, tm_p, tv_p = ops._pad_rank(u, v, tau, tv)
+    got = ops.tezo_adam_update(w, u_p, v_p, tm_p, tv_p, 1e-4, pad_rank=False)
+    want = ref.tezo_adam_update_ref(w, u, v, tau, tv, 1e-4, 1e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 def test_kernels_batched_leaves():
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (3, 128, 256)) * 0.1

@@ -1,0 +1,110 @@
+"""Restore-drift regression for the in-place Algorithm-1 perturbation chain.
+
+``restore_mode="inplace"`` restores weights by algebra (+ρ, −2ρ, +ρ) with a
+cast back to the weight dtype after every add, so under bf16 params each
+step leaves ≤ a few ulp of drift.  This locks an explicit bound on that
+drift over 50 steps for the fused kernel path, and checks the two escape
+hatches: f32 params drift at f32-epsilon scale, and ``restore_mode="exact"``
+is bit-exact (it branches the ±ρ copies off the originals instead of
+chaining).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ZOConfig, build_zo_train_step, get_method, init_zo_state
+from repro.kernels import ops
+
+N_STEPS = 50
+# Explicit bound: the chain performs 3 casts/step; each rounds at ~half a
+# bf16 ulp (2^-9 relative) of the running weight magnitude (|w| ≲ 0.5 here),
+# and the errors accumulate as a bounded random walk.  Measured drift for
+# this seed is ~0.02; 0.06 gives 3× headroom without masking a real
+# regression (a lost perturbation term would show up at ρ·|z| ≈ 0.5/step).
+BF16_DRIFT_BOUND = 0.06
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _params(dtype):
+    k = jax.random.PRNGKey(2)
+    return {
+        "w": (jax.random.normal(jax.random.fold_in(k, 0), (32, 48)) * 0.1).astype(dtype),
+        "stack": (jax.random.normal(jax.random.fold_in(k, 1), (2, 16, 16)) * 0.1).astype(dtype),
+        "b": jnp.zeros((8,), dtype),
+    }
+
+
+def _run_chain(params, kernel_mode, n_steps=N_STEPS):
+    cfg = ZOConfig(method="tezo", rank=8, rho=1e-3, kernel_mode=kernel_mode,
+                   restore_mode="inplace")
+    m = get_method("tezo")
+    st = m.init(params, jax.random.PRNGKey(0), cfg)
+
+    @jax.jit
+    def chain(p, key_t):
+        step = jnp.zeros((), jnp.int32)
+        p = m.perturb(p, st, key_t, 0, +cfg.rho, cfg, step)
+        p = m.perturb(p, st, key_t, 0, -2.0 * cfg.rho, cfg, step)
+        p = m.perturb(p, st, key_t, 0, +cfg.rho, cfg, step)
+        return p
+
+    base = jax.random.PRNGKey(42)
+    p = params
+    for s in range(n_steps):
+        p = chain(p, jax.random.fold_in(base, s))
+    return p
+
+
+def _max_drift(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_bf16_inplace_drift_bounded_kernel_path():
+    params = _params(jnp.bfloat16)
+    restored = _run_chain(params, "pallas")
+    drift = _max_drift(params, restored)
+    assert 0.0 < drift <= BF16_DRIFT_BOUND, drift
+
+
+def test_bf16_inplace_drift_matches_xla_path():
+    """The kernel path must not drift any differently than the dense path —
+    both perform the same f32-add + bf16-cast per pass."""
+    params = _params(jnp.bfloat16)
+    d_pallas = _max_drift(params, _run_chain(params, "pallas"))
+    d_xla = _max_drift(params, _run_chain(params, "xla"))
+    assert d_pallas <= 2.0 * d_xla + 1e-6, (d_pallas, d_xla)
+
+
+def test_f32_inplace_drift_is_epsilon_scale():
+    params = _params(jnp.float32)
+    drift = _max_drift(params, _run_chain(params, "pallas"))
+    assert drift <= 1e-5, drift
+
+
+def test_exact_restore_mode_is_bit_exact():
+    """restore_mode="exact" with lr=0 must return bit-identical bf16 params
+    through a full jitted train step on the kernel path: perturbed copies
+    branch off the originals and a zero-lr update is an exact f32 round-trip."""
+    params = _params(jnp.bfloat16)
+    cfg = ZOConfig(method="tezo", rank=8, rho=1e-3, lr=0.0,
+                   kernel_mode="pallas", restore_mode="exact")
+    state = init_zo_state(params, cfg)
+
+    def loss_fn(p, batch):
+        return sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(p))
+
+    step = jax.jit(build_zo_train_step(loss_fn, cfg))
+    for _ in range(3):
+        state, _ = step(state, None)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
