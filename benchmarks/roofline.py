@@ -6,7 +6,9 @@ and --compare two tag sets for the §Perf before/after log.
 
 Kernel-dispatch comparison: ``python -m repro.launch.dryrun --kernel-mode
 both`` writes both hot-path lowerings as tagged record sets in one
-invocation; this module then reports them side by side with
+invocation — for any of the nine ZO methods, baselines included, since the
+dispatch layer covers them all — and this module then reports them side by
+side with
 
     PYTHONPATH=src python -m benchmarks.roofline \
         --tag kernel-xla --compare kernel-pallas

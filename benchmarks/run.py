@@ -4,6 +4,9 @@
     PYTHONPATH=src python -m benchmarks.run --only table2,table7
 
 Output contract: CSV blocks on stdout (one per table; benchmarks/common.py).
+The table8 bench additionally writes ``results/BENCH_kernels.json`` — the
+machine-readable per-(method × kernel-mode) walltime + bytes-moved record
+used to track the fused-kernel perf trajectory across PRs.
 """
 from __future__ import annotations
 

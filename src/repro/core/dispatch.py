@@ -1,13 +1,19 @@
-"""Kernel-dispatch layer: route TeZO leaf ops to fused Pallas kernels or XLA.
+"""Kernel-dispatch layer: route every ZO method's leaf ops to Pallas or XLA.
 
-The TeZO family touches every low-rank parameter leaf four times per step
-(three Algorithm-1 perturbation passes + one τ-space optimizer update).  The
-naive XLA lowering materializes ``Z = (u·diag(τ))·vᵀ`` — a dense
-parameter-sized buffer — in HBM for each of those touches; the fused kernels
-in ``repro.kernels.tezo_perturb`` / ``tezo_adam`` keep Z (and, for Adam, the
-reconstructed moments M and V) tile-resident in VMEM so each weight leaf makes
-exactly one HBM round-trip per touch.  This module is the single place that
-decides, per leaf, which lowering runs.
+Every ZO method touches every parameter leaf four times per step (three
+Algorithm-1 perturbation passes + one optimizer update).  The naive XLA
+lowering materializes the perturbation ``Z`` — a dense parameter-sized
+buffer — in HBM for each of those touches; the fused kernels in
+``repro.kernels`` keep Z (and any reconstructed moments) tile-resident in
+VMEM so each weight leaf makes exactly one HBM round-trip per touch.  This
+module is the single place that decides, per leaf, which lowering runs —
+for *all nine* methods in ``estimator.METHODS``:
+
+  TeZO family   Z = Σ_s τ_s(u_s∘v_s)   → kernels.tezo_perturb / tezo_adam
+  MeZO family   Z ~ N(0, I_d) dense    → kernels.zo_noise (on-chip counter
+                PRNG; q-probe mean and the dense m/v moment updates fused)
+  LOZO (+m)     Z = U·Vᵀ               → tezo tiling with τ ≡ 1
+  SubZO         Z = U·Σ·Vᵀ             → zo_noise.subzo_perturb (Σ core)
 
 Dispatch rules
 --------------
@@ -23,37 +29,56 @@ Dispatch rules
     usable in tests on CPU.
   - ``"xla"``    → force the dense-reconstruct jnp path everywhere.
 
-* Per-leaf eligibility: only leaves that own a CPD factor (2-D matrices and
-  leading-batched stacks of them, see ``cpd.is_lowrank_leaf``) can take the
-  kernel path; the wrappers handle leading-batch dims via vmap, rank padding
-  to MXU lanes, and tile-size selection.  Dense-fallback leaves (biases,
-  norm scales) always use the jnp path regardless of ``kernel_mode``.
+* Per-leaf eligibility: leaves with two trailing matrix dims (≥ 8 each,
+  the same predicate that assigns CPD factors — see ``cpd.is_lowrank_leaf``)
+  can take a kernel path; the ops wrappers vmap over leading batch dims,
+  pad rank to MXU lanes, and pad awkward (m, n) to the tile multiple.
+  Biases / norm scales (ndim < 2 or a tiny dim) always use the jnp path
+  regardless of ``kernel_mode`` — for every method, so the noise stream a
+  leaf sees is a function of eligibility only, never of the method.
 
-Numerics: with f32 factors (the default) the two paths are interchangeable —
-the add/update is computed in f32 and cast back to the weight dtype either
-way, and ``tests/test_dispatch_parity.py`` locks tight agreement end-to-end
-through a jitted train step.  With ``factor_dtype=bfloat16`` (the
-HBM-halving production setting) the XLA path deliberately rounds the dense
-``Z`` to bf16 before the add (see ``cpd.reconstruct``) while the kernels
-accumulate in f32 without materializing Z at all — the kernel path is
-strictly *tighter*, and the per-add difference is bounded by a bf16 ulp of
-``ρ·Z`` (covered at matching tolerance by the bf16 case in the parity test).
+Numerics
+--------
+Factor-carried methods (TeZO/LOZO/SubZO): the factors come from HBM either
+way, so the two lowerings agree tightly for f32 factors and within bf16
+rounding of ρ·Z for bf16 factors (the kernels accumulate in f32; the dense
+path rounds Z to the factor dtype) — ``tests/test_dispatch_parity.py`` locks
+both end-to-end.
+
+MeZO / dense-noise leaves: the kernel path generates z on-chip from a
+counter-based Threefry stream (see ``kernels/zo_noise.py``) which is a
+*different* N(0,1) stream than the XLA path's ``jax.random.normal`` — so
+pallas-vs-xla parity here is *statistical* (moments/covariance) plus exact
+three-pass self-consistency within each mode; it is NOT bitwise across
+modes, and switching ``kernel_mode`` mid-run changes the noise realization
+(never the distribution).  The kernel math itself is still locked bitwise
+against the replayed-stream oracles in ``kernels/ref.py``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cpd import CPDFactor, reconstruct, reconstruct_squared
+from repro.core.cpd import (
+    CPDFactor,
+    dense_noise,
+    is_lowrank_leaf,
+    reconstruct,
+    reconstruct_squared,
+)
 from repro.kernels import ops
+from repro.kernels.zo_noise import MAX_ROWS
 
 KERNEL_MODES = ("auto", "pallas", "xla")
 
-# The methods whose perturb/update actually route through this layer; the
-# MeZO/LOZO/SubZO baselines ignore kernel_mode entirely.  Launchers and
-# benchmarks use this to avoid timing/recording a "pallas" run that never
-# touched the kernels.
-KERNEL_METHODS = ("tezo", "tezo_m", "tezo_adam")
+# Every method routes its perturb/update through this layer now; kept as the
+# explicit source of truth for launchers/benchmarks (and so a hypothetical
+# kernel-less method can be registered without touching them).
+KERNEL_METHODS = (
+    "tezo", "tezo_m", "tezo_adam",
+    "mezo", "mezo_m", "mezo_adam",
+    "lozo", "lozo_m", "subzo",
+)
 
 
 def add_scaled(w: jax.Array, z: jax.Array, scale) -> jax.Array:
@@ -82,11 +107,13 @@ def resolve_kernel_mode(mode: str) -> str:
 def kernel_execution(method: str, mode: str) -> tuple[str, bool]:
     """What actually executes for (method, kernel_mode): (path, interpret).
 
-    ``path`` is the hot-path lowering the method will really take — always
-    "xla" for baselines, which ignore the knob entirely.  ``interpret`` marks
-    a pallas path that runs via the interpreter (off-TPU or forced), i.e. a
-    correctness run whose timings are not fused-kernel measurements.  The
-    single definition launchers use to label records and warnings.
+    ``path`` is the hot-path lowering the method will really take — "pallas"
+    for every registered method when the mode resolves there (universal
+    coverage), "xla" otherwise or for unregistered/FO methods.
+    ``interpret`` marks a pallas path that runs via the interpreter (off-TPU
+    or forced), i.e. a correctness run whose timings are not fused-kernel
+    measurements.  The single definition launchers use to label records and
+    warnings.
     """
     if method not in KERNEL_METHODS:
         return "xla", False
@@ -106,7 +133,7 @@ def use_pallas(cfg) -> bool:
 
 
 def kernel_eligible(factor: CPDFactor, w: jax.Array) -> bool:
-    """Can this (factor, leaf) pair be lowered to the fused kernels?
+    """Can this (factor, leaf) pair be lowered to the fused TeZO kernels?
 
     Any leaf that owns a factor qualifies: init_factors only decorates leaves
     with two trailing matrix dims (≥ 8 each), and the ops wrappers vmap over
@@ -115,6 +142,22 @@ def kernel_eligible(factor: CPDFactor, w: jax.Array) -> bool:
     without touching the estimator.
     """
     return factor is not None and w.ndim >= 2
+
+
+def noise_kernel_eligible(w: jax.Array) -> bool:
+    """Can this leaf's dense N(0,1) perturbation run on the noise kernels?
+
+    Mirrors ``cpd.is_lowrank_leaf`` (two trailing matrix dims ≥ 8) plus the
+    counter-layout row bound, so a leaf's eligibility — and therefore its
+    noise stream — is identical across perturb and update and across every
+    method that touches it.
+    """
+    return is_lowrank_leaf("", w) and w.shape[-2] < MAX_ROWS
+
+
+# ---------------------------------------------------------------------------
+# TeZO family leaf ops (factors from HBM, τ from the step key)
+# ---------------------------------------------------------------------------
 
 
 def perturb_leaf(
@@ -174,3 +217,118 @@ def adam_update_leaf(
     m_full = reconstruct(factor, tau_m).astype(jnp.float32)
     v_full = reconstruct_squared(factor, tau_v).astype(jnp.float32)
     return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr)
+
+
+# ---------------------------------------------------------------------------
+# Dense-noise leaf ops (MeZO family + every method's dense-fallback leaves)
+# ---------------------------------------------------------------------------
+
+
+def _noise_probe_mean(w, key_t, path: str, kappas) -> jax.Array:
+    """mean_i κ_i·z_i for one leaf on the XLA path, regenerating z per probe.
+
+    The z draws round to the leaf dtype first (jax.random.normal semantics
+    of ``cpd.dense_noise``), matching the perturb pass exactly.
+    """
+    q = kappas.shape[0]
+    acc = jnp.zeros(w.shape, jnp.float32)
+    for i in range(q):
+        acc = acc + kappas[i] * dense_noise(w, key_t, path, i).astype(jnp.float32)
+    return acc / q
+
+
+def noise_perturb_leaf(
+    w: jax.Array, key_t, path: str, probe: int, scale, *, use_kernel: bool
+) -> jax.Array:
+    """W + scale·z, z ~ N(0, I) — MeZO semantics for one leaf.
+
+    Kernel path: z generated on-chip per tile (counter PRNG), one HBM
+    round-trip.  XLA path: ``jax.random.normal`` dense buffer + f32 add.
+    The two streams differ (statistical parity only) but each is a pure
+    function of (key_t, path, probe), so all three Algorithm-1 passes and
+    the update replay the same z within a mode.
+    """
+    if use_kernel and noise_kernel_eligible(w):
+        return ops.noise_perturb(w, ops.leaf_seed(key_t, path), scale, probe=probe)
+    return add_scaled(w, dense_noise(w, key_t, path, probe), scale)
+
+
+def noise_sgd_update_leaf(
+    w: jax.Array, key_t, path: str, kappas, lr, *, use_kernel: bool
+) -> jax.Array:
+    """W − lr·(mean_i κ_i z_i): the MeZO descent step for one leaf, probe
+    mean fused in-kernel on the pallas path."""
+    if use_kernel and noise_kernel_eligible(w):
+        return ops.noise_update_sgd(w, ops.leaf_seed(key_t, path), kappas, lr)
+    g = _noise_probe_mean(w, key_t, path, kappas)
+    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+
+def noise_momentum_update_leaf(
+    w: jax.Array, m_buf, key_t, path: str, kappas, lr, beta1, *, use_kernel: bool
+):
+    """Dense momentum step for one leaf: M ← β₁M + (1−β₁)g; W ← W − lr·M.
+
+    Returns (w', m').  Kernel path fuses the probe mean, the moment update
+    and the weight update into one pass over (W, M)."""
+    if use_kernel and noise_kernel_eligible(w):
+        return ops.noise_update_momentum(
+            w, m_buf, ops.leaf_seed(key_t, path), kappas, lr, beta1
+        )
+    g = _noise_probe_mean(w, key_t, path, kappas)
+    m_new = beta1 * m_buf + (1.0 - beta1) * g
+    return (w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
+
+
+def noise_adam_update_leaf(
+    w: jax.Array, m_buf, v_buf, key_t, path: str, kappas, lr,
+    beta1, beta2, eps, *, use_kernel: bool,
+):
+    """Dense Adam step for one leaf; returns (w', m', v').  Kernel path
+    makes one HBM round-trip per buffer instead of materializing g."""
+    if use_kernel and noise_kernel_eligible(w):
+        return ops.noise_update_adam(
+            w, m_buf, v_buf, ops.leaf_seed(key_t, path), kappas,
+            lr, beta1, beta2, eps,
+        )
+    g = _noise_probe_mean(w, key_t, path, kappas)
+    m_new = beta1 * m_buf + (1.0 - beta1) * g
+    v_new = beta2 * v_buf + (1.0 - beta2) * g * g
+    upd = m_new * jax.lax.rsqrt(v_new + eps)
+    return (w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# LOZO / SubZO leaf ops (factors from HBM, like TeZO — parity is bitwise-ish)
+# ---------------------------------------------------------------------------
+
+
+def lozo_perturb_leaf(w: jax.Array, u, v, scale, *, use_kernel: bool) -> jax.Array:
+    """W + scale·U·Vᵀ (LOZO).  Kernel path reuses the tezo tiling (τ ≡ 1)."""
+    if use_kernel and w.ndim >= 2:
+        return ops.lozo_perturb(w, u, v, scale)
+    return add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v), scale)
+
+
+def lozo_update_leaf(w: jax.Array, u, kv, lr, *, use_kernel: bool) -> jax.Array:
+    """W − lr·U·(kv)ᵀ where ``kv`` is the probe-averaged κ·V (or the LOZO-m
+    factored momentum) — the whole gradient signal lives in the [n, r]
+    factor, so the update is one fused rank-r pass."""
+    return lozo_perturb_leaf(w, u, kv, -lr, use_kernel=use_kernel)
+
+
+def subzo_perturb_leaf(
+    w: jax.Array, u, v, sigma, scale, *, use_kernel: bool
+) -> jax.Array:
+    """W + scale·U·Σ·Vᵀ (SubZO)."""
+    if use_kernel and w.ndim >= 2:
+        return ops.subzo_perturb(w, u, v, sigma, scale)
+    return add_scaled(
+        w, jnp.einsum("...mr,...rk,...nk->...mn", u, sigma, v), scale
+    )
+
+
+def subzo_update_leaf(w: jax.Array, u, v, sbar, lr, *, use_kernel: bool) -> jax.Array:
+    """W − lr·U·(mean_i κ_i Σ_i)·Vᵀ: the probe mean collapses onto the tiny
+    [r, r] core, then one fused rank-r pass applies it."""
+    return subzo_perturb_leaf(w, u, v, sbar, -lr, use_kernel=use_kernel)

@@ -26,18 +26,28 @@ All state lives in a ``mstate`` dict pytree; updates are functional.  q-SPSA
 multi-probe averaging (cfg.q_probes>1) is supported for every method by
 regenerating per-probe noise inside the update — no probe buffers are stored.
 
-Kernel dispatch: the TeZO family routes every low-rank leaf's perturb and
-update through ``repro.core.dispatch``, which picks between the fused Pallas
-kernels (``kernels/tezo_perturb.py`` / ``tezo_adam.py`` — Z and the Adam
-moments stay tile-resident in VMEM, one HBM round-trip per leaf touch) and
-the dense-reconstruct XLA path.  The choice is the jit-static
-``ZOConfig.kernel_mode`` knob: ``"auto"`` (pallas on TPU, xla elsewhere),
-``"pallas"`` (force kernels; interpret mode on CPU), or ``"xla"`` (force the
-dense path).  Dense-fallback leaves (biases / norm scales) and the MeZO /
-LOZO / SubZO baselines always use the jnp path.  The two lowerings agree
-tightly for f32 factors and within bf16 rounding of ρ·Z for bf16 factors
-(the kernels accumulate in f32; the dense path rounds Z to the factor
-dtype) — ``tests/test_dispatch_parity.py`` locks both end-to-end.
+Kernel dispatch: *every* method routes *every* leaf's perturb and update
+through ``repro.core.dispatch`` — the estimator owns only the optimizer
+algebra (what state accumulates, in which space); the dispatch leaf ops own
+the lowering.  Under ``kernel_mode="pallas"`` (default on TPU; interpret
+mode on CPU) each eligible leaf makes one HBM round-trip per touch:
+
+  * TeZO family: Z and the Adam moments reconstructed tile-resident from
+    the CPD factors (``kernels/tezo_perturb.py`` / ``tezo_adam.py``);
+  * MeZO family: dense z generated on-chip per tile from a counter-based
+    PRNG, with the q-probe mean and the dense m/v moment updates fused
+    (``kernels/zo_noise.py``) — NOTE this stream differs from the XLA
+    path's ``jax.random.normal`` (statistical parity, not bitwise);
+  * LOZO / SubZO: the factored Z = U·Vᵀ / U·Σ·Vᵀ reconstructed in-tile,
+    with the q-probe mean collapsed onto the small fresh factor (V or Σ)
+    before the single fused update pass.
+
+Under ``kernel_mode="xla"`` the same leaf ops lower to the dense-reconstruct
+jnp math (the pre-dispatch behaviour, bit-for-bit).  Dense-fallback leaves
+(biases / norm scales) always take the jnp path.  ``tests/
+test_dispatch_parity.py`` locks factor-carried methods end-to-end across the
+two lowerings and the MeZO family's self-consistency; ``tests/
+test_zo_noise.py`` locks the noise kernels against replayed-stream oracles.
 """
 from __future__ import annotations
 
@@ -50,7 +60,6 @@ import jax.numpy as jnp
 from repro.core import dispatch
 from repro.core.cpd import (
     CPDFactor,
-    dense_noise,
     init_factors,
     is_lowrank_leaf,
     sample_tau,
@@ -116,7 +125,9 @@ _add_scaled = dispatch.add_scaled
 
 class ZOMethod:
     """Base class; subclasses override the four hooks.  Stateless — all run
-    state is in the mstate pytree."""
+    state is in the mstate pytree.  Subclasses never touch jnp for leaf
+    perturb/update math directly: they compute the (small) state algebra and
+    call the ``dispatch`` leaf ops, which own the pallas-vs-xla lowering."""
 
     name: str = "base"
 
@@ -136,17 +147,6 @@ class ZOMethod:
                kappas: jax.Array, lr: jax.Array, cfg: ZOConfig,
                step: jax.Array) -> tuple[Any, dict]:
         raise NotImplementedError
-
-    # -- shared helpers -----------------------------------------------------
-
-    def _probe_mean_dense(self, path: str, leaf: jax.Array, key_t: jax.Array,
-                          kappas: jax.Array, noise_fn) -> jax.Array:
-        """mean_i κ_i · z_i for one leaf, regenerating z_i per probe."""
-        q = kappas.shape[0]
-        acc = jnp.zeros(leaf.shape, jnp.float32)
-        for i in range(q):
-            acc = acc + kappas[i] * noise_fn(leaf, key_t, path, i).astype(jnp.float32)
-        return acc / q
 
 
 # --------------------------------------------------------------------------
@@ -180,7 +180,9 @@ class TeZO(ZOMethod):
                 return dispatch.perturb_leaf(
                     w, factors[path], tau, scale, use_kernel=use_kernel
                 )
-            return _add_scaled(w, dense_noise(w, key_t, path, probe), scale)
+            return dispatch.noise_perturb_leaf(
+                w, key_t, path, probe, scale, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params)
 
@@ -203,9 +205,10 @@ class TeZO(ZOMethod):
                 return dispatch.sgd_update_leaf(
                     w, factors[path], ktau, lr, use_kernel=use_kernel
                 )
-            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype)
+            return dispatch.noise_sgd_update_leaf(
+                w, key_t, path, kappas, lr, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params), mstate
 
@@ -249,11 +252,13 @@ class TeZOMomentum(TeZO):
                 return dispatch.sgd_update_leaf(
                     w, factors[path], tm, lr, use_kernel=use_kernel
                 )
-            gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-            dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
-            new_dense_m[path] = dm
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * dm.astype(jnp.float32)).astype(w.dtype)
+            w, dm = dispatch.noise_momentum_update_leaf(
+                w, mstate["dense_m"][path], key_t, path, kappas, lr,
+                cfg.beta1, use_kernel=use_kernel,
+            )
+            new_dense_m[path] = dm
+            return w
 
         params = map_with_path(f, params)
         mstate = dict(mstate)
@@ -314,14 +319,15 @@ class TeZOAdam(TeZOMomentum):
                 return dispatch.adam_update_leaf(
                     w, fac, tm, tv, lr, cfg.eps, use_kernel=use_kernel
                 )
-            gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-            dm = cfg.beta1 * mstate["dense_m"][path] + (1.0 - cfg.beta1) * gd
-            dv = cfg.beta2 * mstate["dense_v"][path] + (1.0 - cfg.beta2) * gd * gd
+            w = _apply_wd(w, lr, cfg)
+            w, dm, dv = dispatch.noise_adam_update_leaf(
+                w, mstate["dense_m"][path], mstate["dense_v"][path], key_t,
+                path, kappas, lr, cfg.beta1, cfg.beta2, cfg.eps,
+                use_kernel=use_kernel,
+            )
             new_dense_m[path] = dm
             new_dense_v[path] = dv
-            g = dm * jax.lax.rsqrt(dv + cfg.eps)
-            w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+            return w
 
         params = map_with_path(f, params)
         mstate = dict(mstate)
@@ -344,16 +350,23 @@ class MeZO(ZOMethod):
         return {}
 
     def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
         def f(path, w):
-            return _add_scaled(w, dense_noise(w, key_t, path, probe), scale)
+            return dispatch.noise_perturb_leaf(
+                w, key_t, path, probe, scale, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params)
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
         def f(path, w):
-            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+            return dispatch.noise_sgd_update_leaf(
+                w, key_t, path, kappas, lr, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params), mstate
 
@@ -372,14 +385,17 @@ class MeZOMomentum(MeZO):
         return {"m": m}
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
         new_m = dict(mstate["m"])
 
         def f(path, w):
-            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-            dm = cfg.beta1 * mstate["m"][path] + (1.0 - cfg.beta1) * g
-            new_m[path] = dm
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * dm).astype(w.dtype)
+            w, dm = dispatch.noise_momentum_update_leaf(
+                w, mstate["m"][path], key_t, path, kappas, lr, cfg.beta1,
+                use_kernel=use_kernel,
+            )
+            new_m[path] = dm
+            return w
 
         params = map_with_path(f, params)
         return params, {"m": new_m}
@@ -400,19 +416,19 @@ class MeZOAdam(MeZO):
         return {"m": m, "v": v}
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
         new_m = dict(mstate["m"])
         new_v = dict(mstate["v"])
 
         def f(path, w):
-            g = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-            dm = cfg.beta1 * mstate["m"][path] + (1.0 - cfg.beta1) * g
-            dv = cfg.beta2 * mstate["v"][path] + (1.0 - cfg.beta2) * g * g
+            w = _apply_wd(w, lr, cfg)
+            w, dm, dv = dispatch.noise_adam_update_leaf(
+                w, mstate["m"][path], mstate["v"][path], key_t, path, kappas,
+                lr, cfg.beta1, cfg.beta2, cfg.eps, use_kernel=use_kernel,
+            )
             new_m[path] = dm
             new_v[path] = dv
-            w = _apply_wd(w, lr, cfg)
-            return (
-                w.astype(jnp.float32) - lr * dm * jax.lax.rsqrt(dv + cfg.eps)
-            ).astype(w.dtype)
+            return w
 
         params = map_with_path(f, params)
         return params, {"m": new_m, "v": new_v}
@@ -444,30 +460,58 @@ class LOZO(ZOMethod):
     def init(self, params, key, cfg, ranks=None, rank_masks=None):
         return {"base_key": jax.random.fold_in(key, 7)}
 
-    def _z(self, path, w, mstate, key_t, probe, cfg, step):
-        if not is_lowrank_leaf(path, w):
-            return dense_noise(w, key_t, path, probe)
+    def _lazy_u(self, path, w, mstate, key_t, cfg, step):
+        """(U, r) for the current lazy window — the single derivation both
+        perturb and update must share (a desync would corrupt the SPSA
+        estimate silently)."""
         r = min(cfg.rank, w.shape[-2], w.shape[-1])
         u = _lozo_u(w, key_t, mstate["base_key"], path, step, cfg.lazy_interval, r)
-        v = _lozo_v(w, key_t, path, probe, r)
-        return jnp.einsum("...mr,...nr->...mn", u, v)
+        return u, r
+
+    def _uv(self, path, w, mstate, key_t, probe, cfg, step):
+        u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
+        return u, _lozo_v(w, key_t, path, probe, r)
 
     def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
         def f(path, w):
-            return _add_scaled(w, self._z(path, w, mstate, key_t, probe, cfg, step), scale)
+            if is_lowrank_leaf(path, w):
+                u, v = self._uv(path, w, mstate, key_t, probe, cfg, step)
+                return dispatch.lozo_perturb_leaf(
+                    w, u, v, scale, use_kernel=use_kernel
+                )
+            return dispatch.noise_perturb_leaf(
+                w, key_t, path, probe, scale, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params)
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def _probe_mean_kv(self, path, w, key_t, kappas, r):
+        """mean_i κ_i V_i — [n, r]: U is window-lazy (probe-independent), so
+        the probe mean collapses onto the fresh factor before any dense
+        reconstruction."""
         q = kappas.shape[0]
+        acc = kappas[0] * _lozo_v(w, key_t, path, 0, r)
+        for i in range(1, q):
+            acc = acc + kappas[i] * _lozo_v(w, key_t, path, i, r)
+        return acc / q
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
 
         def f(path, w):
-            acc = jnp.zeros(w.shape, jnp.float32)
-            for i in range(q):
-                acc = acc + kappas[i] * self._z(path, w, mstate, key_t, i, cfg, step).astype(jnp.float32)
-            g = acc / q
+            if is_lowrank_leaf(path, w):
+                u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
+                kv = self._probe_mean_kv(path, w, key_t, kappas, r)
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.lozo_update_leaf(
+                    w, u, kv, lr, use_kernel=use_kernel
+                )
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+            return dispatch.noise_sgd_update_leaf(
+                w, key_t, path, kappas, lr, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params), mstate
 
@@ -506,27 +550,26 @@ class LOZOMomentum(LOZO):
         return out
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
-        q = kappas.shape[0]
+        use_kernel = dispatch.use_pallas(cfg)
         new_vm = dict(mstate["v_m"])
 
         def f(path, w):
             if is_lowrank_leaf(path, w):
-                r = min(cfg.rank, w.shape[-2], w.shape[-1])
-                u = _lozo_u(w, key_t, mstate["base_key"], path, step, cfg.lazy_interval, r)
-                acc = jnp.zeros(w.shape[:-2] + (w.shape[-1], r), jnp.float32)
-                for i in range(q):
-                    acc = acc + kappas[i] * _lozo_v(w, key_t, path, i, r)
-                kv = acc / q
+                u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
+                kv = self._probe_mean_kv(path, w, key_t, kappas, r)
                 vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * kv
                 new_vm[path] = vm
-                g = jnp.einsum("...mr,...nr->...mn", u, vm)
-            else:
-                gd = self._probe_mean_dense(path, w, key_t, kappas, dense_noise)
-                vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * gd
-                new_vm[path] = vm
-                g = vm
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.lozo_update_leaf(
+                    w, u, vm, lr, use_kernel=use_kernel
+                )
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+            w, vm = dispatch.noise_momentum_update_leaf(
+                w, mstate["v_m"][path], key_t, path, kappas, lr, cfg.beta1,
+                use_kernel=use_kernel,
+            )
+            new_vm[path] = vm
+            return w
 
         params = map_with_path(f, params)
         mstate = dict(mstate)
@@ -591,30 +634,48 @@ class SubZO(ZOMethod):
         k = fold_in_path(jax.random.fold_in(key_t, probe), path + "#S")
         return jax.random.normal(k, batch + (r, r), jnp.float32)
 
-    def _z(self, path, w, mstate, key_t, probe, cfg):
-        if path not in mstate["U"]:
-            return dense_noise(w, key_t, path, probe)
-        u, v = mstate["U"][path], mstate["V"][path]
-        r = u.shape[-1]
-        s = self._sigma(path, key_t, probe, r, u.shape[:-2])
-        return jnp.einsum("...mr,...rk,...nk->...mn", u, s, v)
+    def _probe_mean_sigma(self, path, key_t, kappas, r, batch):
+        """mean_i κ_i Σ_i — the whole probe ensemble collapsed onto the tiny
+        [r, r] core (U, V are window-lazy, probe-independent)."""
+        q = kappas.shape[0]
+        acc = kappas[0] * self._sigma(path, key_t, 0, r, batch)
+        for i in range(1, q):
+            acc = acc + kappas[i] * self._sigma(path, key_t, i, r, batch)
+        return acc / q
 
     def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
         def f(path, w):
-            return _add_scaled(w, self._z(path, w, mstate, key_t, probe, cfg), scale)
+            if path in mstate["U"]:
+                u, v = mstate["U"][path], mstate["V"][path]
+                s = self._sigma(path, key_t, probe, u.shape[-1], u.shape[:-2])
+                return dispatch.subzo_perturb_leaf(
+                    w, u, v, s, scale, use_kernel=use_kernel
+                )
+            return dispatch.noise_perturb_leaf(
+                w, key_t, path, probe, scale, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params)
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
-        q = kappas.shape[0]
+        use_kernel = dispatch.use_pallas(cfg)
 
         def f(path, w):
-            acc = jnp.zeros(w.shape, jnp.float32)
-            for i in range(q):
-                acc = acc + kappas[i] * self._z(path, w, mstate, key_t, i, cfg).astype(jnp.float32)
-            g = acc / q
+            if path in mstate["U"]:
+                u, v = mstate["U"][path], mstate["V"][path]
+                sbar = self._probe_mean_sigma(
+                    path, key_t, kappas, u.shape[-1], u.shape[:-2]
+                )
+                w = _apply_wd(w, lr, cfg)
+                return dispatch.subzo_update_leaf(
+                    w, u, v, sbar, lr, use_kernel=use_kernel
+                )
             w = _apply_wd(w, lr, cfg)
-            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+            return dispatch.noise_sgd_update_leaf(
+                w, key_t, path, kappas, lr, use_kernel=use_kernel
+            )
 
         return map_with_path(f, params), mstate
 
@@ -633,6 +694,11 @@ METHODS: dict[str, ZOMethod] = {
         SubZO(),
     ]
 }
+
+# estimator.METHODS and dispatch.KERNEL_METHODS stay in lockstep while all
+# registered methods have kernel paths (the universal-coverage contract —
+# locked by tests/test_dispatch_parity.py, not an import-time assert, so a
+# future kernel-less method can still be registered deliberately).
 
 
 def get_method(name: str) -> ZOMethod:

@@ -15,10 +15,14 @@ optimizer consumes the κ vector — for TeZO this collapses to the r-vector
 mean_i κᵢτᵢ per leaf, i.e. ensemble variance reduction at zero memory.
 
 Kernel dispatch: ``cfg.kernel_mode`` ("auto" | "pallas" | "xla", jit-static)
-selects whether the TeZO family's perturb/update leaf ops lower to the fused
-Pallas kernels or the dense-reconstruct XLA path — see repro.core.dispatch.
+selects whether perturb/update leaf ops lower to the fused Pallas kernels or
+the dense-reconstruct XLA path — for *every* method (TeZO reconstructs Z
+from CPD factors in-tile, MeZO generates z on-chip from a counter PRNG,
+LOZO/SubZO reconstruct their factored Z in-tile; see repro.core.dispatch).
 build_zo_train_step validates the mode eagerly so a typo fails at build time,
-not inside the jitted step.
+not inside the jitted step.  Note the MeZO-family caveat: the pallas and xla
+lowerings draw *different* (equally distributed) noise streams, so switching
+kernel_mode changes that baseline's sample path, not its statistics.
 """
 from __future__ import annotations
 

@@ -3,20 +3,29 @@
 ``interpret`` resolves automatically: on CPU (this container) kernels run in
 interpret mode (the kernel body executed in Python — correctness path); on
 TPU they compile to Mosaic.  Wrappers also handle rank padding (r → multiple
-of 128 for MXU lane alignment, zero-padded so the math is unchanged) and
-batched leaves via vmap.
+of 128 for MXU lane alignment, zero-padded so the math is unchanged),
+batched leaves via vmap, and awkward (m, n): dims that don't divide the
+preferred tile are zero-padded up to the tile multiple and the tail sliced
+off after the call — so prime-ish dims (e.g. a 50257-row vocab embedding)
+still get full-width tiles instead of degrading to tiny divisors.
 
-These wrappers are the *production* hot path, not just a test surface: the
-TeZO family in ``repro.core.estimator`` routes every low-rank leaf's perturb
-and τ-space update through ``repro.core.dispatch``, which calls
-``tezo_perturb`` / ``tezo_adam_update`` here whenever ``ZOConfig.kernel_mode``
-resolves to "pallas" (default on TPU; force with kernel_mode="pallas", which
-on CPU runs these kernels in interpret mode — or pin it with
-``set_interpret``).  Dispatch rules: only leaves with a CPD factor (trailing
-2-D matrix dims, optionally leading-batched — vmap'd here) take the kernel
-path; everything else (biases, norm scales, dense baselines) stays on the
-jnp path.  ``input_output_aliases`` inside the kernels keeps the three
-Algorithm-1 perturbation passes in-place in HBM.
+These wrappers are the *production* hot path for every ZO method: the
+estimator routes all perturb/update leaf math through ``repro.core.dispatch``,
+which calls into here whenever ``ZOConfig.kernel_mode`` resolves to "pallas"
+(default on TPU; force with kernel_mode="pallas", which on CPU runs these
+kernels in interpret mode — or pin it with ``set_interpret``).
+
+  * TeZO family     → ``tezo_perturb`` / ``tezo_adam_update``
+  * MeZO family + every method's dense-fallback 2-D leaves
+                    → ``noise_perturb`` / ``noise_update_*`` (on-chip PRNG)
+  * LOZO            → ``lozo_perturb`` (tezo tiling with τ ≡ 1)
+  * SubZO           → ``subzo_perturb`` (tezo tiling with a Σ core)
+
+Leaves too small/oddly shaped for tiles (biases, norm scales: ndim < 2 or a
+dim < 8) always stay on the dense jnp path — see dispatch's eligibility
+predicates.  ``input_output_aliases`` inside the kernels keeps the three
+Algorithm-1 perturbation passes in-place in HBM (for padded leaves the pad
+copy breaks aliasing; aligned leaves — the common case — stay in-place).
 """
 from __future__ import annotations
 
@@ -25,9 +34,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import zo_noise
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.tezo_adam import tezo_adam_update as _adam
 from repro.kernels.tezo_perturb import tezo_perturb as _perturb
+from repro.kernels.zo_noise import leaf_seed  # re-export for dispatch
 
 _FORCE_INTERPRET: bool | None = None
 
@@ -55,9 +66,13 @@ def is_interpret() -> bool:
     return _interpret()
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 def _pad_rank(u, v, *taus, multiple: int = 128):
     r = u.shape[-1]
-    r_pad = -(-r // multiple) * multiple
+    r_pad = _round_up(r, multiple)
     if r_pad == r:
         return (u, v) + taus
     pad = [(0, 0)] * (u.ndim - 1) + [(0, r_pad - r)]
@@ -67,12 +82,88 @@ def _pad_rank(u, v, *taus, multiple: int = 128):
     ) + tuple(jnp.pad(t, [(0, r_pad - t.shape[-1])]) for t in taus)
 
 
+def _pad_sigma(sigma, multiple: int = 128):
+    r = sigma.shape[-1]
+    r_pad = _round_up(r, multiple)
+    if r_pad == r:
+        return sigma
+    return jnp.pad(sigma, [(0, r_pad - r), (0, r_pad - r)])
+
+
 def _tile(dim: int, pref: int) -> int:
-    """Largest divisor of `dim` that is <= pref (power-of-two-ish search)."""
+    """Largest divisor of `dim` that is <= pref (power-of-two-ish search).
+
+    Used by the sequence-dim kernels (flash attention / selective scan)
+    whose dims are framework-controlled multiples; the weight-leaf ZO
+    kernels use ``_tile_padded`` instead, which never degrades on awkward
+    dims (the old divisor-search pathology: a prime-ish dim like vocab
+    50257 fell all the way to tile size 1).
+    """
     t = min(pref, dim)
     while dim % t != 0:
         t -= 1
     return t
+
+
+def _tile_padded(dim: int, pref: int, mult: int) -> tuple[int, int]:
+    """(tile, padded_dim) for the pad-and-mask tiling of weight leaves.
+
+    Picks the tile (a multiple of the hardware alignment ``mult``, between
+    min(128, pref) and ``pref``) that minimizes the zero-padding — so clean
+    dims stay exactly unpadded (preserving the kernels' in-place HBM
+    aliasing) and awkward dims get full-width tiles with a masked tail
+    (vocab 50257 → tile 128, 47 pad rows) instead of the old divisor
+    search's degenerate tiny tiles.  The caller zero-pads the operands to
+    ``padded_dim`` and slices the tail off the result; the kernels' math is
+    unaffected (padded u/v rows are zero, padded noise is sliced away).
+    """
+    if dim <= pref:
+        t = _round_up(dim, mult)
+        return t, t
+    best_t, best_pad = pref, _round_up(dim, pref) - dim
+    for t in range(pref, min(128, pref) - 1, -mult):
+        pad = _round_up(dim, t) - dim
+        if pad == 0:
+            return t, dim
+        if pad < best_pad:
+            best_t, best_pad = t, pad
+    return best_t, dim + best_pad
+
+
+# Hardware alignment for the two trailing tile dims: 16 sublanes covers both
+# f32 (8) and bf16 (16); 128 is the lane width.
+_SUBLANE, _LANE = 16, 128
+
+
+def _pad_rows(a, rows: int):
+    if a.shape[-2] == rows:
+        return a
+    pad = [(0, 0)] * (a.ndim - 2) + [(0, rows - a.shape[-2]), (0, 0)]
+    return jnp.pad(a, pad)
+
+
+def _weight_tiles(m: int, n: int, bm_pref: int = 256, bn_pref: int = 512):
+    bm, m_pad = _tile_padded(m, bm_pref, _SUBLANE)
+    bn, n_pad = _tile_padded(n, bn_pref, _LANE)
+    return bm, bn, m_pad, n_pad
+
+
+def _pad_w(w, m_pad: int, n_pad: int):
+    m, n = w.shape
+    if (m, n) == (m_pad, n_pad):
+        return w
+    return jnp.pad(w, [(0, m_pad - m), (0, n_pad - n)])
+
+
+def _crop(out, m: int, n: int):
+    if out.shape == (m, n):
+        return out
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# TeZO family
+# ---------------------------------------------------------------------------
 
 
 def tezo_perturb(w, u, v, tau, scale, *, pad_rank: bool = True):
@@ -82,9 +173,13 @@ def tezo_perturb(w, u, v, tau, scale, *, pad_rank: bool = True):
         return jax.vmap(fn)(w, u, v, tau)
     if pad_rank and not _interpret():
         u, v, tau = _pad_rank(u, v, tau)
-    bm = _tile(w.shape[0], 256)
-    bn = _tile(w.shape[1], 512)
-    return _perturb(w, u, v, tau, scale, bm=bm, bn=bn, interpret=_interpret())
+    m, n = w.shape
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    out = _perturb(
+        _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
+        tau, scale, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return _crop(out, m, n)
 
 
 def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = True):
@@ -93,9 +188,147 @@ def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = Tr
         return jax.vmap(fn)(w, u, v, tau_m, tau_v)
     if pad_rank and not _interpret():
         u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
-    bm = _tile(w.shape[0], 256)
-    bn = _tile(w.shape[1], 512)
-    return _adam(w, u, v, tau_m, tau_v, lr, eps, bm=bm, bn=bn, interpret=_interpret())
+    m, n = w.shape
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    out = _adam(
+        _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
+        tau_m, tau_v, lr, eps, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return _crop(out, m, n)
+
+
+# ---------------------------------------------------------------------------
+# Dense on-chip-noise family (MeZO + dense-fallback leaves)
+# ---------------------------------------------------------------------------
+
+
+def _batch_seeds(seed, batch: int):
+    """Distinct Threefry key per leading-batch slice.
+
+    Derived by encrypting the slice index under the parent key — NOT by
+    XOR-ing it in, which is commutative: nested leading dims (e.g. a
+    [L, E, m, n] expert stack) peel one dim per recursion, and k1^i^j would
+    collide for slices (i, j) and (j, i).  Re-keying through the cipher
+    makes each nesting level's derivation injective and order-sensitive.
+    """
+    idx = jnp.arange(batch, dtype=jnp.uint32)
+    s0, s1 = zo_noise.threefry2x32(
+        seed[0], seed[1], idx, jnp.uint32(0x5EED51CE)
+    )
+    return jnp.stack([s0, s1], axis=-1)
+
+
+def noise_perturb(w, seed, scale, *, probe: int = 0):
+    """W + scale·z with z ~ N(0, I) generated on-chip (counter PRNG).
+
+    ``seed`` is the uint32[2] leaf key from ``leaf_seed(key_t, path)``; the
+    draw is a pure function of (seed, probe, element coords) so the three
+    Algorithm-1 passes replay it exactly.
+    """
+    if w.ndim > 2:
+        lead = w.shape[0]
+        fn = functools.partial(noise_perturb, scale=scale, probe=probe)
+        return jax.vmap(fn)(w, _batch_seeds(seed, lead))
+    m, n = w.shape
+    assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
+    assert 0 <= probe < zo_noise.MAX_PROBES, (probe, "probe id must fit 8 bits")
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    out = zo_noise.noise_perturb(
+        _pad_w(w, m_pad, n_pad), seed, scale,
+        probe=probe, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return _crop(out, m, n)
+
+
+def _noise_update(w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant):
+    if w.ndim > 2:
+        lead = w.shape[0]
+        seeds = _batch_seeds(seed, lead)
+        if variant == "sgd":
+            return jax.vmap(
+                lambda wi, si: _noise_update(wi, si, kappas, hyp, variant=variant)
+            )(w, seeds)
+        if variant == "momentum":
+            return jax.vmap(
+                lambda wi, si, mi: _noise_update(
+                    wi, si, kappas, hyp, mi, variant=variant
+                )
+            )(w, seeds, m_buf)
+        return jax.vmap(
+            lambda wi, si, mi, vi: _noise_update(
+                wi, si, kappas, hyp, mi, vi, variant=variant
+            )
+        )(w, seeds, m_buf, v_buf)
+    m, n = w.shape
+    assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
+    assert kappas.shape[0] < zo_noise.MAX_PROBES
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    pad = functools.partial(_pad_w, m_pad=m_pad, n_pad=n_pad)
+    out = zo_noise.noise_update(
+        pad(w), seed, kappas, hyp,
+        None if m_buf is None else pad(m_buf),
+        None if v_buf is None else pad(v_buf),
+        variant=variant, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return tuple(_crop(o, m, n) for o in out)
+
+
+def noise_update_sgd(w, seed, kappas, lr):
+    """W − lr·(mean_i κ_i z_i): probe mean and update fused in one pass."""
+    hyp = jnp.stack([jnp.asarray(lr, jnp.float32)] + [jnp.float32(0.0)] * 3)
+    return _noise_update(w, seed, kappas, hyp, variant="sgd")[0]
+
+
+def noise_update_momentum(w, m_buf, seed, kappas, lr, beta1):
+    """Fused M ← β₁M + (1−β₁)g; W ← W − lr·M.  Returns (w', m')."""
+    hyp = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+        jnp.float32(0.0), jnp.float32(0.0),
+    ])
+    return _noise_update(w, seed, kappas, hyp, m_buf, variant="momentum")
+
+
+def noise_update_adam(w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps):
+    """Fused dense-Adam: both moment buffers ride the W grid (one HBM
+    round-trip each instead of materializing g).  Returns (w', m', v')."""
+    hyp = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+        jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+    ])
+    return _noise_update(w, seed, kappas, hyp, m_buf, v_buf, variant="adam")
+
+
+# ---------------------------------------------------------------------------
+# LOZO / SubZO
+# ---------------------------------------------------------------------------
+
+
+def lozo_perturb(w, u, v, scale):
+    """W + scale·(U·Vᵀ): LOZO's Z is the TeZO tiling with τ ≡ 1."""
+    tau = jnp.ones(u.shape[:-2] + (u.shape[-1],), jnp.float32)
+    return tezo_perturb(w, u, v, tau, scale)
+
+
+def subzo_perturb(w, u, v, sigma, scale, *, pad_rank: bool = True):
+    """W + scale·(U·Σ·Vᵀ) for 2-D or leading-batched W."""
+    if w.ndim > 2:
+        fn = functools.partial(subzo_perturb, scale=scale, pad_rank=pad_rank)
+        return jax.vmap(fn)(w, u, v, sigma)
+    if pad_rank and not _interpret():
+        u, v = _pad_rank(u, v)[:2]
+        sigma = _pad_sigma(sigma)
+    m, n = w.shape
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    out = zo_noise.subzo_perturb(
+        _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
+        sigma, scale, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return _crop(out, m, n)
+
+
+# ---------------------------------------------------------------------------
+# Attention / SSM
+# ---------------------------------------------------------------------------
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, bq=512, bk=512):

@@ -3,11 +3,22 @@
 Each function mirrors the math of its kernel exactly, with f32 accumulation
 where the kernel accumulates in f32.  tests/test_kernels.py sweeps shapes and
 dtypes asserting allclose(kernel(interpret=True), ref).
+
+The zo_noise oracles *replay the counter-based generator* over the whole
+array at once: the stream is a pure function of (leaf key, probe, element
+coords), independent of the kernels' tiling/padding, so per-tile in-kernel
+generation must reproduce it element-for-element.  The generator itself
+(Threefry-2x32) is additionally locked against the published Random123 test
+vectors in tests/test_zo_noise.py, so these oracles aren't circular: the
+integer stream is pinned to an external spec, and the oracle checks the
+kernels' indexing, tiling and fusion against it.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.zo_noise import counter_normal
 
 
 def tezo_perturb_ref(
@@ -38,6 +49,65 @@ def tezo_adam_update_ref(
     vv = ((uf * uf) * tau_v[None, :]) @ (vf * vf).T
     g = m * jax.lax.rsqrt(vv + eps)
     return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+
+def counter_normal_ref(shape, seed, probe: int = 0) -> jax.Array:
+    """Whole-array replay of the kernels' on-chip N(0,1) stream.
+
+    ``seed`` is the uint32[2] leaf key (ops.leaf_seed); element (i, j) draws
+    from counter (col=j, row=i | probe<<24) regardless of how the kernels
+    tile the array.
+    """
+    m, n = shape
+    rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, n))
+    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32)[None, :], (m, n))
+    return counter_normal(seed[0], seed[1], rows, cols, probe)
+
+
+def noise_perturb_ref(w, seed, scale, probe: int = 0) -> jax.Array:
+    """W + scale·z with the replayed counter stream, f32 accumulation."""
+    z = counter_normal_ref(w.shape, seed, probe)
+    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+
+
+def noise_probe_mean_ref(shape, seed, kappas) -> jax.Array:
+    """g = mean_i κ_i z_i — the in-kernel q-probe accumulation, replayed."""
+    q = kappas.shape[0]
+    acc = kappas[0] * counter_normal_ref(shape, seed, 0)
+    for p in range(1, q):
+        acc = acc + kappas[p] * counter_normal_ref(shape, seed, p)
+    return acc / q
+
+
+def noise_update_sgd_ref(w, seed, kappas, lr) -> jax.Array:
+    g = noise_probe_mean_ref(w.shape, seed, kappas)
+    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+
+def noise_update_momentum_ref(w, m_buf, seed, kappas, lr, beta1):
+    g = noise_probe_mean_ref(w.shape, seed, kappas)
+    m_new = beta1 * m_buf + (1.0 - beta1) * g
+    return (w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
+
+
+def noise_update_adam_ref(w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps):
+    g = noise_probe_mean_ref(w.shape, seed, kappas)
+    m_new = beta1 * m_buf + (1.0 - beta1) * g
+    v_new = beta2 * v_buf + (1.0 - beta2) * g * g
+    upd = m_new * jax.lax.rsqrt(v_new + eps)
+    return (w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new, v_new
+
+
+def lozo_perturb_ref(w, u, v, scale) -> jax.Array:
+    """W + scale·U·Vᵀ (LOZO), f32 accumulation — τ ≡ 1 TeZO reconstruction."""
+    z = u.astype(jnp.float32) @ v.astype(jnp.float32).T
+    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+
+
+def subzo_perturb_ref(w, u, v, sigma, scale) -> jax.Array:
+    """W + scale·U·Σ·Vᵀ (SubZO), f32 accumulation."""
+    z = u.astype(jnp.float32) @ sigma.astype(jnp.float32) @ v.astype(jnp.float32).T
+    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
 def flash_attention_ref(

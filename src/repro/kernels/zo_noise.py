@@ -1,0 +1,330 @@
+"""Pallas TPU kernels: fused dense-noise ZO perturb/update with on-chip PRNG.
+
+The MeZO baselines (and every method's dense-fallback leaves) perturb with a
+parameter-sized Gaussian ``z`` — the naive lowering materializes it in HBM on
+each of the four leaf touches per step (three Algorithm-1 passes + update),
+which is exactly the traffic the fused TeZO kernels eliminate for the
+low-rank family.  These kernels give the dense methods the same one-HBM-
+round-trip treatment: ``z`` is generated *on-chip per tile* and never leaves
+VMEM.
+
+The generator is counter-based (stateless): each element's normal draw is a
+pure function of ``(key_t, path-hash, probe, row, col)`` via Threefry-2x32
+(20 rounds, the Random123/JAX block cipher) + Box–Muller.  That is what makes
+the whole scheme work:
+
+  * the three Algorithm-1 passes (+ρ, −2ρ, +ρ) and the update regenerate
+    bit-identical ``z`` from the same counters — nothing is stored;
+  * the stream is independent of grid/tile order, so any tiling (including
+    the pad-and-mask tail handling in ``ops.py``) sees the same noise;
+  * ``ref.counter_normal_ref`` replays the generator in pure jnp, locking the
+    kernel math bitwise in interpret mode.
+
+We deliberately implement the counter cipher with in-kernel vector ops
+(add/xor/rotate on uint32) rather than ``pltpu.prng_random_bits``: the
+hardware PRNG's stream is opaque (no oracle could replay it), is stateful
+per-core (tile-order dependent), and has no CPU interpret-mode lowering on
+this JAX version — while Threefry is ~40 VPU ops per 2 words, negligible
+against the HBM traffic these kernels exist to remove.
+
+Counter layout: key = (key_t[0] ^ path_hash, key_t[1]), counter =
+(col, row | probe << 24).  Rows are bounded by 2^24 and probes by 2^8 —
+checked in ``ops.py`` — so (leaf, probe, element) → counter is injective.
+
+NOTE the on-chip stream is *different* from ``jax.random.normal`` — MeZO
+pallas-vs-xla parity is therefore statistical (moments/covariance, see
+tests/test_zo_noise.py) plus exact three-pass self-consistency, not bitwise.
+
+The update kernels fuse the q-SPSA probe mean ``g = mean_i κ_i z_i`` (probes
+looped in-kernel over the resident tile) and the optimizer rule:
+
+  sgd        W ← W − lr·g
+  momentum   M ← β₁M + (1−β₁)g ;            W ← W − lr·M
+  adam       ... V ← β₂V + (1−β₂)g² ;       W ← W − lr·M/√(V+ε)
+
+so MeZO-m/MeZO-Adam's dense moment buffers also make exactly one HBM
+round-trip, and ``q_probes > 1`` stops looping dense buffers in Python.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.tree import _path_hash
+
+# Threefry-2x32 rotation schedule (Random123), alternated every 4 rounds.
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA
+MAX_ROWS = 1 << 24   # row index shares a counter word with the probe id
+MAX_PROBES = 1 << 8
+
+
+def _rotl(x: jax.Array, d: int) -> jax.Array:
+    return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Standard 20-round Threefry-2x32 block cipher (Random123 §3).
+
+    All args uint32 (scalars or broadcastable arrays); returns two uint32
+    words.  Matches the published Random123 test vectors — locked by
+    tests/test_zo_noise.py — so the stream is a spec, not an implementation
+    accident.
+    """
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x0 = c0 + ks[0]
+    x1 = c1 + ks[1]
+    for rnd in range(5):
+        for d in _ROTATIONS[rnd % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, d) ^ x0
+        x0 = x0 + ks[(rnd + 1) % 3]
+        x1 = x1 + ks[(rnd + 2) % 3] + jnp.uint32(rnd + 1)
+    return x0, x1
+
+
+def counter_normal(k0, k1, rows, cols, probe: int) -> jax.Array:
+    """N(0,1) f32 draw per (row, col) element via Threefry + Box–Muller.
+
+    ``rows``/``cols`` are uint32 arrays of the output shape holding *global*
+    element coordinates — the draw depends only on them (plus key/probe),
+    never on tiling, so per-tile generation inside the kernels and the
+    whole-array oracle agree bitwise.
+    """
+    c1 = rows | (jnp.uint32(probe) << jnp.uint32(24))
+    b0, b1 = threefry2x32(k0, k1, cols, c1)
+    # 24-bit mantissa uniforms in (0, 1): u ∈ [2^-25, 1 - 2^-25]
+    u1 = (b0 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    u2 = (b1 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    u1 = u1 + jnp.float32(2.0 ** -25)
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(2.0 * math.pi) * u2)
+
+
+def leaf_seed(key_t: jax.Array, path: str) -> jax.Array:
+    """uint32[2] Threefry key for one leaf: (key_t[0] ^ path_hash, key_t[1]).
+
+    The path hash is the same stable 31-bit digest used by fold_in_path, so
+    per-leaf streams stay order- and mesh-independent (DESIGN §3).
+    """
+    kd = jax.random.key_data(key_t).astype(jnp.uint32)
+    return kd.at[0].set(kd[0] ^ jnp.uint32(_path_hash(path)))
+
+
+def _tile_coords(bm: int, bn: int):
+    """Global (rows, cols) uint32 coordinate grids for the current tile."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    return rows.astype(jnp.uint32), cols.astype(jnp.uint32)
+
+
+def _seed_words(seed_ref):
+    k0 = jax.lax.bitcast_convert_type(seed_ref[0], jnp.uint32)
+    k1 = jax.lax.bitcast_convert_type(seed_ref[1], jnp.uint32)
+    return k0, k1
+
+
+def _as_i32_seed(seed: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(seed.astype(jnp.uint32), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Perturb:  W ← W + scale·z,  z generated on-chip
+# ---------------------------------------------------------------------------
+
+
+def _noise_perturb_kernel(seed_ref, scale_ref, w_ref, o_ref, *, probe, bm, bn):
+    k0, k1 = _seed_words(seed_ref)
+    rows, cols = _tile_coords(bm, bn)
+    z = counter_normal(k0, k1, rows, cols, probe)
+    o_ref[...] = (
+        w_ref[...].astype(jnp.float32) + scale_ref[0] * z
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("probe", "bm", "bn", "interpret"))
+def noise_perturb(
+    w: jax.Array,        # [m, n]
+    seed: jax.Array,     # uint32[2] (leaf_seed)
+    scale: jax.Array | float,
+    *,
+    probe: int = 0,
+    bm: int = 256,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, n = w.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_noise_perturb_kernel, probe=probe, bm=bm, bn=bn),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(_as_i32_seed(seed), scale_arr, w)
+
+
+# ---------------------------------------------------------------------------
+# Update:  g = mean_i κ_i z_i in-kernel, then the optimizer rule
+# ---------------------------------------------------------------------------
+
+
+def _noise_update_kernel(*refs, variant, q, bm, bn):
+    seed_ref, hyp_ref, kap_ref = refs[0], refs[1], refs[2]
+    k0, k1 = _seed_words(seed_ref)
+    rows, cols = _tile_coords(bm, bn)
+    g = kap_ref[0] * counter_normal(k0, k1, rows, cols, 0)
+    for p in range(1, q):
+        g = g + kap_ref[p] * counter_normal(k0, k1, rows, cols, p)
+    g = g * jnp.float32(1.0 / q)
+    lr = hyp_ref[0]
+    if variant == "sgd":
+        w_ref, o_w = refs[3], refs[4]
+        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * g).astype(o_w.dtype)
+    elif variant == "momentum":
+        w_ref, m_ref, o_w, o_m = refs[3], refs[4], refs[5], refs[6]
+        b1 = hyp_ref[1]
+        m_new = b1 * m_ref[...] + (1.0 - b1) * g
+        o_m[...] = m_new
+        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * m_new).astype(o_w.dtype)
+    else:  # adam
+        w_ref, m_ref, v_ref, o_w, o_m, o_v = refs[3:9]
+        b1, b2, eps = hyp_ref[1], hyp_ref[2], hyp_ref[3]
+        m_new = b1 * m_ref[...] + (1.0 - b1) * g
+        v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+        o_m[...] = m_new
+        o_v[...] = v_new
+        upd = m_new * jax.lax.rsqrt(v_new + eps)
+        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * upd).astype(o_w.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("variant", "bm", "bn", "interpret")
+)
+def noise_update(
+    w: jax.Array,                 # [m, n]
+    seed: jax.Array,              # uint32[2]
+    kappas: jax.Array,            # [q] f32 — q static via shape
+    hyp: jax.Array,               # [4] f32: lr, beta1, beta2, eps
+    m_buf: jax.Array | None = None,   # [m, n] f32 (momentum/adam)
+    v_buf: jax.Array | None = None,   # [m, n] f32 (adam)
+    *,
+    variant: str = "sgd",
+    bm: int = 256,
+    bn: int = 512,
+    interpret: bool = False,
+):
+    """Fused q-probe mean + optimizer update; returns (w', m'?, v'?).
+
+    The state buffers ride the same grid as W (one HBM round-trip each,
+    aliased in-place); z for every probe is regenerated on-chip.
+    """
+    m, n = w.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    q = kappas.shape[0]
+    assert q < MAX_PROBES, q
+
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    operands = [_as_i32_seed(seed), hyp.astype(jnp.float32),
+                kappas.astype(jnp.float32), w]
+    in_specs = [smem, smem, smem, tile]
+    out_shapes = [jax.ShapeDtypeStruct((m, n), w.dtype)]
+    aliases = {3: 0}
+    if variant in ("momentum", "adam"):
+        operands.append(m_buf)
+        in_specs.append(tile)
+        out_shapes.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+        aliases[4] = 1
+    if variant == "adam":
+        operands.append(v_buf)
+        in_specs.append(tile)
+        out_shapes.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+        aliases[5] = 2
+    out = pl.pallas_call(
+        functools.partial(
+            _noise_update_kernel, variant=variant, q=q, bm=bm, bn=bn
+        ),
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=[tile] * len(out_shapes),
+        out_shape=out_shapes,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# SubZO:  W ← W + scale·(U·Σ·Vᵀ) — tile-resident Z with a Σ core
+# ---------------------------------------------------------------------------
+
+
+def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref):
+    scale = scale_ref[0]
+    u = u_ref[...].astype(jnp.float32)          # [bm, r]
+    v = v_ref[...].astype(jnp.float32)          # [bn, r]
+    s = s_ref[...].astype(jnp.float32)          # [r, r]
+    us = jax.lax.dot_general(
+        u, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # [bm, r]
+    z = jax.lax.dot_general(
+        us, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # [bm, bn]
+    o_ref[...] = (w_ref[...].astype(jnp.float32) + scale * z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def subzo_perturb(
+    w: jax.Array,       # [m, n]
+    u: jax.Array,       # [m, r]
+    v: jax.Array,       # [n, r]
+    sigma: jax.Array,   # [r, r] f32
+    scale: jax.Array | float,
+    *,
+    bm: int = 256,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """SubZero's Z = U·Σ·Vᵀ, fused like tezo_perturb: the [bm,r]·[r,r]·[r,bn]
+    chain runs on the MXU against the resident W tile, so Z (and U·Σ) never
+    reach HBM."""
+    m, n = w.shape
+    r = u.shape[-1]
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _subzo_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(scale_arr, w, u, v, sigma)

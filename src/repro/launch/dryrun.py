@@ -149,14 +149,13 @@ def run_cell(
 
     t0 = time.time()
     if shape.kind == "train":
-        if method in KERNEL_METHODS:
-            # only TeZO-family train cells actually route through the
-            # kernels; mark interpret-mode pallas legs (off-TPU emulation,
-            # not Mosaic) so the roofline numbers aren't misread
-            resolved, interp = kernel_execution(method, kernel_mode)
-            record["kernel_mode"] = resolved
-            if resolved == "pallas":
-                record["kernel_interpret"] = interp
+        # every ZO method routes through the kernel dispatch now; mark
+        # interpret-mode pallas legs (off-TPU emulation, not Mosaic) so the
+        # roofline numbers aren't misread
+        resolved, interp = kernel_execution(method, kernel_mode)
+        record["kernel_mode"] = resolved
+        if resolved == "pallas":
+            record["kernel_interpret"] = interp
         zo_cfg = ZOConfig(
             method=method, kernel_mode=kernel_mode, rank=rank,
             factor_dtype=jnp.bfloat16,
@@ -278,7 +277,8 @@ def main() -> None:
     ap.add_argument(
         "--kernel-mode", default="auto",
         choices=["auto", "pallas", "xla", "both"],
-        help="TeZO hot-path lowering for train cells; 'both' runs each train "
+        help="ZO hot-path lowering for train cells (all nine methods route "
+        "through the kernel dispatch); 'both' runs each train "
         "cell twice (prefill/decode cells never touch the ZO step and run "
         "once), tagging records [TAG-]kernel-xla / [TAG-]kernel-pallas so "
         "`benchmarks.roofline --tag [TAG-]kernel-xla --compare "
@@ -320,11 +320,11 @@ def main() -> None:
         return ov
 
     if args.kernel_mode == "both" and args.method not in KERNEL_METHODS:
-        # baseline methods never touch the kernels: both legs would be
-        # identical XLA runs, so don't fabricate a kernel comparison
+        # every ZO method has a kernel path now; this only triggers for a
+        # hypothetical kernel-less method registered in the future
         print(
             f"[dryrun] --kernel-mode both ignored: method {args.method!r} "
-            "has no kernel path (TeZO family only); running once",
+            "has no kernel path; running once",
             flush=True,
         )
         kernel_runs = [("xla", args.tag)]

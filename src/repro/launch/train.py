@@ -78,7 +78,8 @@ def train(
         method=method, kernel_mode=kernel_mode, lr=lr, rho=rho, rank=rank,
         rank_mode=rank_mode, q_probes=q_probes, seed=seed, total_steps=steps,
     )
-    # baselines ignore the knob: report what will actually execute
+    # report the lowering that will actually execute (and whether the
+    # pallas path is interpret-mode emulation)
     resolved_kernel, kernel_interpret = kernel_execution(method, kernel_mode)
     if kernel_interpret and verbose:
         print(
@@ -204,8 +205,11 @@ def main() -> None:
     ap.add_argument("--method", default="tezo_adam")
     ap.add_argument(
         "--kernel-mode", default="auto", choices=["auto", "pallas", "xla"],
-        help="fused Pallas kernels vs dense XLA for the TeZO hot path "
-        "(auto: pallas on TPU, xla elsewhere)",
+        help="fused Pallas kernels vs dense XLA for the ZO hot path — all "
+        "nine methods route through the dispatch layer (auto: pallas on "
+        "TPU, xla elsewhere).  NB the MeZO family's pallas path draws its "
+        "noise from the on-chip counter PRNG, a different stream than the "
+        "xla path (statistically identical, not bitwise)",
     )
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seq-len", type=int, default=128)
