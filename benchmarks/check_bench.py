@@ -1,0 +1,67 @@
+"""CI gate for the kernel benchmark record: coverage ratchet, not speed.
+
+Walltime on shared CI runners is noise, so the enforced contract is record
+*coverage*: every (method, kernel, mesh) combination present in the
+committed baseline ``results/BENCH_kernels.json`` must also appear in the
+freshly produced file (any model/width satisfies a combination — the CI
+smoke runs width x1 only while the committed baseline also carries x4).  A
+method silently losing its pallas leg, a kernel-mode regressing to the
+dense path, or the sharded leg disappearing all fail here; new combinations
+are allowed (they become binding once committed).
+
+Usage (CI):
+    python -m benchmarks.table8_walltime --widths 1 --iters 1 --out fresh.json
+    python -m benchmarks.check_bench --fresh fresh.json \
+        --baseline results/BENCH_kernels.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def record_keys(doc: dict) -> set[tuple]:
+    keys = set()
+    for rec in doc.get("records", []):
+        # pre-schema-2 baselines have no mesh field: treat as single-device
+        keys.add((rec["method"], rec["kernel"], rec.get("mesh", "1x1")))
+    return keys
+
+
+def check(fresh_path: str, baseline_path: str) -> int:
+    fresh = json.loads(Path(fresh_path).read_text())
+    baseline = json.loads(Path(baseline_path).read_text())
+    if not fresh.get("records"):
+        print(f"[check_bench] FAIL: {fresh_path} has no records")
+        return 1
+    missing = sorted(record_keys(baseline) - record_keys(fresh))
+    if missing:
+        print(
+            f"[check_bench] FAIL: {len(missing)} (method, kernel, mesh) "
+            "combination(s) in the committed baseline are missing from the "
+            "fresh run:",
+        )
+        for key in missing:
+            print(f"  - {key}")
+        return 1
+    extra = sorted(record_keys(fresh) - record_keys(baseline))
+    extra_note = f" (+{len(extra)} new, not yet binding)" if extra else ""
+    print(
+        f"[check_bench] OK: {len(record_keys(fresh))} combinations cover "
+        f"the baseline's {len(record_keys(baseline))}{extra_note}",
+    )
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline", default="results/BENCH_kernels.json")
+    args = ap.parse_args()
+    sys.exit(check(args.fresh, args.baseline))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
 
 from benchmarks.common import emit_csv
 from repro.launch.train import train

@@ -7,8 +7,6 @@ draws in our implementations, compared against the paper's closed forms.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit_csv
 

@@ -11,13 +11,12 @@ Two measurements:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit_csv, zo_memory_model
 from repro.configs import get_smoke_config
-from repro.core import ZOConfig, get_method, init_zo_state
+from repro.core import ZOConfig, init_zo_state
 from repro.models import build_model
-from repro.utils.tree import tree_num_params, tree_size_bytes
+from repro.utils.tree import tree_size_bytes
 
 METHODS = ["mezo", "mezo_m", "mezo_adam", "lozo", "subzo", "tezo", "tezo_m", "tezo_adam"]
 

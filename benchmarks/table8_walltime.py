@@ -13,17 +13,28 @@ fused-vs-fused rather than a fused TeZO against unfused baselines.  On CPU
 the pallas legs run in interpret mode, so those columns are a *semantics/
 plumbing* check here and only a speed claim on TPU.
 
+Sharded leg: the same method × kernel-mode sweep also runs on a 2×4
+(data, model) host-platform mesh — 8 fake CPU devices in a subprocess, so
+this process keeps seeing exactly one device — through the shard-aware
+dispatch (shard_map'd local-shard kernels, see core.dispatch).  Those rows
+are labeled ``mesh: "2x4-host"``; being host-platform multi-device on one
+CPU they measure plumbing/compile sanity, not device-parallel speed.
+
 Besides the stdout CSV, ``run()`` writes ``results/BENCH_kernels.json`` —
-per-(model, method, kernel-mode) walltime plus an analytic bytes-moved
-estimate — so the perf trajectory is machine-trackable across PRs.
+per-(model, method, kernel-mode, mesh) walltime plus an analytic bytes-moved
+estimate — so the perf trajectory is machine-trackable across PRs
+(``benchmarks/check_bench.py`` gates CI on record coverage).
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import subprocess
+import sys
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit_csv, time_fn, zo_step_bytes_model
 from repro.configs import get_smoke_config
@@ -41,11 +52,21 @@ METHODS = [
 
 BENCH_JSON = Path("results") / "BENCH_kernels.json"
 
+# The sharded leg's mesh: (data, model) over 8 host-platform devices.
+SHARDED_MESH = (2, 4)
+SHARDED_MESH_LABEL = "2x4-host"
+_CHILD_MARKER = "BENCH_SHARDED_JSON:"
 
-def run(out_json: Path | str = BENCH_JSON) -> list[dict]:
+
+def _kernel_label(method: str, kernel_mode: str) -> str:
+    resolved, interp = kernel_execution(method, kernel_mode)
+    return "pallas-interpret" if resolved == "pallas" and interp else resolved
+
+
+def _single_device_rows(widths, iters: int) -> list[dict]:
     rows = []
     shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
-    for width_mult in (1, 4):
+    for width_mult in widths:
         cfg = get_smoke_config("opt-125m")
         cfg = cfg.reduced(
             d_model=cfg.d_model * width_mult,
@@ -66,20 +87,18 @@ def run(out_json: Path | str = BENCH_JSON) -> list[dict]:
                 )
                 state = init_zo_state(params, zo_cfg)
                 step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
-                sec = time_fn(lambda s=state, b=batch: step(s, b)[1]["loss"], iters=4)
+                sec = time_fn(
+                    lambda s=state, b=batch: step(s, b)[1]["loss"], iters=iters
+                )
                 if method == "mezo" and kernel_mode == "xla":
                     base = sec
-                resolved, interp = kernel_execution(method, kernel_mode)
-                kernel_label = (
-                    "pallas-interpret"
-                    if resolved == "pallas" and interp
-                    else resolved
-                )
+                resolved, _ = kernel_execution(method, kernel_mode)
                 rows.append(
                     {
                         "model": f"{cfg.name}-x{width_mult}",
                         "method": method,
-                        "kernel": kernel_label,
+                        "kernel": _kernel_label(method, kernel_mode),
+                        "mesh": "1x1",
                         "ms_per_iter": round(sec * 1e3, 2),
                         "vs_mezo": round(sec / base, 3) if base else 1.0,
                         "bytes_moved_est_mb": round(
@@ -89,16 +108,129 @@ def run(out_json: Path | str = BENCH_JSON) -> list[dict]:
                         ),
                     }
                 )
+    return rows
+
+
+def sharded_leg_rows(iters: int) -> list[dict]:
+    """Time every method × kernel-mode on the host-platform mesh.
+
+    Must run in a process whose XLA_FLAGS forced ≥ 8 host devices BEFORE the
+    first jax import — ``run()`` spawns it as a subprocess (below); call it
+    directly only from such an environment.
+    """
+    # sharding-invariant jax.random so the dense-fallback leaves see the
+    # same streams as the single-device rows (see core.dispatch docs)
+    jax.config.update("jax_threefry_partitionable", True)
+    from repro.distributed import (
+        batch_shardings,
+        param_spec_table,
+        zo_state_shardings,
+    )
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=SHARDED_MESH[0], model=SHARDED_MESH[1])
+    shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
+    cfg = get_smoke_config("opt-125m").reduced(
+        spmd_hints=True, batch_axis_names=("data",)
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = tree_num_params(params)
+    batch = model.make_inputs(jax.random.PRNGKey(1), shape)
+    b_sh = batch_shardings(mesh, jax.eval_shape(lambda: batch))
+    rows = []
+    base = None
+    for method in METHODS:
+        for kernel_mode in ("xla", "pallas"):
+            zo_cfg = ZOConfig(
+                method=method, kernel_mode=kernel_mode, rank=16,
+                lr=1e-5, lazy_interval=50,
+            )
+            state = init_zo_state(params, zo_cfg)
+            st_sh = zo_state_shardings(
+                mesh, model.logical_axes(), jax.eval_shape(lambda: state)
+            )
+            step = jax.jit(
+                build_zo_train_step(
+                    model.loss_fn, zo_cfg, mesh=mesh,
+                    param_specs=param_spec_table(st_sh.params),
+                ),
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+            )
+            with mesh:
+                state_d = jax.device_put(state, st_sh)
+                batch_d = jax.device_put(batch, b_sh)
+                sec = time_fn(
+                    lambda s=state_d, b=batch_d: step(s, b)[1]["loss"],
+                    iters=iters,
+                )
+            if method == "mezo" and kernel_mode == "xla":
+                base = sec
+            resolved, _ = kernel_execution(method, kernel_mode)
+            rows.append(
+                {
+                    "model": f"{cfg.name}-x1",
+                    "method": method,
+                    "kernel": _kernel_label(method, kernel_mode),
+                    "mesh": SHARDED_MESH_LABEL,
+                    "ms_per_iter": round(sec * 1e3, 2),
+                    "vs_mezo": round(sec / base, 3) if base else 1.0,
+                    "bytes_moved_est_mb": round(
+                        zo_step_bytes_model(n_params, method, resolved) / 2 ** 20,
+                        1,
+                    ),
+                }
+            )
+            jax.clear_caches()
+    return rows
+
+
+def _sharded_leg_subprocess(iters: int) -> list[dict]:
+    """Run the sharded leg in a child with 8 fake host devices (this process
+    must keep seeing exactly one device — assignment §0)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    repo = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(repo / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.table8_walltime",
+         "--sharded-child", "--iters", str(iters)],
+        env=env, cwd=repo, capture_output=True, text=True, timeout=3600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench leg failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+        )
+    for line in proc.stdout.splitlines():
+        if line.startswith(_CHILD_MARKER):
+            return json.loads(line[len(_CHILD_MARKER):])
+    raise RuntimeError(f"sharded bench leg emitted no records:\n{proc.stdout[-2000:]}")
+
+
+def run(
+    out_json: Path | str = BENCH_JSON,
+    widths=(1, 4),
+    iters: int = 4,
+    sharded: bool = True,
+) -> list[dict]:
+    rows = _single_device_rows(widths, iters)
+    if sharded:
+        rows += _sharded_leg_subprocess(iters)
     emit_csv("table8_walltime", rows)
     out = Path(out_json)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(
         json.dumps(
             {
-                "schema": 1,
+                "schema": 2,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter
+                # (the per-row "kernel" label also marks them); mesh-labeled
+                # rows are host-platform multi-device (plumbing, not speed)
                 "interpret": bool(is_interpret()),
                 "records": rows,
             },
@@ -108,5 +240,29 @@ def run(out_json: Path | str = BENCH_JSON) -> list[dict]:
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(BENCH_JSON))
+    ap.add_argument(
+        "--widths", default="1,4",
+        help="comma-separated opt-125m-smoke width multipliers (CI uses 1)",
+    )
+    ap.add_argument("--iters", type=int, default=4)
+    ap.add_argument(
+        "--no-sharded", action="store_true",
+        help="skip the 2x4 host-platform mesh leg",
+    )
+    ap.add_argument(
+        "--sharded-child", action="store_true", help=argparse.SUPPRESS
+    )
+    args = ap.parse_args()
+    if args.sharded_child:
+        rows = sharded_leg_rows(args.iters)
+        print(_CHILD_MARKER + json.dumps(rows), flush=True)
+        return
+    widths = tuple(int(w) for w in str(args.widths).split(","))
+    run(args.out, widths=widths, iters=args.iters, sharded=not args.no_sharded)
+
+
 if __name__ == "__main__":
-    run()
+    main()

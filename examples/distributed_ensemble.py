@@ -19,7 +19,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig

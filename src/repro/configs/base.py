@@ -7,8 +7,7 @@ configs/__init__.py resolves ``--arch <id>``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

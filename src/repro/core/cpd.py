@@ -141,7 +141,7 @@ def reconstruct(factor: CPDFactor, tau: jax.Array) -> jax.Array:
     Contracted as (u · diag(τ)) @ vᵀ so XLA lowers it to a rank-r matmul
     (MXU-friendly) instead of materializing r outer products.  Z is produced
     in the factor dtype (bf16 in production: halves perturbation HBM traffic;
-    the add into W still happens in f32 — see estimator._add_scaled).
+    the add into W still happens in f32 — see dispatch.add_scaled).
     """
     u = factor.u
     v = factor.v

@@ -53,11 +53,37 @@ three-pass self-consistency within each mode; it is NOT bitwise across
 modes, and switching ``kernel_mode`` mid-run changes the noise realization
 (never the distribution).  The kernel math itself is still locked bitwise
 against the replayed-stream oracles in ``kernels/ref.py``.
+
+Sharded dispatch
+----------------
+Under a device mesh the Pallas kernels cannot be partitioned by GSPMD (a
+pallas_call has no SPMD rule — XLA would all-gather every sharded leaf to
+run it replicated, exactly the parameter-sized HBM traffic the kernels
+exist to remove).  When the step builder registers a mesh + per-leaf
+``PartitionSpec`` table (:func:`shard_context`, threaded from
+``zo_step.build_zo_train_step``), every kernel-path leaf op instead wraps
+its ops call in ``jax.experimental.shard_map``: each device runs the fused
+kernel on its **local** shard (local-shape pad-and-mask tiling), factor /
+moment operands ride the specs that ``distributed.sharding.
+mstate_shardings`` assigns (u inherits W's row sharding, v the column
+sharding, τ-vectors replicated, dense moments the leaf's spec), and the
+``zo_noise`` counter PRNG is seeded from **global** element coordinates —
+the shard origin derived from the leaf's PartitionSpec and the device's
+mesh position via ``lax.axis_index`` — so the noise stream is bit-identical
+under any mesh layout (1×1, 8×1 FSDP, 2×4, TP-split columns, …) and the
+three Algorithm-1 passes replay the same z on every device.  The XLA path
+never wraps: dense jnp math partitions fine under GSPMD and its
+``jax.random.normal`` draws are a function of the *global* leaf only.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.cpd import (
     CPDFactor,
@@ -81,13 +107,18 @@ KERNEL_METHODS = (
 )
 
 
-def add_scaled(w: jax.Array, z: jax.Array, scale) -> jax.Array:
-    """w + scale·z with the product formed in f32 before the cast back to the
-    weight dtype (keeps ρ·z resolution under bf16 params).  The single
-    source of truth for the XLA-path accumulation numerics — the Pallas
-    kernels implement the same f32-accumulate-then-cast contract in-kernel.
+def add_scaled(w: jax.Array, z: jax.Array, scale, decay=None) -> jax.Array:
+    """decay·w + scale·z with everything formed in f32 before the cast back
+    to the weight dtype (keeps ρ·z resolution under bf16 params).  The
+    single source of truth for the XLA-path accumulation numerics — the
+    Pallas kernels implement the same f32-accumulate-then-cast contract
+    in-kernel.  ``decay`` is the decoupled weight-decay factor 1 − lr·wd on
+    update touches (None ≡ 1.0 — skipped, an exact identity).
     """
-    return (w.astype(jnp.float32) + scale * z.astype(jnp.float32)).astype(w.dtype)
+    wf = w.astype(jnp.float32)
+    if decay is not None:
+        wf = wf * decay
+    return (wf + scale * z.astype(jnp.float32)).astype(w.dtype)
 
 
 def resolve_kernel_mode(mode: str) -> str:
@@ -132,6 +163,107 @@ def use_pallas(cfg) -> bool:
     return resolve_kernel_mode(cfg.kernel_mode) == "pallas"
 
 
+# ---------------------------------------------------------------------------
+# Shard-aware dispatch: mesh + per-leaf PartitionSpec context
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Trace-time sharding context for the kernel dispatch.
+
+    ``specs`` maps leaf path (utils.tree keystr) → the leaf's PartitionSpec
+    on ``mesh`` — the same table ``distributed.sharding.param_spec_table``
+    derives from ``param_shardings``.  Registered by the step builder for
+    the duration of one trace; leaves absent from the table are treated as
+    replicated.
+    """
+
+    mesh: Mesh
+    specs: Mapping[str, P]
+
+
+_SHARD_CTX: Optional[ShardCtx] = None
+
+
+@contextmanager
+def shard_context(mesh: Optional[Mesh], specs: Optional[Mapping[str, P]]):
+    """Register the mesh + leaf-spec table while tracing a sharded step.
+
+    A ``None`` mesh is a no-op (single-device dispatch, the default), so
+    builders can pass their mesh argument through unconditionally.
+    """
+    global _SHARD_CTX
+    prev = _SHARD_CTX
+    _SHARD_CTX = None if mesh is None else ShardCtx(mesh, dict(specs or {}))
+    try:
+        yield
+    finally:
+        _SHARD_CTX = prev
+
+
+def _leaf_mesh_spec(path: str, ndim: int) -> tuple[Optional[Mesh], Optional[P]]:
+    """(mesh, PartitionSpec padded to ndim) for a leaf, or (None, None)."""
+    ctx = _SHARD_CTX
+    if ctx is None:
+        return None, None
+    entries = tuple(ctx.specs.get(path) or ())
+    return ctx.mesh, P(*(entries + (None,) * (ndim - len(entries))))
+
+
+def _global_offsets(mesh: Mesh, spec: P, local_shape: tuple) -> jax.Array:
+    """int32[ndim] global coordinates of this device's shard origin.
+
+    Only meaningful inside shard_map (uses ``lax.axis_index``).  For a dim
+    partitioned over a tuple of mesh axes the shard index follows GSPMD's
+    row-major axis order, so offset = shard_index · local_dim recovers the
+    element's global coordinate.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    offs = []
+    for entry, dim in zip(tuple(spec), local_shape):
+        if entry is None:
+            offs.append(jnp.int32(0))
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        idx = jnp.int32(0)
+        for ax in axes:
+            idx = idx * sizes[ax] + jax.lax.axis_index(ax)
+        offs.append(idx * dim)
+    return jnp.stack(offs)
+
+
+def _shard_call(fn, mesh: Mesh, in_specs, out_specs, *args):
+    """shard_map(fn) with replication checking off (pallas_call has no
+    replication rule; out-spec correctness is locked by the parity tests)."""
+    from repro.distributed.context import compat_shard_map
+
+    return compat_shard_map(fn, mesh, in_specs=in_specs, out_specs=out_specs)(*args)
+
+
+def _factor_specs(spec: P) -> tuple[P, P, P]:
+    """(u, v, τ) PartitionSpecs mirroring a leaf's spec — the same rule as
+    ``distributed.sharding.mstate_shardings``: u inherits the row sharding,
+    v the column sharding, τ/rank vectors shard only over batch dims."""
+    e = tuple(spec)
+    batch = e[:-2]
+    return (
+        P(*batch, e[-2], None),
+        P(*batch, e[-1], None),
+        P(*batch, None),
+    )
+
+
+def _scalar_f32(x) -> jax.Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+def _decay_f32(decay) -> jax.Array:
+    """Concrete f32 decay operand for shard_map (None ≡ no decay ≡ 1.0 —
+    shard_map needs an array, it cannot pass None through an in_spec)."""
+    return jnp.asarray(1.0 if decay is None else decay, jnp.float32)
+
+
 def kernel_eligible(factor: CPDFactor, w: jax.Array) -> bool:
     """Can this (factor, leaf) pair be lowered to the fused TeZO kernels?
 
@@ -160,6 +292,25 @@ def noise_kernel_eligible(w: jax.Array) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _tezo_kernel_call(w, factor, tau, scale, decay, path: str) -> jax.Array:
+    """Fused decay·W + scale·recon(τ) — shard_map'd over the mesh when a
+    shard context is registered, plain ops call otherwise."""
+    mesh, spec = _leaf_mesh_spec(path, w.ndim)
+    scale_a = _scalar_f32(scale)
+    if mesh is None:
+        return ops.tezo_perturb(w, factor.u, factor.v, tau, scale_a, decay=decay)
+    decay_a = _decay_f32(decay)
+    u_s, v_s, t_s = _factor_specs(spec)
+
+    def local_fn(w_l, u_l, v_l, t_l, s_l, d_l):
+        return ops.tezo_perturb(w_l, u_l, v_l, t_l, s_l, decay=d_l)
+
+    return _shard_call(
+        local_fn, mesh, (spec, u_s, v_s, t_s, P(), P()), spec,
+        w, factor.u, factor.v, tau, scale_a, decay_a,
+    )
+
+
 def perturb_leaf(
     w: jax.Array,
     factor: CPDFactor,
@@ -167,14 +318,16 @@ def perturb_leaf(
     scale,
     *,
     use_kernel: bool,
+    path: str = "",
 ) -> jax.Array:
     """W + scale·(u·diag(τ))·vᵀ for one low-rank leaf.
 
-    Kernel path: fused HBM-resident add (Z never materialized).  XLA path:
+    Kernel path: fused HBM-resident add (Z never materialized); under a
+    shard context each device touches only its local shard.  XLA path:
     dense reconstruct + f32 add (the pre-dispatch behaviour).
     """
     if use_kernel and kernel_eligible(factor, w):
-        return ops.tezo_perturb(w, factor.u, factor.v, tau, scale)
+        return _tezo_kernel_call(w, factor, tau, scale, None, path)
     return add_scaled(w, reconstruct(factor, tau), scale)
 
 
@@ -185,16 +338,20 @@ def sgd_update_leaf(
     lr,
     *,
     use_kernel: bool,
+    decay=None,
+    path: str = "",
 ) -> jax.Array:
-    """W − lr·reconstruct(ktau): the TeZO / TeZO-m descent step for one leaf.
+    """W ← decay·W − lr·reconstruct(ktau): the TeZO / TeZO-m descent step.
 
     ``ktau`` is the probe-averaged κτ (plain TeZO) or the τ-space momentum
     (TeZO-m) — either way the update is a scaled rank-r reconstruction, so
-    the kernel path reuses the fused perturb kernel with scale = −lr.
+    the kernel path reuses the fused perturb kernel with scale = −lr;
+    ``decay`` (1 − lr·wd, or None) folds decoupled weight decay into the
+    same pass instead of a separate full-W round-trip.
     """
     if use_kernel and kernel_eligible(factor, w):
-        return ops.tezo_perturb(w, factor.u, factor.v, ktau, -lr)
-    return add_scaled(w, reconstruct(factor, ktau), -lr)
+        return _tezo_kernel_call(w, factor, ktau, -lr, decay, path)
+    return add_scaled(w, reconstruct(factor, ktau), -lr, decay=decay)
 
 
 def adam_update_leaf(
@@ -206,17 +363,38 @@ def adam_update_leaf(
     eps: float,
     *,
     use_kernel: bool,
+    decay=None,
+    path: str = "",
 ) -> jax.Array:
-    """W − lr·M/√(V+ε) with M, V reconstructed from τ-space moments (Eq. 8).
+    """W ← decay·W − lr·M/√(V+ε) with M, V reconstructed from τ-space
+    moments (Eq. 8).
 
     Kernel path: both reconstructions stay in VMEM (one HBM round-trip per W
-    tile instead of materializing two parameter-sized moment buffers).
+    tile instead of materializing two parameter-sized moment buffers), and
+    the decoupled weight decay rides the same pass.
     """
     if use_kernel and kernel_eligible(factor, w):
-        return ops.tezo_adam_update(w, factor.u, factor.v, tau_m, tau_v, lr, eps)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        lr_a = _scalar_f32(lr)
+        if mesh is None:
+            return ops.tezo_adam_update(
+                w, factor.u, factor.v, tau_m, tau_v, lr_a, eps, decay=decay
+            )
+        decay_a = _decay_f32(decay)
+        u_s, v_s, t_s = _factor_specs(spec)
+
+        def local_fn(w_l, u_l, v_l, tm_l, tv_l, lr_l, d_l):
+            return ops.tezo_adam_update(
+                w_l, u_l, v_l, tm_l, tv_l, lr_l, eps, decay=d_l
+            )
+
+        return _shard_call(
+            local_fn, mesh, (spec, u_s, v_s, t_s, t_s, P(), P()), spec,
+            w, factor.u, factor.v, tau_m, tau_v, lr_a, decay_a,
+        )
     m_full = reconstruct(factor, tau_m).astype(jnp.float32)
     v_full = reconstruct_squared(factor, tau_v).astype(jnp.float32)
-    return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr)
+    return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr, decay=decay)
 
 
 # ---------------------------------------------------------------------------
@@ -237,65 +415,137 @@ def _noise_probe_mean(w, key_t, path: str, kappas) -> jax.Array:
     return acc / q
 
 
+def _decayed(w: jax.Array, decay) -> jax.Array:
+    """f32 view of w with the optional decoupled decay factor applied."""
+    wf = w.astype(jnp.float32)
+    return wf if decay is None else wf * decay
+
+
 def noise_perturb_leaf(
     w: jax.Array, key_t, path: str, probe: int, scale, *, use_kernel: bool
 ) -> jax.Array:
     """W + scale·z, z ~ N(0, I) — MeZO semantics for one leaf.
 
     Kernel path: z generated on-chip per tile (counter PRNG), one HBM
-    round-trip.  XLA path: ``jax.random.normal`` dense buffer + f32 add.
-    The two streams differ (statistical parity only) but each is a pure
-    function of (key_t, path, probe), so all three Algorithm-1 passes and
-    the update replay the same z within a mode.
+    round-trip; under a shard context the per-tile counters carry *global*
+    element coordinates, so every mesh layout draws the same z.  XLA path:
+    ``jax.random.normal`` dense buffer + f32 add.  The two streams differ
+    (statistical parity only) but each is a pure function of (key_t, path,
+    probe, global coords), so all three Algorithm-1 passes and the update
+    replay the same z within a mode.
     """
     if use_kernel and noise_kernel_eligible(w):
-        return ops.noise_perturb(w, ops.leaf_seed(key_t, path), scale, probe=probe)
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        scale_a = _scalar_f32(scale)
+        if mesh is None:
+            return ops.noise_perturb(w, seed, scale_a, probe=probe)
+
+        def local_fn(w_l, seed_l, s_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_perturb(w_l, seed_l, s_l, probe=probe, offsets=offs)
+
+        return _shard_call(
+            local_fn, mesh, (spec, P(), P()), spec, w, seed, scale_a
+        )
     return add_scaled(w, dense_noise(w, key_t, path, probe), scale)
 
 
 def noise_sgd_update_leaf(
-    w: jax.Array, key_t, path: str, kappas, lr, *, use_kernel: bool
+    w: jax.Array, key_t, path: str, kappas, lr, *, use_kernel: bool, decay=None
 ) -> jax.Array:
-    """W − lr·(mean_i κ_i z_i): the MeZO descent step for one leaf, probe
-    mean fused in-kernel on the pallas path."""
+    """W ← decay·W − lr·(mean_i κ_i z_i): the MeZO descent step for one
+    leaf, probe mean and weight decay fused in-kernel on the pallas path."""
     if use_kernel and noise_kernel_eligible(w):
-        return ops.noise_update_sgd(w, ops.leaf_seed(key_t, path), kappas, lr)
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        lr_a = _scalar_f32(lr)
+        if mesh is None:
+            return ops.noise_update_sgd(w, seed, kappas, lr_a, decay=decay)
+        decay_a = _decay_f32(decay)
+
+        def local_fn(w_l, seed_l, kap_l, lr_l, d_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_update_sgd(
+                w_l, seed_l, kap_l, lr_l, decay=d_l, offsets=offs
+            )
+
+        return _shard_call(
+            local_fn, mesh, (spec, P(), P(), P(), P()), spec,
+            w, seed, kappas, lr_a, decay_a,
+        )
     g = _noise_probe_mean(w, key_t, path, kappas)
-    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+    return (_decayed(w, decay) - lr * g).astype(w.dtype)
 
 
 def noise_momentum_update_leaf(
-    w: jax.Array, m_buf, key_t, path: str, kappas, lr, beta1, *, use_kernel: bool
+    w: jax.Array, m_buf, key_t, path: str, kappas, lr, beta1, *,
+    use_kernel: bool, decay=None,
 ):
-    """Dense momentum step for one leaf: M ← β₁M + (1−β₁)g; W ← W − lr·M.
+    """Dense momentum step for one leaf: M ← β₁M + (1−β₁)g; W ← decay·W −
+    lr·M.
 
-    Returns (w', m').  Kernel path fuses the probe mean, the moment update
-    and the weight update into one pass over (W, M)."""
+    Returns (w', m').  Kernel path fuses the probe mean, the moment update,
+    the weight decay and the weight update into one pass over (W, M)."""
     if use_kernel and noise_kernel_eligible(w):
-        return ops.noise_update_momentum(
-            w, m_buf, ops.leaf_seed(key_t, path), kappas, lr, beta1
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        lr_a = _scalar_f32(lr)
+        if mesh is None:
+            return ops.noise_update_momentum(
+                w, m_buf, seed, kappas, lr_a, beta1, decay=decay
+            )
+        decay_a = _decay_f32(decay)
+
+        def local_fn(w_l, m_l, seed_l, kap_l, lr_l, d_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_update_momentum(
+                w_l, m_l, seed_l, kap_l, lr_l, beta1, decay=d_l, offsets=offs
+            )
+
+        return _shard_call(
+            local_fn, mesh, (spec, spec, P(), P(), P(), P()), (spec, spec),
+            w, m_buf, seed, kappas, lr_a, decay_a,
         )
     g = _noise_probe_mean(w, key_t, path, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
-    return (w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
+    return (_decayed(w, decay) - lr * m_new).astype(w.dtype), m_new
 
 
 def noise_adam_update_leaf(
     w: jax.Array, m_buf, v_buf, key_t, path: str, kappas, lr,
-    beta1, beta2, eps, *, use_kernel: bool,
+    beta1, beta2, eps, *, use_kernel: bool, decay=None,
 ):
     """Dense Adam step for one leaf; returns (w', m', v').  Kernel path
     makes one HBM round-trip per buffer instead of materializing g."""
     if use_kernel and noise_kernel_eligible(w):
-        return ops.noise_update_adam(
-            w, m_buf, v_buf, ops.leaf_seed(key_t, path), kappas,
-            lr, beta1, beta2, eps,
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        lr_a = _scalar_f32(lr)
+        if mesh is None:
+            return ops.noise_update_adam(
+                w, m_buf, v_buf, seed, kappas, lr_a, beta1, beta2, eps,
+                decay=decay,
+            )
+        decay_a = _decay_f32(decay)
+
+        def local_fn(w_l, m_l, v_l, seed_l, kap_l, lr_l, d_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_update_adam(
+                w_l, m_l, v_l, seed_l, kap_l, lr_l, beta1, beta2, eps,
+                decay=d_l, offsets=offs,
+            )
+
+        return _shard_call(
+            local_fn, mesh,
+            (spec, spec, spec, P(), P(), P(), P()), (spec, spec, spec),
+            w, m_buf, v_buf, seed, kappas, lr_a, decay_a,
         )
     g = _noise_probe_mean(w, key_t, path, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     v_new = beta2 * v_buf + (1.0 - beta2) * g * g
     upd = m_new * jax.lax.rsqrt(v_new + eps)
-    return (w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new, v_new
+    return (_decayed(w, decay) - lr * upd).astype(w.dtype), m_new, v_new
 
 
 # ---------------------------------------------------------------------------
@@ -303,32 +553,73 @@ def noise_adam_update_leaf(
 # ---------------------------------------------------------------------------
 
 
-def lozo_perturb_leaf(w: jax.Array, u, v, scale, *, use_kernel: bool) -> jax.Array:
-    """W + scale·U·Vᵀ (LOZO).  Kernel path reuses the tezo tiling (τ ≡ 1)."""
-    if use_kernel and w.ndim >= 2:
-        return ops.lozo_perturb(w, u, v, scale)
-    return add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v), scale)
-
-
-def lozo_update_leaf(w: jax.Array, u, kv, lr, *, use_kernel: bool) -> jax.Array:
-    """W − lr·U·(kv)ᵀ where ``kv`` is the probe-averaged κ·V (or the LOZO-m
-    factored momentum) — the whole gradient signal lives in the [n, r]
-    factor, so the update is one fused rank-r pass."""
-    return lozo_perturb_leaf(w, u, kv, -lr, use_kernel=use_kernel)
-
-
-def subzo_perturb_leaf(
-    w: jax.Array, u, v, sigma, scale, *, use_kernel: bool
+def lozo_perturb_leaf(
+    w: jax.Array, u, v, scale, *, use_kernel: bool, decay=None, path: str = ""
 ) -> jax.Array:
-    """W + scale·U·Σ·Vᵀ (SubZO)."""
+    """W + scale·U·Vᵀ (LOZO).  Kernel path reuses the tezo tiling (τ ≡ 1);
+    under a shard context U rides the leaf's row sharding and V the column
+    sharding, same as the stored CPD factors."""
     if use_kernel and w.ndim >= 2:
-        return ops.subzo_perturb(w, u, v, sigma, scale)
-    return add_scaled(
-        w, jnp.einsum("...mr,...rk,...nk->...mn", u, sigma, v), scale
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        scale_a = _scalar_f32(scale)
+        if mesh is None:
+            return ops.lozo_perturb(w, u, v, scale_a, decay=decay)
+        decay_a = _decay_f32(decay)
+        u_s, v_s, _ = _factor_specs(spec)
+
+        def local_fn(w_l, u_l, v_l, s_l, d_l):
+            return ops.lozo_perturb(w_l, u_l, v_l, s_l, decay=d_l)
+
+        return _shard_call(
+            local_fn, mesh, (spec, u_s, v_s, P(), P()), spec,
+            w, u, v, scale_a, decay_a,
+        )
+    return add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v), scale, decay=decay)
+
+
+def lozo_update_leaf(
+    w: jax.Array, u, kv, lr, *, use_kernel: bool, decay=None, path: str = ""
+) -> jax.Array:
+    """W ← decay·W − lr·U·(kv)ᵀ where ``kv`` is the probe-averaged κ·V (or
+    the LOZO-m factored momentum) — the whole gradient signal lives in the
+    [n, r] factor, so the update is one fused rank-r pass."""
+    return lozo_perturb_leaf(
+        w, u, kv, -lr, use_kernel=use_kernel, decay=decay, path=path
     )
 
 
-def subzo_update_leaf(w: jax.Array, u, v, sbar, lr, *, use_kernel: bool) -> jax.Array:
-    """W − lr·U·(mean_i κ_i Σ_i)·Vᵀ: the probe mean collapses onto the tiny
-    [r, r] core, then one fused rank-r pass applies it."""
-    return subzo_perturb_leaf(w, u, v, sbar, -lr, use_kernel=use_kernel)
+def subzo_perturb_leaf(
+    w: jax.Array, u, v, sigma, scale, *, use_kernel: bool, decay=None,
+    path: str = "",
+) -> jax.Array:
+    """W + scale·U·Σ·Vᵀ (SubZO).  The tiny [r, r] Σ core is replicated
+    across the mesh; U/V ride the leaf's row/column sharding."""
+    if use_kernel and w.ndim >= 2:
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        scale_a = _scalar_f32(scale)
+        if mesh is None:
+            return ops.subzo_perturb(w, u, v, sigma, scale_a, decay=decay)
+        decay_a = _decay_f32(decay)
+        u_s, v_s, _ = _factor_specs(spec)
+        sig_s = P(*tuple(spec)[:-2], None, None)
+
+        def local_fn(w_l, u_l, v_l, sig_l, s_l, d_l):
+            return ops.subzo_perturb(w_l, u_l, v_l, sig_l, s_l, decay=d_l)
+
+        return _shard_call(
+            local_fn, mesh, (spec, u_s, v_s, sig_s, P(), P()), spec,
+            w, u, v, sigma, scale_a, decay_a,
+        )
+    return add_scaled(
+        w, jnp.einsum("...mr,...rk,...nk->...mn", u, sigma, v), scale, decay=decay
+    )
+
+
+def subzo_update_leaf(
+    w: jax.Array, u, v, sbar, lr, *, use_kernel: bool, decay=None, path: str = ""
+) -> jax.Array:
+    """W ← decay·W − lr·U·(mean_i κ_i Σ_i)·Vᵀ: the probe mean collapses onto
+    the tiny [r, r] core, then one fused rank-r pass applies it."""
+    return subzo_perturb_leaf(
+        w, u, v, sbar, -lr, use_kernel=use_kernel, decay=decay, path=path
+    )

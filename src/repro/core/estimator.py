@@ -51,7 +51,7 @@ test_zo_noise.py`` locks the noise kernels against replayed-stream oracles.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
@@ -112,15 +112,16 @@ class ZOConfig:
         raise ValueError(f"unknown lr_schedule {self.lr_schedule}")
 
 
-def _apply_wd(w: jax.Array, lr: jax.Array, cfg: ZOConfig) -> jax.Array:
+def _decay_factor(lr: jax.Array, cfg: ZOConfig):
+    """Decoupled weight-decay factor 1 − lr·wd for the update touch, or None.
+
+    Folded into the fused update kernels' scalar params (and the XLA path's
+    f32 accumulation) by the dispatch leaf ops — no separate full-W
+    elementwise pass.
+    """
     if cfg.weight_decay == 0.0:
-        return w
-    return (w.astype(jnp.float32) * (1.0 - lr * cfg.weight_decay)).astype(w.dtype)
-
-
-# Shared with the dispatch layer so the XLA-path accumulation numerics have
-# exactly one definition (see dispatch.add_scaled).
-_add_scaled = dispatch.add_scaled
+        return None
+    return 1.0 - lr * cfg.weight_decay
 
 
 class ZOMethod:
@@ -178,7 +179,7 @@ class TeZO(ZOMethod):
             if path in factors:
                 tau = sample_tau(factors[path], key_t, path, probe)
                 return dispatch.perturb_leaf(
-                    w, factors[path], tau, scale, use_kernel=use_kernel
+                    w, factors[path], tau, scale, use_kernel=use_kernel, path=path
                 )
             return dispatch.noise_perturb_leaf(
                 w, key_t, path, probe, scale, use_kernel=use_kernel
@@ -197,17 +198,17 @@ class TeZO(ZOMethod):
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
 
         def f(path, w):
             if path in factors:
                 ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.sgd_update_leaf(
-                    w, factors[path], ktau, lr, use_kernel=use_kernel
+                    w, factors[path], ktau, lr,
+                    use_kernel=use_kernel, decay=decay, path=path,
                 )
-            w = _apply_wd(w, lr, cfg)
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
             )
 
         return map_with_path(f, params), mstate
@@ -240,6 +241,7 @@ class TeZOMomentum(TeZO):
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
         new_tau_m = dict(mstate["tau_m"])
         new_dense_m = dict(mstate["dense_m"])
 
@@ -248,14 +250,13 @@ class TeZOMomentum(TeZO):
                 ktau = self._probe_mean_ktau(factors[path], path, key_t, kappas)
                 tm = cfg.beta1 * mstate["tau_m"][path] + (1.0 - cfg.beta1) * ktau
                 new_tau_m[path] = tm
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.sgd_update_leaf(
-                    w, factors[path], tm, lr, use_kernel=use_kernel
+                    w, factors[path], tm, lr,
+                    use_kernel=use_kernel, decay=decay, path=path,
                 )
-            w = _apply_wd(w, lr, cfg)
             w, dm = dispatch.noise_momentum_update_leaf(
                 w, mstate["dense_m"][path], key_t, path, kappas, lr,
-                cfg.beta1, use_kernel=use_kernel,
+                cfg.beta1, use_kernel=use_kernel, decay=decay,
             )
             new_dense_m[path] = dm
             return w
@@ -301,6 +302,7 @@ class TeZOAdam(TeZOMomentum):
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
         new_tau_m = dict(mstate["tau_m"])
         new_tau_v = dict(mstate["tau_v"])
         new_dense_m = dict(mstate["dense_m"])
@@ -315,15 +317,14 @@ class TeZOAdam(TeZOMomentum):
                 tv = cfg.beta2 * mstate["tau_v"][path] + (1.0 - cfg.beta2) * k2tau2
                 new_tau_m[path] = tm
                 new_tau_v[path] = tv
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.adam_update_leaf(
-                    w, fac, tm, tv, lr, cfg.eps, use_kernel=use_kernel
+                    w, fac, tm, tv, lr, cfg.eps,
+                    use_kernel=use_kernel, decay=decay, path=path,
                 )
-            w = _apply_wd(w, lr, cfg)
             w, dm, dv = dispatch.noise_adam_update_leaf(
                 w, mstate["dense_m"][path], mstate["dense_v"][path], key_t,
                 path, kappas, lr, cfg.beta1, cfg.beta2, cfg.eps,
-                use_kernel=use_kernel,
+                use_kernel=use_kernel, decay=decay,
             )
             new_dense_m[path] = dm
             new_dense_v[path] = dv
@@ -361,11 +362,11 @@ class MeZO(ZOMethod):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
 
         def f(path, w):
-            w = _apply_wd(w, lr, cfg)
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
             )
 
         return map_with_path(f, params), mstate
@@ -386,13 +387,13 @@ class MeZOMomentum(MeZO):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
         new_m = dict(mstate["m"])
 
         def f(path, w):
-            w = _apply_wd(w, lr, cfg)
             w, dm = dispatch.noise_momentum_update_leaf(
                 w, mstate["m"][path], key_t, path, kappas, lr, cfg.beta1,
-                use_kernel=use_kernel,
+                use_kernel=use_kernel, decay=decay,
             )
             new_m[path] = dm
             return w
@@ -417,14 +418,15 @@ class MeZOAdam(MeZO):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
         new_m = dict(mstate["m"])
         new_v = dict(mstate["v"])
 
         def f(path, w):
-            w = _apply_wd(w, lr, cfg)
             w, dm, dv = dispatch.noise_adam_update_leaf(
                 w, mstate["m"][path], mstate["v"][path], key_t, path, kappas,
-                lr, cfg.beta1, cfg.beta2, cfg.eps, use_kernel=use_kernel,
+                lr, cfg.beta1, cfg.beta2, cfg.eps,
+                use_kernel=use_kernel, decay=decay,
             )
             new_m[path] = dm
             new_v[path] = dv
@@ -479,7 +481,7 @@ class LOZO(ZOMethod):
             if is_lowrank_leaf(path, w):
                 u, v = self._uv(path, w, mstate, key_t, probe, cfg, step)
                 return dispatch.lozo_perturb_leaf(
-                    w, u, v, scale, use_kernel=use_kernel
+                    w, u, v, scale, use_kernel=use_kernel, path=path
                 )
             return dispatch.noise_perturb_leaf(
                 w, key_t, path, probe, scale, use_kernel=use_kernel
@@ -499,18 +501,17 @@ class LOZO(ZOMethod):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
 
         def f(path, w):
             if is_lowrank_leaf(path, w):
                 u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
                 kv = self._probe_mean_kv(path, w, key_t, kappas, r)
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.lozo_update_leaf(
-                    w, u, kv, lr, use_kernel=use_kernel
+                    w, u, kv, lr, use_kernel=use_kernel, decay=decay, path=path
                 )
-            w = _apply_wd(w, lr, cfg)
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
             )
 
         return map_with_path(f, params), mstate
@@ -551,6 +552,7 @@ class LOZOMomentum(LOZO):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
         new_vm = dict(mstate["v_m"])
 
         def f(path, w):
@@ -559,14 +561,12 @@ class LOZOMomentum(LOZO):
                 kv = self._probe_mean_kv(path, w, key_t, kappas, r)
                 vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * kv
                 new_vm[path] = vm
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.lozo_update_leaf(
-                    w, u, vm, lr, use_kernel=use_kernel
+                    w, u, vm, lr, use_kernel=use_kernel, decay=decay, path=path
                 )
-            w = _apply_wd(w, lr, cfg)
             w, vm = dispatch.noise_momentum_update_leaf(
                 w, mstate["v_m"][path], key_t, path, kappas, lr, cfg.beta1,
-                use_kernel=use_kernel,
+                use_kernel=use_kernel, decay=decay,
             )
             new_vm[path] = vm
             return w
@@ -651,7 +651,7 @@ class SubZO(ZOMethod):
                 u, v = mstate["U"][path], mstate["V"][path]
                 s = self._sigma(path, key_t, probe, u.shape[-1], u.shape[:-2])
                 return dispatch.subzo_perturb_leaf(
-                    w, u, v, s, scale, use_kernel=use_kernel
+                    w, u, v, s, scale, use_kernel=use_kernel, path=path
                 )
             return dispatch.noise_perturb_leaf(
                 w, key_t, path, probe, scale, use_kernel=use_kernel
@@ -661,6 +661,7 @@ class SubZO(ZOMethod):
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
+        decay = _decay_factor(lr, cfg)
 
         def f(path, w):
             if path in mstate["U"]:
@@ -668,13 +669,12 @@ class SubZO(ZOMethod):
                 sbar = self._probe_mean_sigma(
                     path, key_t, kappas, u.shape[-1], u.shape[:-2]
                 )
-                w = _apply_wd(w, lr, cfg)
                 return dispatch.subzo_update_leaf(
-                    w, u, v, sbar, lr, use_kernel=use_kernel
+                    w, u, v, sbar, lr, use_kernel=use_kernel, decay=decay,
+                    path=path,
                 )
-            w = _apply_wd(w, lr, cfg)
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
             )
 
         return map_with_path(f, params), mstate

@@ -23,8 +23,6 @@ from __future__ import annotations
 import re
 from typing import Any, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cpd import is_lowrank_leaf

@@ -23,15 +23,23 @@ build_zo_train_step validates the mode eagerly so a typo fails at build time,
 not inside the jitted step.  Note the MeZO-family caveat: the pallas and xla
 lowerings draw *different* (equally distributed) noise streams, so switching
 kernel_mode changes that baseline's sample path, not its statistics.
+
+Sharded execution: pass ``mesh`` + ``param_specs`` (the per-leaf
+PartitionSpec table from ``distributed.sharding.param_spec_table``) and the
+kernel path wraps each leaf op in shard_map over that mesh — local-shard
+Pallas kernels with a mesh-layout-invariant noise stream (see the Sharded
+dispatch section of repro.core.dispatch).  Without them the Pallas path
+assumes unsharded leaves, exactly as before.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any, Callable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.core.dispatch import resolve_kernel_mode
 from repro.core.estimator import ZOConfig, get_method
 
@@ -65,45 +73,55 @@ def init_zo_state(
 def build_zo_train_step(
     loss_fn: Callable[[Any, Any], jax.Array],
     cfg: ZOConfig,
+    *,
+    mesh=None,
+    param_specs: Optional[Mapping[str, Any]] = None,
 ) -> Callable[[ZOTrainState, Any], tuple[ZOTrainState, dict]]:
     """loss_fn(params, batch) -> scalar f32 loss (global mean).
 
     Under pjit with batch sharded over the data axis, the scalar reduction in
     loss_fn IS the entire data-parallel gradient communication (DESIGN §4:
     scalar-κ DP) — GSPMD emits one f32 all-reduce for it.
+
+    ``mesh`` + ``param_specs`` (path → PartitionSpec; see ``distributed.
+    sharding.param_spec_table``) enable shard-aware kernel dispatch: each
+    leaf's fused perturb/update runs under shard_map on its local shard.
+    They are advisory for the XLA path (GSPMD partitions dense jnp math by
+    itself) and required for a correct + local Pallas path on a mesh.
     """
     method = get_method(cfg.method)
     resolve_kernel_mode(cfg.kernel_mode)  # fail fast on unknown modes
 
     def step_fn(state: ZOTrainState, batch: Any) -> tuple[ZOTrainState, dict]:
-        key_t = jax.random.fold_in(state.base_key, state.step)
-        mstate = method.begin_step(state.mstate, key_t, state.step, cfg)
-        lr = cfg.schedule(state.step)
+        with dispatch.shard_context(mesh, param_specs):
+            key_t = jax.random.fold_in(state.base_key, state.step)
+            mstate = method.begin_step(state.mstate, key_t, state.step, cfg)
+            lr = cfg.schedule(state.step)
 
-        params = state.params
-        kappas = []
-        f_plus_acc = jnp.zeros((), jnp.float32)
-        f_minus_acc = jnp.zeros((), jnp.float32)
-        for probe in range(cfg.q_probes):
-            if cfg.restore_mode == "inplace":
-                p = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
-                f_plus = loss_fn(p, batch)
-                p = method.perturb(p, mstate, key_t, probe, -2.0 * cfg.rho, cfg, state.step)
-                f_minus = loss_fn(p, batch)
-                params = method.perturb(p, mstate, key_t, probe, +cfg.rho, cfg, state.step)
-            else:  # exact: branch both sides off the original params
-                p_plus = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
-                f_plus = loss_fn(p_plus, batch)
-                p_minus = method.perturb(params, mstate, key_t, probe, -cfg.rho, cfg, state.step)
-                f_minus = loss_fn(p_minus, batch)
-            kappas.append((f_plus - f_minus) / (2.0 * cfg.rho))
-            f_plus_acc = f_plus_acc + f_plus
-            f_minus_acc = f_minus_acc + f_minus
+            params = state.params
+            kappas = []
+            f_plus_acc = jnp.zeros((), jnp.float32)
+            f_minus_acc = jnp.zeros((), jnp.float32)
+            for probe in range(cfg.q_probes):
+                if cfg.restore_mode == "inplace":
+                    p = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
+                    f_plus = loss_fn(p, batch)
+                    p = method.perturb(p, mstate, key_t, probe, -2.0 * cfg.rho, cfg, state.step)
+                    f_minus = loss_fn(p, batch)
+                    params = method.perturb(p, mstate, key_t, probe, +cfg.rho, cfg, state.step)
+                else:  # exact: branch both sides off the original params
+                    p_plus = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
+                    f_plus = loss_fn(p_plus, batch)
+                    p_minus = method.perturb(params, mstate, key_t, probe, -cfg.rho, cfg, state.step)
+                    f_minus = loss_fn(p_minus, batch)
+                kappas.append((f_plus - f_minus) / (2.0 * cfg.rho))
+                f_plus_acc = f_plus_acc + f_plus
+                f_minus_acc = f_minus_acc + f_minus
 
-        kappa_vec = jnp.stack(kappas).astype(jnp.float32)
-        params, mstate = method.update(
-            params, mstate, key_t, kappa_vec, lr, cfg, state.step
-        )
+            kappa_vec = jnp.stack(kappas).astype(jnp.float32)
+            params, mstate = method.update(
+                params, mstate, key_t, kappa_vec, lr, cfg, state.step
+            )
 
         new_state = ZOTrainState(
             params=params,

@@ -4,6 +4,7 @@ from repro.distributed.sharding import (
     cache_shardings,
     mstate_shardings,
     param_shardings,
+    param_spec_table,
     spec_for_axes,
     zo_state_shardings,
 )

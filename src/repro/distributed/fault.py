@@ -25,7 +25,7 @@ What a 1000-node ZO fine-tuning deployment needs, and what we implement:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

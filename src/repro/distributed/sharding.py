@@ -24,7 +24,6 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.cpd import CPDFactor
@@ -103,6 +102,22 @@ def _axes_by_path(axes_tree: Any) -> dict[str, tuple]:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def param_spec_table(shardings: Any) -> dict[str, P]:
+    """{leaf path → PartitionSpec} from a NamedSharding tree.
+
+    The table the shard-aware kernel dispatch consumes (core.dispatch.
+    shard_context): paths are utils.tree keystr strings, matching the leaf
+    paths the estimator hands to the dispatch leaf ops.  Build it from
+    ``param_shardings(...)`` (or ``zo_state_shardings(...).params``) so the
+    dispatch-side specs are — by construction — the shardings the jitted
+    step places the params with.
+    """
+    from jax.tree_util import keystr, tree_flatten_with_path
+
+    flat, _ = tree_flatten_with_path(shardings)
+    return {keystr(path): s.spec for path, s in flat}
 
 
 def mstate_shardings(mesh: Mesh, axes_tree: Any, mstate_abs: Any) -> Any:

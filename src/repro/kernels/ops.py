@@ -26,6 +26,13 @@ dim < 8) always stay on the dense jnp path — see dispatch's eligibility
 predicates.  ``input_output_aliases`` inside the kernels keeps the three
 Algorithm-1 perturbation passes in-place in HBM (for padded leaves the pad
 copy breaks aliasing; aligned leaves — the common case — stay in-place).
+
+Sharded dispatch hooks: the noise wrappers take ``offsets`` — the global
+coordinates of this array's origin when it is one device's shard of a
+mesh-partitioned leaf (core.dispatch derives them inside shard_map) — so
+the counter streams stay functions of the *global* element; update wrappers
+take ``decay`` (the decoupled weight-decay factor 1 − lr·wd) and fold it
+into the kernels' scalar params instead of a separate full-W pass.
 """
 from __future__ import annotations
 
@@ -166,10 +173,21 @@ def _crop(out, m: int, n: int):
 # ---------------------------------------------------------------------------
 
 
-def tezo_perturb(w, u, v, tau, scale, *, pad_rank: bool = True):
-    """W + scale·(u·diag(τ))·vᵀ for 2-D or leading-batched W."""
+def _decay_scalar(decay):
+    """Normalize the optional weight-decay factor to a kernel scalar."""
+    return 1.0 if decay is None else decay
+
+
+def tezo_perturb(w, u, v, tau, scale, *, decay=None, pad_rank: bool = True):
+    """decay·W + scale·(u·diag(τ))·vᵀ for 2-D or leading-batched W.
+
+    ``decay`` is the decoupled weight-decay factor 1 − lr·wd, fused into the
+    same HBM pass on update touches; None (≡ 1.0) on perturbation touches.
+    """
     if w.ndim > 2:
-        fn = functools.partial(tezo_perturb, scale=scale, pad_rank=pad_rank)
+        fn = functools.partial(
+            tezo_perturb, scale=scale, decay=decay, pad_rank=pad_rank
+        )
         return jax.vmap(fn)(w, u, v, tau)
     if pad_rank and not _interpret():
         u, v, tau = _pad_rank(u, v, tau)
@@ -177,14 +195,18 @@ def tezo_perturb(w, u, v, tau, scale, *, pad_rank: bool = True):
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = _perturb(
         _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
-        tau, scale, bm=bm, bn=bn, interpret=_interpret(),
+        tau, scale, _decay_scalar(decay), bm=bm, bn=bn, interpret=_interpret(),
     )
     return _crop(out, m, n)
 
 
-def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = True):
+def tezo_adam_update(
+    w, u, v, tau_m, tau_v, lr, eps=1e-5, *, decay=None, pad_rank: bool = True
+):
     if w.ndim > 2:
-        fn = functools.partial(tezo_adam_update, lr=lr, eps=eps, pad_rank=pad_rank)
+        fn = functools.partial(
+            tezo_adam_update, lr=lr, eps=eps, decay=decay, pad_rank=pad_rank
+        )
         return jax.vmap(fn)(w, u, v, tau_m, tau_v)
     if pad_rank and not _interpret():
         u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
@@ -192,7 +214,8 @@ def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = Tr
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = _adam(
         _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
-        tau_m, tau_v, lr, eps, bm=bm, bn=bn, interpret=_interpret(),
+        tau_m, tau_v, lr, eps, _decay_scalar(decay),
+        bm=bm, bn=bn, interpret=_interpret(),
     )
     return _crop(out, m, n)
 
@@ -202,61 +225,88 @@ def tezo_adam_update(w, u, v, tau_m, tau_v, lr, eps=1e-5, *, pad_rank: bool = Tr
 # ---------------------------------------------------------------------------
 
 
-def _batch_seeds(seed, batch: int):
+def _batch_seeds(seed, batch: int, offset=None):
     """Distinct Threefry key per leading-batch slice.
 
-    Derived by encrypting the slice index under the parent key — NOT by
-    XOR-ing it in, which is commutative: nested leading dims (e.g. a
+    Derived by encrypting the *global* slice index under the parent key —
+    NOT by XOR-ing it in, which is commutative: nested leading dims (e.g. a
     [L, E, m, n] expert stack) peel one dim per recursion, and k1^i^j would
     collide for slices (i, j) and (j, i).  Re-keying through the cipher
     makes each nesting level's derivation injective and order-sensitive.
+    ``offset`` is the global index of local slice 0 when the leading dim is
+    sharded over the mesh (see core.dispatch) — None/0 when unsharded.
     """
     idx = jnp.arange(batch, dtype=jnp.uint32)
+    if offset is not None:
+        idx = idx + jnp.asarray(offset, jnp.int32).astype(jnp.uint32)
     s0, s1 = zo_noise.threefry2x32(
         seed[0], seed[1], idx, jnp.uint32(0x5EED51CE)
     )
     return jnp.stack([s0, s1], axis=-1)
 
 
-def noise_perturb(w, seed, scale, *, probe: int = 0):
+def _split_offsets(offsets):
+    """(leading-dim offset, remaining offsets) for one vmap recursion level."""
+    if offsets is None:
+        return None, None
+    return offsets[0], offsets[1:]
+
+
+def _noise_base(offsets):
+    """int32[2] global (row0, col0) for the 2-D base case, or None."""
+    if offsets is None:
+        return None
+    return offsets[-2:].astype(jnp.int32)
+
+
+def noise_perturb(w, seed, scale, *, probe: int = 0, offsets=None):
     """W + scale·z with z ~ N(0, I) generated on-chip (counter PRNG).
 
     ``seed`` is the uint32[2] leaf key from ``leaf_seed(key_t, path)``; the
-    draw is a pure function of (seed, probe, element coords) so the three
-    Algorithm-1 passes replay it exactly.
+    draw is a pure function of (seed, probe, *global* element coords) so the
+    three Algorithm-1 passes replay it exactly.  ``offsets`` (int32[w.ndim])
+    holds the global coordinates of this array's origin when ``w`` is one
+    device's shard of a mesh-partitioned leaf — the stream is then identical
+    to the unsharded one, element for element.
     """
     if w.ndim > 2:
         lead = w.shape[0]
-        fn = functools.partial(noise_perturb, scale=scale, probe=probe)
-        return jax.vmap(fn)(w, _batch_seeds(seed, lead))
+        off0, rest = _split_offsets(offsets)
+        fn = functools.partial(noise_perturb, scale=scale, probe=probe, offsets=rest)
+        return jax.vmap(fn)(w, _batch_seeds(seed, lead, off0))
     m, n = w.shape
     assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
     assert 0 <= probe < zo_noise.MAX_PROBES, (probe, "probe id must fit 8 bits")
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = zo_noise.noise_perturb(
-        _pad_w(w, m_pad, n_pad), seed, scale,
+        _pad_w(w, m_pad, n_pad), seed, scale, base=_noise_base(offsets),
         probe=probe, bm=bm, bn=bn, interpret=_interpret(),
     )
     return _crop(out, m, n)
 
 
-def _noise_update(w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant):
+def _noise_update(
+    w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant, offsets=None
+):
     if w.ndim > 2:
         lead = w.shape[0]
-        seeds = _batch_seeds(seed, lead)
+        off0, rest = _split_offsets(offsets)
+        seeds = _batch_seeds(seed, lead, off0)
         if variant == "sgd":
             return jax.vmap(
-                lambda wi, si: _noise_update(wi, si, kappas, hyp, variant=variant)
+                lambda wi, si: _noise_update(
+                    wi, si, kappas, hyp, variant=variant, offsets=rest
+                )
             )(w, seeds)
         if variant == "momentum":
             return jax.vmap(
                 lambda wi, si, mi: _noise_update(
-                    wi, si, kappas, hyp, mi, variant=variant
+                    wi, si, kappas, hyp, mi, variant=variant, offsets=rest
                 )
             )(w, seeds, m_buf)
         return jax.vmap(
             lambda wi, si, mi, vi: _noise_update(
-                wi, si, kappas, hyp, mi, vi, variant=variant
+                wi, si, kappas, hyp, mi, vi, variant=variant, offsets=rest
             )
         )(w, seeds, m_buf, v_buf)
     m, n = w.shape
@@ -268,34 +318,48 @@ def _noise_update(w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant):
         pad(w), seed, kappas, hyp,
         None if m_buf is None else pad(m_buf),
         None if v_buf is None else pad(v_buf),
+        base=_noise_base(offsets),
         variant=variant, bm=bm, bn=bn, interpret=_interpret(),
     )
     return tuple(_crop(o, m, n) for o in out)
 
 
-def noise_update_sgd(w, seed, kappas, lr):
-    """W − lr·(mean_i κ_i z_i): probe mean and update fused in one pass."""
-    hyp = jnp.stack([jnp.asarray(lr, jnp.float32)] + [jnp.float32(0.0)] * 3)
-    return _noise_update(w, seed, kappas, hyp, variant="sgd")[0]
-
-
-def noise_update_momentum(w, m_buf, seed, kappas, lr, beta1):
-    """Fused M ← β₁M + (1−β₁)g; W ← W − lr·M.  Returns (w', m')."""
-    hyp = jnp.stack([
-        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
-        jnp.float32(0.0), jnp.float32(0.0),
-    ])
-    return _noise_update(w, seed, kappas, hyp, m_buf, variant="momentum")
-
-
-def noise_update_adam(w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps):
-    """Fused dense-Adam: both moment buffers ride the W grid (one HBM
-    round-trip each instead of materializing g).  Returns (w', m', v')."""
-    hyp = jnp.stack([
+def _noise_hyp(lr, beta1=0.0, beta2=0.0, eps=0.0, decay=None):
+    """[lr, β₁, β₂, ε, decay] f32 scalar block for the fused update kernels."""
+    return jnp.stack([
         jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
         jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(_decay_scalar(decay), jnp.float32),
     ])
-    return _noise_update(w, seed, kappas, hyp, m_buf, v_buf, variant="adam")
+
+
+def noise_update_sgd(w, seed, kappas, lr, *, decay=None, offsets=None):
+    """W ← decay·W − lr·(mean_i κ_i z_i): probe mean, decoupled weight decay
+    and update fused in one pass."""
+    hyp = _noise_hyp(lr, decay=decay)
+    return _noise_update(w, seed, kappas, hyp, variant="sgd", offsets=offsets)[0]
+
+
+def noise_update_momentum(
+    w, m_buf, seed, kappas, lr, beta1, *, decay=None, offsets=None
+):
+    """Fused M ← β₁M + (1−β₁)g; W ← decay·W − lr·M.  Returns (w', m')."""
+    hyp = _noise_hyp(lr, beta1, decay=decay)
+    return _noise_update(
+        w, seed, kappas, hyp, m_buf, variant="momentum", offsets=offsets
+    )
+
+
+def noise_update_adam(
+    w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps, *,
+    decay=None, offsets=None,
+):
+    """Fused dense-Adam: both moment buffers ride the W grid (one HBM
+    round-trip each instead of materializing g).  Returns (w', m', v')."""
+    hyp = _noise_hyp(lr, beta1, beta2, eps, decay)
+    return _noise_update(
+        w, seed, kappas, hyp, m_buf, v_buf, variant="adam", offsets=offsets
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -303,16 +367,18 @@ def noise_update_adam(w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps):
 # ---------------------------------------------------------------------------
 
 
-def lozo_perturb(w, u, v, scale):
-    """W + scale·(U·Vᵀ): LOZO's Z is the TeZO tiling with τ ≡ 1."""
+def lozo_perturb(w, u, v, scale, *, decay=None):
+    """decay·W + scale·(U·Vᵀ): LOZO's Z is the TeZO tiling with τ ≡ 1."""
     tau = jnp.ones(u.shape[:-2] + (u.shape[-1],), jnp.float32)
-    return tezo_perturb(w, u, v, tau, scale)
+    return tezo_perturb(w, u, v, tau, scale, decay=decay)
 
 
-def subzo_perturb(w, u, v, sigma, scale, *, pad_rank: bool = True):
-    """W + scale·(U·Σ·Vᵀ) for 2-D or leading-batched W."""
+def subzo_perturb(w, u, v, sigma, scale, *, decay=None, pad_rank: bool = True):
+    """decay·W + scale·(U·Σ·Vᵀ) for 2-D or leading-batched W."""
     if w.ndim > 2:
-        fn = functools.partial(subzo_perturb, scale=scale, pad_rank=pad_rank)
+        fn = functools.partial(
+            subzo_perturb, scale=scale, decay=decay, pad_rank=pad_rank
+        )
         return jax.vmap(fn)(w, u, v, sigma)
     if pad_rank and not _interpret():
         u, v = _pad_rank(u, v)[:2]
@@ -321,7 +387,7 @@ def subzo_perturb(w, u, v, sigma, scale, *, pad_rank: bool = True):
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = zo_noise.subzo_perturb(
         _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
-        sigma, scale, bm=bm, bn=bn, interpret=_interpret(),
+        sigma, scale, _decay_scalar(decay), bm=bm, bn=bn, interpret=_interpret(),
     )
     return _crop(out, m, n)
 

@@ -27,10 +27,12 @@ def tezo_perturb_ref(
     v: jax.Array,      # [n, r]
     tau: jax.Array,    # [r] f32
     scale: float,
+    decay: float = 1.0,
 ) -> jax.Array:
-    """W + scale · (u·diag(τ))·vᵀ  with f32 accumulation, cast to W dtype."""
+    """decay·W + scale · (u·diag(τ))·vᵀ  with f32 accumulation, cast to W
+    dtype (decay = 1 − lr·wd on update touches, 1.0 otherwise)."""
     z = (u.astype(jnp.float32) * tau[None, :]) @ v.astype(jnp.float32).T
-    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+    return (decay * w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
 def tezo_adam_update_ref(
@@ -41,26 +43,31 @@ def tezo_adam_update_ref(
     tau_v: jax.Array,   # [r] f32 (nonnegative)
     lr: float,
     eps: float,
+    decay: float = 1.0,
 ) -> jax.Array:
-    """W − lr · M/√(V+ε);  M = recon(τ_M), V = Σ_s (τ_V)_s (u_s²∘v_s²)."""
+    """decay·W − lr · M/√(V+ε);  M = recon(τ_M), V = Σ_s (τ_V)_s (u_s²∘v_s²)."""
     uf = u.astype(jnp.float32)
     vf = v.astype(jnp.float32)
     m = (uf * tau_m[None, :]) @ vf.T
     vv = ((uf * uf) * tau_v[None, :]) @ (vf * vf).T
     g = m * jax.lax.rsqrt(vv + eps)
-    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+    return (decay * w.astype(jnp.float32) - lr * g).astype(w.dtype)
 
 
-def counter_normal_ref(shape, seed, probe: int = 0) -> jax.Array:
+def counter_normal_ref(shape, seed, probe: int = 0, base=(0, 0)) -> jax.Array:
     """Whole-array replay of the kernels' on-chip N(0,1) stream.
 
     ``seed`` is the uint32[2] leaf key (ops.leaf_seed); element (i, j) draws
-    from counter (col=j, row=i | probe<<24) regardless of how the kernels
-    tile the array.
+    from counter (col=base[1]+j, row=(base[0]+i) | probe<<24) regardless of
+    how the kernels tile the array.  ``base`` is the global coordinate of
+    element (0, 0) — nonzero when replaying one device's shard of a leaf
+    partitioned over a mesh (see core.dispatch).
     """
     m, n = shape
-    rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, n))
-    cols = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32)[None, :], (m, n))
+    r0 = jnp.uint32(base[0])
+    c0 = jnp.uint32(base[1])
+    rows = jnp.broadcast_to(r0 + jnp.arange(m, dtype=jnp.uint32)[:, None], (m, n))
+    cols = jnp.broadcast_to(c0 + jnp.arange(n, dtype=jnp.uint32)[None, :], (m, n))
     return counter_normal(seed[0], seed[1], rows, cols, probe)
 
 
@@ -79,35 +86,37 @@ def noise_probe_mean_ref(shape, seed, kappas) -> jax.Array:
     return acc / q
 
 
-def noise_update_sgd_ref(w, seed, kappas, lr) -> jax.Array:
+def noise_update_sgd_ref(w, seed, kappas, lr, decay=1.0) -> jax.Array:
     g = noise_probe_mean_ref(w.shape, seed, kappas)
-    return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+    return (decay * w.astype(jnp.float32) - lr * g).astype(w.dtype)
 
 
-def noise_update_momentum_ref(w, m_buf, seed, kappas, lr, beta1):
+def noise_update_momentum_ref(w, m_buf, seed, kappas, lr, beta1, decay=1.0):
     g = noise_probe_mean_ref(w.shape, seed, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
-    return (w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
+    return (decay * w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
 
 
-def noise_update_adam_ref(w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps):
+def noise_update_adam_ref(
+    w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps, decay=1.0
+):
     g = noise_probe_mean_ref(w.shape, seed, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     v_new = beta2 * v_buf + (1.0 - beta2) * g * g
     upd = m_new * jax.lax.rsqrt(v_new + eps)
-    return (w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new, v_new
+    return (decay * w.astype(jnp.float32) - lr * upd).astype(w.dtype), m_new, v_new
 
 
-def lozo_perturb_ref(w, u, v, scale) -> jax.Array:
-    """W + scale·U·Vᵀ (LOZO), f32 accumulation — τ ≡ 1 TeZO reconstruction."""
+def lozo_perturb_ref(w, u, v, scale, decay=1.0) -> jax.Array:
+    """decay·W + scale·U·Vᵀ (LOZO), f32 accumulation — τ ≡ 1 TeZO recon."""
     z = u.astype(jnp.float32) @ v.astype(jnp.float32).T
-    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+    return (decay * w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
-def subzo_perturb_ref(w, u, v, sigma, scale) -> jax.Array:
-    """W + scale·U·Σ·Vᵀ (SubZO), f32 accumulation."""
+def subzo_perturb_ref(w, u, v, sigma, scale, decay=1.0) -> jax.Array:
+    """decay·W + scale·U·Σ·Vᵀ (SubZO), f32 accumulation."""
     z = u.astype(jnp.float32) @ sigma.astype(jnp.float32) @ v.astype(jnp.float32).T
-    return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
+    return (decay * w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
 def flash_attention_ref(

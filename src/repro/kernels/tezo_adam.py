@@ -26,6 +26,7 @@ from jax.experimental.pallas import tpu as pltpu
 def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
     lr = sc_ref[0]
     eps = sc_ref[1]
+    decay = sc_ref[2]
     u = u_ref[...].astype(jnp.float32)       # [bm, r]
     v = v_ref[...].astype(jnp.float32)       # [bn, r]
     tm = tm_ref[...].astype(jnp.float32)     # [1, r]
@@ -38,7 +39,9 @@ def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
         preferred_element_type=jnp.float32,
     )
     g = m * jax.lax.rsqrt(vv + eps)
-    o_ref[...] = (w_ref[...].astype(jnp.float32) - lr * g).astype(o_ref.dtype)
+    o_ref[...] = (
+        decay * w_ref[...].astype(jnp.float32) - lr * g
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "bm", "bn", "interpret"))
@@ -50,6 +53,7 @@ def tezo_adam_update(
     tau_v: jax.Array,    # [r] f32, nonnegative
     lr: jax.Array | float,
     eps: float = 1e-5,
+    decay: jax.Array | float = 1.0,   # 1 − lr·wd (decoupled decay), 1.0 = none
     *,
     bm: int = 256,
     bn: int = 512,
@@ -60,7 +64,11 @@ def tezo_adam_update(
     bm = min(bm, m)
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    sc = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(eps, jnp.float32)])
+    sc = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(decay, jnp.float32),
+    ])
     return pl.pallas_call(
         _adam_kernel,
         grid=(m // bm, n // bn),

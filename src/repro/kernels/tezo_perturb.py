@@ -26,6 +26,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref):
     scale = scale_ref[0]
+    decay = scale_ref[1]
     u = u_ref[...].astype(jnp.float32)          # [bm, r]
     v = v_ref[...].astype(jnp.float32)          # [bn, r]
     tau = tau_ref[...].astype(jnp.float32)      # [1, r]
@@ -33,7 +34,9 @@ def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref):
     z = jax.lax.dot_general(
         ut, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                            # [bm, bn]
-    o_ref[...] = (w_ref[...].astype(jnp.float32) + scale * z).astype(o_ref.dtype)
+    o_ref[...] = (
+        decay * w_ref[...].astype(jnp.float32) + scale * z
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -43,6 +46,7 @@ def tezo_perturb(
     v: jax.Array,       # [n, r]
     tau: jax.Array,     # [r] f32
     scale: jax.Array | float,
+    decay: jax.Array | float = 1.0,   # 1 − lr·wd on update touches, else 1.0
     *,
     bm: int = 256,
     bn: int = 512,
@@ -54,7 +58,9 @@ def tezo_perturb(
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
     grid = (m // bm, n // bn)
-    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    scale_arr = jnp.stack(
+        [jnp.asarray(scale, jnp.float32), jnp.asarray(decay, jnp.float32)]
+    )
     return pl.pallas_call(
         _perturb_kernel,
         grid=grid,

@@ -31,6 +31,13 @@ Counter layout: key = (key_t[0] ^ path_hash, key_t[1]), counter =
 (col, row | probe << 24).  Rows are bounded by 2^24 and probes by 2^8 —
 checked in ``ops.py`` — so (leaf, probe, element) → counter is injective.
 
+Sharded dispatch: the (row, col) fed to the cipher are *global* element
+coordinates.  Under ``shard_map`` each device runs these kernels on its local
+shard and passes ``base`` — the global coordinates of the shard's (0, 0)
+element, derived from the leaf's PartitionSpec + the device's mesh position
+(see ``core.dispatch``) — so the stream is a pure function of the global
+element, bit-identical across mesh layouts (1×1, 8×1, 2×4, TP-split, …).
+
 NOTE the on-chip stream is *different* from ``jax.random.normal`` — MeZO
 pallas-vs-xla parity is therefore statistical (moments/covariance, see
 tests/test_zo_noise.py) plus exact three-pass self-consistency, not bitwise.
@@ -116,12 +123,17 @@ def leaf_seed(key_t: jax.Array, path: str) -> jax.Array:
     return kd.at[0].set(kd[0] ^ jnp.uint32(_path_hash(path)))
 
 
-def _tile_coords(bm: int, bn: int):
-    """Global (rows, cols) uint32 coordinate grids for the current tile."""
+def _tile_coords(bm: int, bn: int, base_ref):
+    """Global (rows, cols) uint32 coordinate grids for the current tile.
+
+    ``base_ref`` holds the global coordinates of this array's (0, 0) element
+    — zeros for an unsharded leaf, the shard origin under shard_map — so the
+    stream stays a function of the *global* element under any mesh layout.
+    """
     i = pl.program_id(0)
     j = pl.program_id(1)
-    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
-    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    rows = base_ref[0] + i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = base_ref[1] + j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
     return rows.astype(jnp.uint32), cols.astype(jnp.uint32)
 
 
@@ -140,13 +152,20 @@ def _as_i32_seed(seed: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _noise_perturb_kernel(seed_ref, scale_ref, w_ref, o_ref, *, probe, bm, bn):
+def _noise_perturb_kernel(seed_ref, scale_ref, base_ref, w_ref, o_ref, *, probe, bm, bn):
     k0, k1 = _seed_words(seed_ref)
-    rows, cols = _tile_coords(bm, bn)
+    rows, cols = _tile_coords(bm, bn, base_ref)
     z = counter_normal(k0, k1, rows, cols, probe)
     o_ref[...] = (
         w_ref[...].astype(jnp.float32) + scale_ref[0] * z
     ).astype(o_ref.dtype)
+
+
+def _base_arr(base) -> jax.Array:
+    """Normalize the global (row0, col0) shard origin to an int32[2] array."""
+    if base is None:
+        return jnp.zeros((2,), jnp.int32)
+    return jnp.asarray(base, jnp.int32).reshape(2)
 
 
 @functools.partial(jax.jit, static_argnames=("probe", "bm", "bn", "interpret"))
@@ -155,6 +174,7 @@ def noise_perturb(
     seed: jax.Array,     # uint32[2] (leaf_seed)
     scale: jax.Array | float,
     *,
+    base: jax.Array | None = None,   # int32[2] global (row0, col0) of w[0, 0]
     probe: int = 0,
     bm: int = 256,
     bn: int = 512,
@@ -171,13 +191,14 @@ def noise_perturb(
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
-        input_output_aliases={2: 0},
+        input_output_aliases={3: 0},
         interpret=interpret,
-    )(_as_i32_seed(seed), scale_arr, w)
+    )(_as_i32_seed(seed), scale_arr, _base_arr(base), w)
 
 
 # ---------------------------------------------------------------------------
@@ -186,32 +207,39 @@ def noise_perturb(
 
 
 def _noise_update_kernel(*refs, variant, q, bm, bn):
-    seed_ref, hyp_ref, kap_ref = refs[0], refs[1], refs[2]
+    seed_ref, hyp_ref, kap_ref, base_ref = refs[0], refs[1], refs[2], refs[3]
     k0, k1 = _seed_words(seed_ref)
-    rows, cols = _tile_coords(bm, bn)
+    rows, cols = _tile_coords(bm, bn, base_ref)
     g = kap_ref[0] * counter_normal(k0, k1, rows, cols, 0)
     for p in range(1, q):
         g = g + kap_ref[p] * counter_normal(k0, k1, rows, cols, p)
     g = g * jnp.float32(1.0 / q)
     lr = hyp_ref[0]
+    # decoupled weight decay folded into the same pass: W ← decay·W − lr·…
+    # (decay ≡ 1.0 when cfg.weight_decay == 0 — an exact f32 identity)
+    decay = hyp_ref[4]
     if variant == "sgd":
-        w_ref, o_w = refs[3], refs[4]
-        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * g).astype(o_w.dtype)
+        w_ref, o_w = refs[4], refs[5]
+        o_w[...] = (decay * w_ref[...].astype(jnp.float32) - lr * g).astype(o_w.dtype)
     elif variant == "momentum":
-        w_ref, m_ref, o_w, o_m = refs[3], refs[4], refs[5], refs[6]
+        w_ref, m_ref, o_w, o_m = refs[4], refs[5], refs[6], refs[7]
         b1 = hyp_ref[1]
         m_new = b1 * m_ref[...] + (1.0 - b1) * g
         o_m[...] = m_new
-        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * m_new).astype(o_w.dtype)
+        o_w[...] = (
+            decay * w_ref[...].astype(jnp.float32) - lr * m_new
+        ).astype(o_w.dtype)
     else:  # adam
-        w_ref, m_ref, v_ref, o_w, o_m, o_v = refs[3:9]
+        w_ref, m_ref, v_ref, o_w, o_m, o_v = refs[4:10]
         b1, b2, eps = hyp_ref[1], hyp_ref[2], hyp_ref[3]
         m_new = b1 * m_ref[...] + (1.0 - b1) * g
         v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
         o_m[...] = m_new
         o_v[...] = v_new
         upd = m_new * jax.lax.rsqrt(v_new + eps)
-        o_w[...] = (w_ref[...].astype(jnp.float32) - lr * upd).astype(o_w.dtype)
+        o_w[...] = (
+            decay * w_ref[...].astype(jnp.float32) - lr * upd
+        ).astype(o_w.dtype)
 
 
 @functools.partial(
@@ -221,10 +249,11 @@ def noise_update(
     w: jax.Array,                 # [m, n]
     seed: jax.Array,              # uint32[2]
     kappas: jax.Array,            # [q] f32 — q static via shape
-    hyp: jax.Array,               # [4] f32: lr, beta1, beta2, eps
+    hyp: jax.Array,               # [5] f32: lr, beta1, beta2, eps, decay
     m_buf: jax.Array | None = None,   # [m, n] f32 (momentum/adam)
     v_buf: jax.Array | None = None,   # [m, n] f32 (adam)
     *,
+    base: jax.Array | None = None,    # int32[2] global (row0, col0) of w[0, 0]
     variant: str = "sgd",
     bm: int = 256,
     bn: int = 512,
@@ -233,7 +262,9 @@ def noise_update(
     """Fused q-probe mean + optimizer update; returns (w', m'?, v'?).
 
     The state buffers ride the same grid as W (one HBM round-trip each,
-    aliased in-place); z for every probe is regenerated on-chip.
+    aliased in-place); z for every probe is regenerated on-chip.  hyp[4] is
+    the decoupled weight-decay factor (1 − lr·wd, 1.0 for no decay) applied
+    to W in the same fused pass.
     """
     m, n = w.shape
     bm = min(bm, m)
@@ -245,20 +276,20 @@ def noise_update(
     tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     operands = [_as_i32_seed(seed), hyp.astype(jnp.float32),
-                kappas.astype(jnp.float32), w]
-    in_specs = [smem, smem, smem, tile]
+                kappas.astype(jnp.float32), _base_arr(base), w]
+    in_specs = [smem, smem, smem, smem, tile]
     out_shapes = [jax.ShapeDtypeStruct((m, n), w.dtype)]
-    aliases = {3: 0}
+    aliases = {4: 0}
     if variant in ("momentum", "adam"):
         operands.append(m_buf)
         in_specs.append(tile)
         out_shapes.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
-        aliases[4] = 1
+        aliases[5] = 1
     if variant == "adam":
         operands.append(v_buf)
         in_specs.append(tile)
         out_shapes.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
-        aliases[5] = 2
+        aliases[6] = 2
     out = pl.pallas_call(
         functools.partial(
             _noise_update_kernel, variant=variant, q=q, bm=bm, bn=bn
@@ -280,6 +311,7 @@ def noise_update(
 
 def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref):
     scale = scale_ref[0]
+    decay = scale_ref[1]
     u = u_ref[...].astype(jnp.float32)          # [bm, r]
     v = v_ref[...].astype(jnp.float32)          # [bn, r]
     s = s_ref[...].astype(jnp.float32)          # [r, r]
@@ -289,7 +321,9 @@ def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref):
     z = jax.lax.dot_general(
         us, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )                                            # [bm, bn]
-    o_ref[...] = (w_ref[...].astype(jnp.float32) + scale * z).astype(o_ref.dtype)
+    o_ref[...] = (
+        decay * w_ref[...].astype(jnp.float32) + scale * z
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -299,6 +333,7 @@ def subzo_perturb(
     v: jax.Array,       # [n, r]
     sigma: jax.Array,   # [r, r] f32
     scale: jax.Array | float,
+    decay: jax.Array | float = 1.0,
     *,
     bm: int = 256,
     bn: int = 512,
@@ -306,13 +341,16 @@ def subzo_perturb(
 ) -> jax.Array:
     """SubZero's Z = U·Σ·Vᵀ, fused like tezo_perturb: the [bm,r]·[r,r]·[r,bn]
     chain runs on the MXU against the resident W tile, so Z (and U·Σ) never
-    reach HBM."""
+    reach HBM.  ``decay`` (1 − lr·wd on the update touch, 1.0 otherwise)
+    folds decoupled weight decay into the same pass."""
     m, n = w.shape
     r = u.shape[-1]
     bm = min(bm, m)
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    scale_arr = jnp.stack(
+        [jnp.asarray(scale, jnp.float32), jnp.asarray(decay, jnp.float32)]
+    )
     return pl.pallas_call(
         _subzo_kernel,
         grid=(m // bm, n // bn),

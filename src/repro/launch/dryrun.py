@@ -14,7 +14,6 @@ Usage:
 Each cell writes results/dryrun/<arch>__<shape>__<mesh>[__tag].json.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -22,6 +21,11 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+# Every dry-run cell lowers on a production mesh; sharding-invariant
+# jax.random streams keep the dense-fallback ZO leaves' noise identical to
+# single-device execution (the kernel leaves are invariant by construction).
+jax.config.update("jax_threefry_partitionable", True)
 
 from repro.configs import SHAPES, get_config, runnable_cells
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -37,6 +41,7 @@ from repro.distributed.sharding import (
     batch_shardings,
     cache_shardings,
     param_shardings,
+    param_spec_table,
     zo_state_shardings,
 )
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
@@ -166,7 +171,12 @@ def run_cell(
         state_sh = zo_state_shardings(mesh, axes, state_abs)
         batch_abs = model.input_specs(shape)
         batch_sh = batch_shardings(mesh, batch_abs, axes=cfg.batch_axis_names)
-        step = build_zo_train_step(model.loss_fn, zo_cfg)
+        # shard-aware dispatch: under kernel_mode=pallas each leaf op lowers
+        # to a shard_map'd local-shard kernel instead of a GSPMD all-gather
+        step = build_zo_train_step(
+            model.loss_fn, zo_cfg, mesh=mesh,
+            param_specs=param_spec_table(state_sh.params),
+        )
         jitted = jax.jit(
             step,
             in_shardings=(state_sh, batch_sh),

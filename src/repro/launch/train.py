@@ -15,7 +15,6 @@ multi-device integration tests; default is single-device.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path
@@ -26,7 +25,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
-from repro.core import ZOConfig, ZOTrainState, build_zo_train_step, init_zo_state
+from repro.core import ZOConfig, build_zo_train_step, init_zo_state
 from repro.core import kernel_execution
 from repro.core.rank import select_ranks
 from repro.data import DataConfig, Prefetcher, batch_at_step
@@ -34,6 +33,7 @@ from repro.distributed import (
     StragglerSim,
     batch_shardings,
     build_ensemble_zo_train_step,
+    param_spec_table,
     zo_state_shardings,
 )
 from repro.models import build_model
@@ -110,6 +110,17 @@ def train(
         )
     state = init_zo_state(params, zo_cfg, ranks, masks)
 
+    state_sh = None
+    if mesh is not None:
+        # Mesh runs need sharding-invariant jax.random streams so the dense-
+        # fallback leaves (biases/norm scales) draw the same z as the
+        # single-device reference — the counter-PRNG kernel leaves are
+        # mesh-invariant by construction (see core.dispatch).
+        jax.config.update("jax_threefry_partitionable", True)
+        state_sh = zo_state_shardings(
+            mesh, model.logical_axes(), jax.eval_shape(lambda: state)
+        )
+
     if ensemble > 1:
         sim = StragglerSim(ensemble, straggler_prob, seed=seed + 99)
         step_fn = build_ensemble_zo_train_step(
@@ -117,23 +128,23 @@ def train(
             straggler_mask_fn=sim.mask_fn() if straggler_prob > 0 else None,
         )
     else:
-        step_fn = build_zo_train_step(model.loss_fn, zo_cfg)
+        # mesh + the per-leaf spec table turn on shard-aware kernel dispatch:
+        # each leaf's fused perturb/update runs under shard_map on its local
+        # shard instead of GSPMD all-gathering around the pallas_call.
+        step_fn = build_zo_train_step(
+            model.loss_fn, zo_cfg, mesh=mesh,
+            param_specs=param_spec_table(state_sh.params) if state_sh else None,
+        )
 
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     start_step = 0
     if ckpt and ckpt.latest_step() is not None:
         template = jax.eval_shape(lambda: state)
-        shardings = (
-            zo_state_shardings(mesh, model.logical_axes(), template) if mesh else None
-        )
-        state, extra = ckpt.restore(template, shardings=shardings)
+        state, extra = ckpt.restore(template, shardings=state_sh)
         start_step = int(extra.get("step", int(state.step)))
         print(f"[train] restored step {start_step} from {ckpt.dir}")
 
     if mesh is not None:
-        state_sh = zo_state_shardings(
-            mesh, model.logical_axes(), jax.eval_shape(lambda: state)
-        )
         batch_abs = jax.eval_shape(
             lambda: {k: jnp.asarray(v) for k, v in batch_at_step(data, 0).items()}
         )
@@ -226,8 +237,25 @@ def main() -> None:
     ap.add_argument("--ensemble", type=int, default=0)
     ap.add_argument("--straggler-prob", type=float, default=0.0)
     ap.add_argument("--log-file", default=None)
+    ap.add_argument(
+        "--mesh", default=None, metavar="host:D,M",
+        help="run the step sharded on a D×M (data, model) host mesh — set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N (N ≥ D·M) before "
+        "launch; under --kernel-mode pallas the dispatch is shard-aware "
+        "(shard_map over local shards, mesh-invariant noise streams)",
+    )
     args = ap.parse_args()
-    result = train(**{k.replace("-", "_"): v for k, v in vars(args).items()})
+    kwargs = {k.replace("-", "_"): v for k, v in vars(args).items()}
+    mesh_arg = kwargs.pop("mesh", None)
+    if mesh_arg is not None:
+        from repro.launch.mesh import make_host_mesh
+
+        kind, _, dims = mesh_arg.partition(":")
+        if kind != "host" or not dims:
+            raise SystemExit(f"--mesh expects host:D,M, got {mesh_arg!r}")
+        d, m = (int(x) for x in dims.split(","))
+        kwargs["mesh"] = make_host_mesh(data=d, model=m)
+    result = train(**kwargs)
     print(json.dumps({k: v for k, v in result.items() if k != "history"}, indent=1))
 
 

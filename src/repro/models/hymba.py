@@ -10,7 +10,6 @@ tokens); the Mamba path follows Mamba-1 selective scan with depthwise conv.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

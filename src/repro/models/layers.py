@@ -127,7 +127,7 @@ def chunked_attention(
         qpos = qi * cq + jnp.arange(cq) + q_offset
 
         def kv_block(carry, ki_and_blks):
-            m, l, acc = carry
+            m, lse, acc = carry
             ki, kblk, vblk = ki_and_blks
             kpos = ki * ck + jnp.arange(ck)
             s = (
@@ -139,7 +139,7 @@ def chunked_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            l_new = lse * corr + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk)
             acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
             return (m_new, l_new, acc_new), None
@@ -147,10 +147,10 @@ def chunked_attention(
         m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
         a0 = jnp.zeros((B, KV, G, cq, dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_block, (m0, l0, a0), (jnp.arange(nk), kc, vc)
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
         # [B, KV, G, cq, dh] -> [B, cq, KV, G, dh]
         return None, out.transpose(0, 3, 1, 2, 4)
 

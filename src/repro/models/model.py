@@ -14,7 +14,7 @@ per the assignment) alongside the token stream.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ concatenated before the token embeddings; loss is computed on token positions.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -194,10 +193,12 @@ class TransformerLM:
             y_l = jax.lax.psum(y_l, "model")                    # combine experts
             return y_l.reshape(Bl, S, D)
 
+        from repro.distributed.context import compat_shard_map
+
         ba_spec = ba if ba else None
-        fn = jax.shard_map(
+        fn = compat_shard_map(
             local_fn,
-            mesh=mesh,
+            mesh,
             in_specs=(
                 P(ba_spec, None, None),
                 P(None, None),
@@ -206,7 +207,6 @@ class TransformerLM:
                 P("model", None, None),
             ),
             out_specs=P(ba_spec, None, None),
-            check_vma=False,
         )
         return fn(h, p["router"], p["we_gate"], p["we_up"], p["we_down"])
 

@@ -42,9 +42,9 @@ class XLSTMLM:
         s = 1.0 / math.sqrt(D)
         si = 1.0 / math.sqrt(Di)
         blocks = {}
-        for l in range(c.n_layers):
-            if self._is_slstm(l):
-                blocks[f"l{l:02d}_s"] = {
+        for li in range(c.n_layers):
+            if self._is_slstm(li):
+                blocks[f"l{li:02d}_s"] = {
                     "ln": PSpec((D,), ("embed",), "zeros"),
                     # gates i,f,z,o each take x and recurrent h
                     "w_x": PSpec((D, 4 * D), ("embed", "heads"), scale=s),
@@ -53,7 +53,7 @@ class XLSTMLM:
                     "w_out": PSpec((D, D), ("heads", "embed"), scale=s),
                 }
             else:
-                blocks[f"l{l:02d}_m"] = {
+                blocks[f"l{li:02d}_m"] = {
                     "ln": PSpec((D,), ("embed",), "zeros"),
                     "w_up": PSpec((D, 2 * Di), ("embed", "heads"), scale=s),
                     "w_q": PSpec((Di, Di), ("heads", "kv_heads"), scale=si),
@@ -242,11 +242,11 @@ class XLSTMLM:
             x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
         x = layers.shard_hint(x, (c.batch_axis_names, None, None), c.spmd_hints)
         new_states = {}
-        for l in range(c.n_layers):
-            key = f"l{l:02d}_s" if self._is_slstm(l) else f"l{l:02d}_m"
+        for li in range(c.n_layers):
+            key = f"l{li:02d}_s" if self._is_slstm(li) else f"l{li:02d}_m"
             p = params["blocks"][key]
             st = None if states is None else states[key]
-            if self._is_slstm(l):
+            if self._is_slstm(li):
                 x, st = self._slstm_block(p, x, st)
             else:
                 x, st = self._mlstm_block(p, x, st)
@@ -273,16 +273,16 @@ class XLSTMLM:
                 return jax.ShapeDtypeStruct(shape, jnp.float32)
             return jnp.full(shape, fill, jnp.float32)
 
-        for l in range(c.n_layers):
-            if self._is_slstm(l):
+        for li in range(c.n_layers):
+            if self._is_slstm(li):
                 dh = self.dh_s
-                cache[f"l{l:02d}_s"] = (
+                cache[f"l{li:02d}_s"] = (
                     mk((B, Nh, dh)), mk((B, Nh, dh)), mk((B, Nh, dh)),
                     mk((B, Nh), -1e30),
                 )
             else:
                 dh = self.dh_m
-                cache[f"l{l:02d}_m"] = (
+                cache[f"l{li:02d}_m"] = (
                     mk((B, Nh, dh, dh)), mk((B, Nh, dh)), mk((B, Nh), -1e30),
                 )
         cache["pos"] = (

@@ -1,0 +1,101 @@
+"""Tier-1 baseline-failure ratchet: fail CI only on NEW test failures.
+
+The seed ships with known-failing areas (flash-attention / selective-scan /
+hlo-analysis sweeps — see ROADMAP.md); a plain ``pytest`` exit code would
+therefore always be red, which is how tier-1 ended up ``continue-on-error``
+and regressions slipped through.  This script makes tier-1 enforcing
+without first fixing the seed: it parses pytest's ``-rf`` summary lines,
+collapses parametrized case ids onto their test function, and compares the
+failing set against the committed baseline ``tests/known_failures.txt``.
+
+  * a failure NOT in the baseline  → exit 1 (the ratchet catches it)
+  * a baseline entry that passed   → exit 0, but reported loudly so the
+    list gets trimmed (the ratchet only ever tightens)
+  * a report with no executed-test summary → exit 2.  The summary must
+    contain a "N passed" or "N failed" count: a collection error prints
+    only "1 error in 0.44s", which must NOT count as a completed run —
+    otherwise an ImportError that kills collection would go green with
+    zero tests executed.
+
+The pytest invocation must use ``-rfE`` (not just ``-rf``): ERROR-state
+tests (broken fixtures/setup) are omitted from the ``-rf`` short summary,
+so without the E flag a new ERROR regression would be invisible here.
+
+Usage (CI):
+    PYTHONPATH=src python -m pytest -q --tb=no -rfE | tee report.txt || true
+    python tests/check_ratchet.py report.txt tests/known_failures.txt
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_RESULT_RE = re.compile(r"^(FAILED|ERROR)\s+(\S+)")
+_SUMMARY_RE = re.compile(r"\d+\s+(passed|failed)\b")
+
+
+def _func_id(node_id: str) -> str:
+    """Collapse a parametrized node id onto its test function."""
+    return node_id.split("[", 1)[0]
+
+
+def load_known(path: str | Path) -> set[str]:
+    known = set()
+    for line in Path(path).read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            known.add(_func_id(line))
+    return known
+
+
+def parse_report(path: str | Path) -> tuple[set[str], bool]:
+    """(failing function ids, report-looks-complete)."""
+    failed: set[str] = set()
+    complete = False
+    for line in Path(path).read_text().splitlines():
+        m = _RESULT_RE.match(line.strip())
+        if m:
+            failed.add(_func_id(m.group(2)))
+        if _SUMMARY_RE.search(line):
+            complete = True
+    return failed, complete
+
+
+def main(report_path: str, known_path: str) -> int:
+    known = load_known(known_path)
+    failed, complete = parse_report(report_path)
+    if not complete:
+        print(
+            f"[ratchet] FAIL: {report_path} has no passed/failed pytest "
+            "summary — the run crashed before executing tests (collection "
+            "error, OOM, …); refusing to ratchet",
+        )
+        return 2
+    new = sorted(failed - known)
+    fixed = sorted(known - failed)
+    if fixed:
+        n = len(fixed)
+        print(
+            f"[ratchet] {n} baseline entr{'y' if n == 1 else 'ies'} now "
+            "pass — trim tests/known_failures.txt:",
+        )
+        for node in fixed:
+            print(f"  ~ {node}")
+    if new:
+        print(f"[ratchet] FAIL: {len(new)} NEW failure(s) not in the baseline:")
+        for node in new:
+            print(f"  + {node}")
+        return 1
+    print(
+        f"[ratchet] OK: {len(failed)} failing function(s), all within the "
+        f"{len(known)}-entry baseline",
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

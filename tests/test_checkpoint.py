@@ -1,5 +1,4 @@
 """Checkpointer: atomic roundtrip, retention, async, crash-resume."""
-import json
 import os
 from pathlib import Path
 

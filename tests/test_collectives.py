@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import ZOConfig, build_zo_train_step, init_zo_state
 from repro.distributed import (
@@ -85,7 +84,8 @@ def test_dropping_member_changes_update_but_not_structure():
     batch = _batch(8)
     s0 = init_zo_state(PARAMS, cfg)
     step_all = jax.jit(build_ensemble_zo_train_step(_loss, cfg, 2))
-    mask_fn = lambda step: jnp.asarray([1.0, 0.0])
+    def mask_fn(step):
+        return jnp.asarray([1.0, 0.0])
     step_drop = jax.jit(build_ensemble_zo_train_step(_loss, cfg, 2, mask_fn))
     sa, _ = step_all(s0, batch)
     sd, _ = step_drop(init_zo_state(PARAMS, cfg), batch)

@@ -43,8 +43,8 @@ def _params():
 
 def _loss_fn(p, batch):
     h = jnp.tanh(batch["x"] @ p["w1"])[:, :12]          # (B, 12)
-    for l in range(p["stack"].shape[0]):
-        h = h + 0.1 * jnp.tanh(h @ p["stack"][l])
+    for layer in range(p["stack"].shape[0]):
+        h = h + 0.1 * jnp.tanh(h @ p["stack"][layer])
     h = h + p["b"]
     return jnp.mean((jnp.sum(h, axis=-1) - batch["y"]) ** 2)
 
@@ -144,6 +144,62 @@ def test_train_step_parity_bf16_factors(method):
                 atol=0.2, rtol=0.05,
             )
     np.testing.assert_allclose(float(m_x["loss"]), float(m_p["loss"]), atol=5e-3)
+
+
+@pytest.mark.parametrize(
+    "method", ["tezo", "tezo_adam", "mezo", "mezo_m", "mezo_adam", "lozo_m", "subzo"]
+)
+def test_weight_decay_fused_parity(method):
+    """cfg.weight_decay folds into the fused update kernels' scalar params
+    (no separate full-W decay pass) — the two lowerings must still agree,
+    and the decay must actually bite (differ from the wd=0 trajectory)."""
+    wd = 0.05
+    s_x, m_x = _run(method, 1, "xla", n_steps=3, weight_decay=wd)
+    s_p, m_p = _run(method, 1, "pallas", n_steps=3, weight_decay=wd)
+    if method.startswith("mezo"):
+        # different noise streams by design: check the decay path via the
+        # shared loss statistics instead of per-element params
+        assert np.isfinite(float(m_p["loss"]))
+    else:
+        for (path_a, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(s_x.params),
+            jax.tree_util.tree_leaves_with_path(s_p.params),
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=5e-5, rtol=1e-4,
+                err_msg=f"params diverged at {path_a}",
+            )
+    s_0, _ = _run(method, 1, "pallas", n_steps=3)
+    diffs = [
+        float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        for a, b in zip(jax.tree.leaves(s_p.params), jax.tree.leaves(s_0.params))
+    ]
+    assert max(diffs) > 1e-6, "weight decay had no effect on the pallas path"
+
+
+def test_fused_decay_matches_decoupled_reference():
+    """Leaf-level semantics: decay·W − lr·recon == the decoupled-AdamW order
+    of operations (decay the weight, then apply the update) on both paths."""
+    from repro.core.cpd import CPDFactor
+    from repro.core import dispatch
+    from repro.kernels import ref
+
+    key = jax.random.PRNGKey(13)
+    w = jax.random.normal(key, (48, 40)) * 0.1
+    u = jax.random.normal(jax.random.fold_in(key, 1), (48, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (40, 4))
+    tau = jax.random.normal(jax.random.fold_in(key, 3), (4,))
+    lr, wd = 1e-2, 0.1
+    decay = 1.0 - lr * wd
+    fac = CPDFactor(u=u, v=v)
+    want = ref.tezo_perturb_ref(w, u, v, tau, -lr, decay=decay)
+    for use_kernel in (True, False):
+        got = dispatch.sgd_update_leaf(
+            w, fac, tau, lr, use_kernel=use_kernel, decay=decay
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-5, err_msg=str(use_kernel)
+        )
 
 
 def test_parity_exact_restore_mode():

@@ -1,12 +1,9 @@
 """End-to-end behaviour tests: ZO fine-tuning actually learns, all optimizer
 variants run through the public trainer, serving generates, and the paper's
 qualitative claims hold in miniature (Fig. 4: ZO-Adam beats ZO-SGD on loss)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data import DataConfig
 from repro.launch.train import train
 from repro.launch.serve import BatchedServer
 from repro.configs import get_smoke_config

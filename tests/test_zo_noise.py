@@ -170,6 +170,42 @@ def test_noise_update_momentum_and_adam_match_ref():
     np.testing.assert_allclose(np.asarray(v2), np.asarray(rv), atol=1e-6)
 
 
+def test_noise_update_fused_decay_matches_ref():
+    """hyp[4] (the decoupled weight-decay factor) must hit W — and only W —
+    in every update variant, locked elementwise against the oracles."""
+    seed = _seed()
+    w = jax.random.normal(jax.random.PRNGKey(4), (64, 131)) * 0.1
+    m0 = jax.random.normal(jax.random.PRNGKey(5), (64, 131)) * 0.01
+    v0 = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (64, 131))) * 0.01
+    kap = jnp.array([0.7, -1.3], jnp.float32)
+    decay = 0.95
+
+    ws = ops.noise_update_sgd(w, seed, kap, 1e-2, decay=decay)
+    rs = ref.noise_update_sgd_ref(w, seed, kap, 1e-2, decay=decay)
+    np.testing.assert_allclose(np.asarray(ws), np.asarray(rs), atol=1e-6)
+    # decay really bit: differs from the undecayed update by ~0.05·|W|
+    undecayed = ops.noise_update_sgd(w, seed, kap, 1e-2)
+    assert float(jnp.max(jnp.abs(ws - undecayed))) > 1e-4
+
+    w1, m1 = ops.noise_update_momentum(w, m0, seed, kap, 1e-2, 0.9, decay=decay)
+    rw, rm = ref.noise_update_momentum_ref(w, m0, seed, kap, 1e-2, 0.9, decay=decay)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(rw), atol=1e-6)
+    # the moment buffer must NOT be decayed (decoupled decay hits W only)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(rm), atol=1e-6)
+    _, m_nodecay = ops.noise_update_momentum(w, m0, seed, kap, 1e-2, 0.9)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m_nodecay))
+
+    w2, m2, v2 = ops.noise_update_adam(
+        w, m0, v0, seed, kap, 1e-2, 0.9, 0.99, 1e-5, decay=decay
+    )
+    rw, rm, rv = ref.noise_update_adam_ref(
+        w, m0, v0, seed, kap, 1e-2, 0.9, 0.99, 1e-5, decay=decay
+    )
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(rw), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(rm), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(rv), atol=1e-6)
+
+
 def test_three_pass_self_consistency():
     """+ρ, −2ρ, +ρ with the same (seed, probe) cancels to f32 epsilon — the
     Algorithm-1 replay property the counter stream exists to provide."""
