@@ -1,13 +1,15 @@
 """CI gate for the kernel benchmark record: coverage ratchet, not speed.
 
 Walltime on shared CI runners is noise, so the enforced contract is record
-*coverage*: every (method, kernel, mesh) combination present in the
+*coverage*: every (leg, method, kernel, mesh) combination present in the
 committed baseline ``results/BENCH_kernels.json`` must also appear in the
 freshly produced file (any model/width satisfies a combination — the CI
 smoke runs width x1 only while the committed baseline also carries x4).  A
 method silently losing its pallas leg, a kernel-mode regressing to the
-dense path, or the sharded leg disappearing all fail here; new combinations
-are allowed (they become binding once committed).
+dense path, the sharded leg disappearing, or the forward leg (schema 3:
+prefill rows per model × kernel mode, ``leg: "forward"``) vanishing all
+fail here; a fresh file with no forward-leg rows fails unconditionally.
+New combinations are allowed (they become binding once committed).
 
 Usage (CI):
     python -m benchmarks.table8_walltime --widths 1 --iters 1 --out fresh.json
@@ -25,8 +27,16 @@ from pathlib import Path
 def record_keys(doc: dict) -> set[tuple]:
     keys = set()
     for rec in doc.get("records", []):
-        # pre-schema-2 baselines have no mesh field: treat as single-device
-        keys.add((rec["method"], rec["kernel"], rec.get("mesh", "1x1")))
+        # pre-schema-2 baselines have no mesh field (single-device) and
+        # pre-schema-3 none have a leg (everything was the ZO step)
+        keys.add(
+            (
+                rec.get("leg", "zo-step"),
+                rec["method"],
+                rec["kernel"],
+                rec.get("mesh", "1x1"),
+            )
+        )
     return keys
 
 
@@ -35,6 +45,12 @@ def check(fresh_path: str, baseline_path: str) -> int:
     baseline = json.loads(Path(baseline_path).read_text())
     if not fresh.get("records"):
         print(f"[check_bench] FAIL: {fresh_path} has no records")
+        return 1
+    # the forward compute rides the dispatch now (PR 4): a record file
+    # without forward-leg rows means the bench silently lost the forward
+    # path, regardless of what the baseline carries
+    if not any(r.get("leg") == "forward" for r in fresh.get("records", [])):
+        print(f"[check_bench] FAIL: {fresh_path} has no forward-leg records")
         return 1
     missing = sorted(record_keys(baseline) - record_keys(fresh))
     if missing:

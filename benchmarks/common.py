@@ -104,3 +104,42 @@ def zo_step_bytes_model(
     elif method in ("tezo_adam",) and kernel_path == "xla":
         update += 2.0 * P   # dense M and V reconstructions materialized
     return perturbs + update
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic model for one prefill FORWARD pass — the quantity the
+# flash-attention / selective-scan kernels reduce now that the forward rides
+# the same dispatch as the ZO ops.  Coarse by design, same spirit as
+# zo_step_bytes_model: weights stream once, activations once per block
+# boundary, and the lowering-dependent term is the attention score block —
+# materialized [S, kv] f32 per head per layer on the XLA path, VMEM-resident
+# (q/k/v/o traffic only) on the kernel path.  The hybrid scan term mirrors
+# that: the XLA scan round-trips the [D, N] state every timestep, the kernel
+# keeps it VMEM-resident for the whole sequence.
+# ---------------------------------------------------------------------------
+def forward_bytes_model(
+    cfg,                       # ModelConfig (n_layers/n_heads/head_dim/...)
+    n_params: float,           # parameter count (streamed once)
+    batch: int,
+    seq_len: int,
+    kernel_path: str,          # "pallas" | "xla"
+    dtype_bytes: int = 2,      # bf16 activations/weights
+) -> float:
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    B, S = batch, seq_len
+    kv_span = min(S, cfg.window) if cfg.window > 0 else S
+    # q/k/v/o activation traffic per layer (always paid)
+    qkvo = 4.0 * B * S * H * dh * dtype_bytes * L
+    scores = 0.0
+    if kernel_path != "pallas":
+        # causal: ~half the [S, kv_span] f32 score block, read + write
+        scores = 2.0 * B * H * S * kv_span / 2 * 4.0 * L
+    ssm = 0.0
+    if getattr(cfg, "ssm_state", 0):
+        Di = cfg.ssm_expand * cfg.d_model
+        N = cfg.ssm_state
+        if kernel_path == "pallas":
+            ssm = 2.0 * B * Di * N * 4.0 * L              # one state round-trip
+        else:
+            ssm = 2.0 * B * Di * N * 4.0 * S * L          # per-timestep
+    return n_params * dtype_bytes + qkvo + scores + ssm

@@ -20,10 +20,21 @@ dispatch (shard_map'd local-shard kernels, see core.dispatch).  Those rows
 are labeled ``mesh: "2x4-host"``; being host-platform multi-device on one
 CPU they measure plumbing/compile sanity, not device-parallel speed.
 
+Forward leg: the forward compute rides the same dispatch now (PR 4), so the
+bench also times a PREFILL forward per model × kernel mode — opt-125m
+(attention) and hymba (attention + selective-scan heads) smoke configs,
+single-device plus a 2×4-host sharded row — with the analytic forward
+bytes-moved model (``common.forward_bytes_model``: the score/state traffic
+the flash-attention and selective-scan kernels remove).  Off-TPU the pallas
+forward executes the marker-region XLA twin (``executed: "xla-region"``),
+so those rows are dispatch/plumbing coverage; kernel speed is the on-TPU
+follow-on, same as the ZO rows.
+
 Besides the stdout CSV, ``run()`` writes ``results/BENCH_kernels.json`` —
-per-(model, method, kernel-mode, mesh) walltime plus an analytic bytes-moved
-estimate — so the perf trajectory is machine-trackable across PRs
-(``benchmarks/check_bench.py`` gates CI on record coverage).
+per-(leg, model, method, kernel-mode, mesh) walltime plus an analytic
+bytes-moved estimate — so the perf trajectory is machine-trackable across
+PRs (``benchmarks/check_bench.py`` gates CI on record coverage, including
+the forward-leg records).
 """
 from __future__ import annotations
 
@@ -36,11 +47,17 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import emit_csv, time_fn, zo_step_bytes_model
+from benchmarks.common import (
+    emit_csv,
+    forward_bytes_model,
+    time_fn,
+    zo_step_bytes_model,
+)
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core import KERNEL_METHODS, ZOConfig, build_zo_train_step, init_zo_state
 from repro.core import kernel_execution
+from repro.core.dispatch import forward_execution
 from repro.kernels.ops import is_interpret
 from repro.models import build_model
 from repro.utils.tree import tree_num_params
@@ -49,6 +66,12 @@ METHODS = [
     "mezo", "mezo_m", "mezo_adam", "lozo", "lozo_m", "subzo",
     "tezo", "tezo_m", "tezo_adam",
 ]
+
+# The forward leg's models: a pure-attention transformer and the hybrid
+# whose blocks exercise BOTH forward kernels (flash attention + the Mamba
+# selective scan).
+FORWARD_MODELS = ("opt-125m", "hymba-1.5b")
+FORWARD_SHAPE = ShapeConfig("bench-fwd", seq_len=64, global_batch=4, kind="prefill")
 
 BENCH_JSON = Path("results") / "BENCH_kernels.json"
 
@@ -61,6 +84,63 @@ _CHILD_MARKER = "BENCH_SHARDED_JSON:"
 def _kernel_label(method: str, kernel_mode: str) -> str:
     resolved, interp = kernel_execution(method, kernel_mode)
     return "pallas-interpret" if resolved == "pallas" and interp else resolved
+
+
+def _forward_label(kernel_mode: str) -> tuple[str, str]:
+    """(kernel label, executed detail) for a forward-leg record.
+
+    The label keys the coverage ratchet; ``executed`` records what actually
+    ran — "mosaic" (TPU kernel), "interpret" (forced emulation), or
+    "xla-region" (the off-TPU marker-region twin, a plumbing row)."""
+    path, kernel = forward_execution(kernel_mode)
+    if path != "pallas":
+        return "xla", "xla"
+    if not kernel:
+        return "pallas", "xla-region"
+    return "pallas", "interpret" if is_interpret() else "mosaic"
+
+
+def _forward_row(cfg, n_params: int, kernel_mode: str, mesh_label: str,
+                 sec: float) -> dict:
+    label, executed = _forward_label(kernel_mode)
+    return {
+        "leg": "forward",
+        "model": cfg.name,
+        "method": f"prefill:{cfg.name}",
+        "kernel": label,
+        "executed": executed,
+        "mesh": mesh_label,
+        "ms_per_iter": round(sec * 1e3, 2),
+        "bytes_moved_est_mb": round(
+            forward_bytes_model(
+                cfg, n_params, FORWARD_SHAPE.global_batch,
+                FORWARD_SHAPE.seq_len, label,
+            ) / 2 ** 20,
+            1,
+        ),
+    }
+
+
+def forward_leg_rows(iters: int) -> list[dict]:
+    """Prefill-forward walltime per model × kernel mode (single device)."""
+    rows = []
+    for arch in FORWARD_MODELS:
+        base = get_smoke_config(arch)
+        for kernel_mode in ("xla", "pallas"):
+            cfg = base.reduced(kernel_mode=kernel_mode)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            n_params = tree_num_params(params)
+            batch = model.make_inputs(jax.random.PRNGKey(1), FORWARD_SHAPE)
+            prefill = jax.jit(
+                lambda p, b, m=model: m.prefill(p, b, FORWARD_SHAPE.seq_len)
+            )
+            sec = time_fn(
+                lambda p=params, b=batch: prefill(p, b)[0], iters=iters
+            )
+            rows.append(_forward_row(cfg, n_params, kernel_mode, "1x1", sec))
+            jax.clear_caches()
+    return rows
 
 
 def _single_device_rows(widths, iters: int) -> list[dict]:
@@ -95,6 +175,7 @@ def _single_device_rows(widths, iters: int) -> list[dict]:
                 resolved, _ = kernel_execution(method, kernel_mode)
                 rows.append(
                     {
+                        "leg": "zo-step",
                         "model": f"{cfg.name}-x{width_mult}",
                         "method": method,
                         "kernel": _kernel_label(method, kernel_mode),
@@ -170,6 +251,7 @@ def sharded_leg_rows(iters: int) -> list[dict]:
             resolved, _ = kernel_execution(method, kernel_mode)
             rows.append(
                 {
+                    "leg": "zo-step",
                     "model": f"{cfg.name}-x1",
                     "method": method,
                     "kernel": _kernel_label(method, kernel_mode),
@@ -183,6 +265,49 @@ def sharded_leg_rows(iters: int) -> list[dict]:
                 }
             )
             jax.clear_caches()
+    return rows
+
+
+def sharded_forward_rows(iters: int) -> list[dict]:
+    """The forward leg on the 2×4 host mesh (same subprocess contract as
+    ``sharded_leg_rows``): a batch-sharded prefill with the dispatch shard
+    context registered, so on TPU the pallas rows time the shard_map'd
+    kernels; on CPU they time the GSPMD-partitioned marker-region twin
+    (plumbing/compile sanity, like every other host-mesh row)."""
+    from repro.core import dispatch
+    from repro.distributed import batch_shardings
+    from repro.distributed.sharding import param_shardings
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=SHARDED_MESH[0], model=SHARDED_MESH[1])
+    rows = []
+    base = get_smoke_config("opt-125m").reduced(
+        spmd_hints=True, batch_axis_names=("data",)
+    )
+    for kernel_mode in ("xla", "pallas"):
+        cfg = base.reduced(kernel_mode=kernel_mode)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        n_params = tree_num_params(params)
+        batch = model.make_inputs(jax.random.PRNGKey(1), FORWARD_SHAPE)
+        p_sh = param_shardings(
+            mesh, model.logical_axes(), model.abstract_params()
+        )
+        b_sh = batch_shardings(mesh, jax.eval_shape(lambda: batch))
+
+        def prefill_fn(p, b, m=model):
+            with dispatch.shard_context(mesh, {}):
+                return m.prefill(p, b, FORWARD_SHAPE.seq_len)
+
+        step = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+        with mesh:
+            p_d = jax.device_put(params, p_sh)
+            b_d = jax.device_put(batch, b_sh)
+            sec = time_fn(lambda: step(p_d, b_d)[0], iters=iters)
+        rows.append(
+            _forward_row(cfg, n_params, kernel_mode, SHARDED_MESH_LABEL, sec)
+        )
+        jax.clear_caches()
     return rows
 
 
@@ -217,15 +342,20 @@ def run(
     sharded: bool = True,
 ) -> list[dict]:
     rows = _single_device_rows(widths, iters)
+    rows += forward_leg_rows(iters)
     if sharded:
         rows += _sharded_leg_subprocess(iters)
-    emit_csv("table8_walltime", rows)
+    # the two legs carry different columns — emit as separate CSV blocks
+    emit_csv("table8_walltime", [r for r in rows if r["leg"] == "zo-step"])
+    emit_csv(
+        "table8_walltime_forward", [r for r in rows if r["leg"] == "forward"]
+    )
     out = Path(out_json)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(
         json.dumps(
             {
-                "schema": 2,
+                "schema": 3,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter
@@ -257,7 +387,7 @@ def main() -> None:
     )
     args = ap.parse_args()
     if args.sharded_child:
-        rows = sharded_leg_rows(args.iters)
+        rows = sharded_leg_rows(args.iters) + sharded_forward_rows(args.iters)
         print(_CHILD_MARKER + json.dumps(rows), flush=True)
         return
     widths = tuple(int(w) for w in str(args.widths).split(","))

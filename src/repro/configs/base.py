@@ -7,7 +7,26 @@ configs/__init__.py resolves ``--arch <id>``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
+
+_ATTENTION_IMPL_WARNED = False
+
+
+def _warn_attention_impl_once(impl: str) -> None:
+    global _ATTENTION_IMPL_WARNED
+    if _ATTENTION_IMPL_WARNED:
+        return
+    _ATTENTION_IMPL_WARNED = True
+    warnings.warn(
+        f"ModelConfig.attention_impl={impl!r} is deprecated: the forward "
+        "compute path is selected by the jit-static kernel_mode "
+        "('auto' | 'pallas' | 'xla') via repro.core.dispatch — mapping "
+        f"attention_impl={impl!r} onto kernel_mode={impl!r}. "
+        "Set kernel_mode directly.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclass(frozen=True)
@@ -50,7 +69,14 @@ class ModelConfig:
     dtype: str = "bfloat16"
     spmd_hints: bool = False          # emit with_sharding_constraint (launcher)
     batch_axis_names: tuple = ("data",)  # ("pod","data") on the multi-pod mesh
-    attention_impl: str = "xla"       # xla | pallas
+    # Forward-compute dispatch knob (jit-static): auto = pallas on TPU / xla
+    # elsewhere; launchers thread ZOConfig.kernel_mode in here so one switch
+    # rules the whole step (see repro.core.dispatch, forward section).
+    kernel_mode: str = "auto"
+    # DEPRECATED: pre-dispatch per-model impl string ("xla" | "pallas").
+    # When set it maps onto kernel_mode with a one-time warning so old
+    # configs / user YAML keep working; no forward code reads it.
+    attention_impl: str | None = None
     attn_chunk_q: int = 1024          # chunked-attention tile sizes
     attn_chunk_k: int = 1024
     attn_chunked_min_seq: int = 8192  # use chunked online-softmax attn >= this
@@ -58,6 +84,25 @@ class ModelConfig:
     remat: bool = False               # rematerialize block under scan (FO only)
     logits_chunk: int = 0             # 0 = unchunked cross-entropy
     decode_cache_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.attention_impl is not None:
+            if self.attention_impl not in ("xla", "pallas"):
+                raise ValueError(
+                    f"attention_impl={self.attention_impl!r}; expected "
+                    "'xla' | 'pallas' (deprecated — use kernel_mode)"
+                )
+            if self.kernel_mode not in ("auto", self.attention_impl):
+                # both knobs set and disagreeing: refuse rather than let the
+                # legacy field silently clobber an explicit kernel_mode
+                raise ValueError(
+                    f"conflicting lowering knobs: kernel_mode="
+                    f"{self.kernel_mode!r} but deprecated attention_impl="
+                    f"{self.attention_impl!r}; drop attention_impl"
+                )
+            _warn_attention_impl_once(self.attention_impl)
+            object.__setattr__(self, "kernel_mode", self.attention_impl)
+            object.__setattr__(self, "attention_impl", None)
 
     @property
     def q_per_kv(self) -> int:

@@ -1,13 +1,20 @@
-"""Kernel-dispatch layer: route every ZO method's leaf ops to Pallas or XLA.
+"""Compute-dispatch layer: the single authority that routes the WHOLE
+step's compute — every ZO method's perturb/update leaf ops AND the forward
+kernels (flash attention, Mamba selective scan) — to Pallas or XLA.
 
 Every ZO method touches every parameter leaf four times per step (three
 Algorithm-1 perturbation passes + one optimizer update).  The naive XLA
 lowering materializes the perturbation ``Z`` — a dense parameter-sized
 buffer — in HBM for each of those touches; the fused kernels in
 ``repro.kernels`` keep Z (and any reconstructed moments) tile-resident in
-VMEM so each weight leaf makes exactly one HBM round-trip per touch.  This
-module is the single place that decides, per leaf, which lowering runs —
-for *all nine* methods in ``estimator.METHODS``:
+VMEM so each weight leaf makes exactly one HBM round-trip per touch.  And
+because ZO fine-tuning has no backward pass, the three forward passes those
+perturbations feed are ~all of step walltime — so the forward compute
+dispatches here too (see the forward-path section at the bottom:
+:func:`attention_fwd` / :func:`selective_scan_fwd`, selected by the same
+``kernel_mode`` threaded through ``ModelConfig``).  This module is the
+single place that decides which lowering runs — for *all nine* methods in
+``estimator.METHODS``:
 
   TeZO family   Z = Σ_s τ_s(u_s∘v_s)   → kernels.tezo_perturb / tezo_adam
   MeZO family   Z ~ N(0, I_d) dense    → kernels.zo_noise (on-chip counter
@@ -623,3 +630,179 @@ def subzo_update_leaf(
     return subzo_perturb_leaf(
         w, u, v, sbar, -lr, use_kernel=use_kernel, decay=decay, path=path
     )
+
+
+# ---------------------------------------------------------------------------
+# Forward-path dispatch: flash attention + selective scan
+#
+# ZO fine-tuning has no backward pass, so Algorithm 1's three forward passes
+# dominate step walltime — the forward compute kernels are first-class
+# dispatch citizens exactly like the ZO leaf ops above.  The knob is the
+# same jit-static ``kernel_mode`` (``ModelConfig.kernel_mode``, threaded
+# from ``ZOConfig.kernel_mode`` by the launchers so one switch rules the
+# whole step); ``ModelConfig.attention_impl`` is retired (a deprecation
+# shim maps it onto kernel_mode).
+#
+# Execution matrix for a resolved "pallas" forward:
+#   * TPU                       → the Mosaic kernels (kernels/flash_attention,
+#                                 kernels/selective_scan), pad-and-mask via
+#                                 the ops wrappers.
+#   * CPU, interpret FORCED     → the same kernels through the Pallas
+#     (ops.set_interpret(True))   interpreter — the cross-lowering parity
+#                                 path the forward tests use.
+#   * CPU, auto-detected        → the online-softmax / sequential-scan XLA
+#                                 twins inside a PALLAS_FLASH_REGION named
+#                                 scope, so the dry-run's HLO analyzer costs
+#                                 the region with the kernel's HBM model
+#                                 (launch/hlo_analysis.py) instead of paying
+#                                 interpreter emulation in the hot forward.
+#
+# Sharded forward: a pallas_call has no GSPMD partitioning rule, so under a
+# registered :func:`shard_context` the kernel path wraps in shard_map over
+# the model's BATCH axes and — when the head/channel dim divides the
+# "model" axis — the tensor-parallel HEAD/CHANNEL shard too (attention is
+# per-head and the scan per-channel, so neither needs cross-device math);
+# remaining operands are replicated.  Consistent with how the ZO leaf ops
+# shard.  The XLA paths never wrap (GSPMD partitions them).
+# ---------------------------------------------------------------------------
+
+
+def forward_execution(mode: str) -> tuple[str, bool]:
+    """What the forward compute executes for a kernel_mode: (path, kernel).
+
+    ``path`` is "pallas" | "xla"; ``kernel`` is True when the real Pallas
+    kernel runs (Mosaic on TPU, or the interpreter when a test forced it) —
+    False with path "pallas" means the marker-region XLA twin runs (the
+    off-TPU production/dry-run lowering).  Static at trace time.
+    """
+    resolved = resolve_kernel_mode(mode)
+    if resolved != "pallas":
+        return "xla", False
+    return "pallas", jax.default_backend() == "tpu" or ops.interpret_forced()
+
+
+def _forward_mesh(batch_axes, batch_dim: int) -> tuple[Optional[Mesh], tuple]:
+    """(mesh, batch axes present on it) when a shard context is registered
+    and the leading batch dim divides their product (shard_map needs even
+    shards; an indivisible batch falls back to the unwrapped kernel)."""
+    ctx = _SHARD_CTX
+    if ctx is None:
+        return None, ()
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    ba = tuple(a for a in batch_axes if a in sizes)
+    prod = 1
+    for a in ba:
+        prod *= sizes[a]
+    if not ba or batch_dim % prod != 0:
+        return None, ()
+    return ctx.mesh, ba
+
+
+def _forward_model_axis(mesh: Mesh, *dims: int) -> Optional[str]:
+    """The tensor-parallel ("model") mesh axis for a forward kernel, when
+    every dim in ``dims`` divides its size — attention heads and scan
+    channels are shard-independent, so the kernel runs on its LOCAL head/
+    channel shard instead of all-gathering the model axis and computing
+    every head redundantly on each of its devices.  For GQA the KV-head
+    divisibility requirement also keeps each local H chunk aligned to whole
+    KV groups, so the in-kernel h → h//G mapping stays correct per shard."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    size = sizes.get("model", 1)
+    if size > 1 and all(d % size == 0 for d in dims):
+        return "model"
+    return None
+
+
+def attention_fwd(
+    q: jax.Array,        # [B, S, H, dh]
+    k: jax.Array,        # [B, T, KV, dh]
+    v: jax.Array,        # [B, T, KV, dh]
+    *,
+    window: int = 0,
+    q_offset=0,
+    mode: str = "auto",
+    batch_axes: tuple = (),
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+    chunked_min_seq: int = 8192,
+) -> jax.Array:
+    """Causal (GQA / sliding-window) prefill attention for one block.
+
+    The single authority for which attention lowering runs — models call
+    this via ``layers.attention`` and never branch on an impl knob
+    themselves.  XLA path keeps the pre-dispatch behaviour: materialized
+    scores under ``chunked_min_seq``, the online-softmax chunked twin above.
+    """
+    from repro.models import layers  # lazy: layers imports this module
+
+    path, kernel = forward_execution(mode)
+    if path == "pallas" and kernel:
+        mesh, ba = _forward_mesh(batch_axes, q.shape[0])
+        if mesh is None:
+            return ops.flash_attention(q, k, v, window=window, q_offset=q_offset)
+        m_ax = _forward_model_axis(mesh, q.shape[2], k.shape[2])
+        spec = P(ba, None, m_ax, None)
+
+        def local_fn(q_l, k_l, v_l):
+            return ops.flash_attention(
+                q_l, k_l, v_l, window=window, q_offset=q_offset
+            )
+
+        return _shard_call(local_fn, mesh, (spec, spec, spec), spec, q, k, v)
+    if path == "pallas":
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return layers.chunked_attention(
+                q, k, v, window=window, q_offset=q_offset,
+                chunk_q=chunk_q, chunk_k=chunk_k,
+            )
+    if q.shape[1] >= chunked_min_seq:
+        return layers.chunked_attention(
+            q, k, v, window=window, q_offset=q_offset,
+            chunk_q=chunk_q, chunk_k=chunk_k,
+        )
+    return layers.full_attention(q, k, v, window=window, q_offset=q_offset)
+
+
+def selective_scan_fwd(
+    x: jax.Array,      # [B, S, D]
+    dt: jax.Array,     # [B, S, D] (softplus'd)
+    a: jax.Array,      # [D, N]
+    b: jax.Array,      # [B, S, N]
+    c: jax.Array,      # [B, S, N]
+    h0: jax.Array,     # [B, D, N] f32
+    *,
+    mode: str = "auto",
+    batch_axes: tuple = (),
+) -> tuple[jax.Array, jax.Array]:
+    """Mamba-1 selective scan for one block: (y [B,S,D] f32, h_last).
+
+    The caller adds the D∘x skip.  Kernel path keeps the [bd, N] state tile
+    VMEM-resident for the whole sequence; S == 1 (decode) always takes the
+    sequential XLA cell — a one-timestep kernel launch buys nothing.
+    """
+    from repro.kernels.ref import selective_scan_ref
+
+    path, kernel = forward_execution(mode)
+    if x.shape[1] == 1:
+        path, kernel = "xla", False
+    if path == "pallas" and kernel:
+        mesh, ba = _forward_mesh(batch_axes, x.shape[0])
+        if mesh is None:
+            return ops.selective_scan(x, dt, a, b, c, h0)
+        m_ax = _forward_model_axis(mesh, x.shape[2])
+        xs = P(ba, None, m_ax)       # x/dt/y: channels ride the model axis
+        bc = P(ba, None, None)       # B/C: shared across channels
+        hs = P(ba, m_ax, None)       # state: [B, D, N]
+
+        def local_fn(x_l, dt_l, a_l, b_l, c_l, h0_l):
+            return ops.selective_scan(x_l, dt_l, a_l, b_l, c_l, h0_l)
+
+        return _shard_call(
+            local_fn, mesh,
+            (xs, xs, P(m_ax, None), bc, bc, hs), (xs, hs),
+            x, dt, a, b, c, h0,
+        )
+    if path == "pallas":
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return selective_scan_ref(x, dt, a, b, c, h0)
+    return selective_scan_ref(x, dt, a, b, c, h0)

@@ -1,0 +1,31 @@
+"""Version-spanning Pallas-TPU compat helpers (the kernel-side analogue of
+``distributed.context.compat_shard_map``).
+
+The TPU compiler-params dataclass was renamed across jax versions:
+``pltpu.TPUCompilerParams`` (≤ 0.4.x / early 0.5) became
+``pltpu.CompilerParams`` (newer pins).  The seed's flash-attention and
+selective-scan kernels were written against the new name and broke on this
+pin — route every kernel's compiler params through :func:`compiler_params`
+so one source tree lowers on either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Prefer the new name; fall back to the old one.  Resolved once at import so
+# a typo'd kwarg fails loudly at kernel-definition time, not inside a trace.
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build TPU compiler params on whichever class this jax pin exposes.
+
+    ``dimension_semantics`` is the only field the repro kernels use today;
+    extra kwargs pass through so future fields (vmem_limit_bytes, ...) don't
+    need another shim hop.
+    """
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=dimension_semantics, **kwargs
+    )

@@ -25,13 +25,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import compiler_params
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
     *, bq: int, bk: int, nk: int, scale: float,
-    causal: bool, window: int, q_offset: int,
+    causal: bool, window: int, q_offset: int, kv_len: int,
 ):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -44,7 +46,9 @@ def _flash_kernel(
 
     qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    allow = jnp.ones((bq, bk), jnp.bool_)
+    # kv_len masks the zero-padded kv tail when T was padded up to the tile
+    # multiple (pad-and-mask tiling for awkward sequence lengths)
+    allow = kpos < kv_len
     if causal:
         allow = allow & (kpos <= qpos)
     if window > 0:
@@ -55,7 +59,7 @@ def _flash_kernel(
     q_hi = q_lo + bq - 1
     k_lo = ik * bk
     k_hi = k_lo + bk - 1
-    live = jnp.asarray(True)
+    live = jnp.asarray(k_lo < kv_len)
     if causal:
         live = live & (k_lo <= q_hi)
     if window > 0:
@@ -88,7 +92,10 @@ def _flash_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+    static_argnames=(
+        "causal", "window", "q_offset", "bq", "bk", "kv_len", "head_scale",
+        "interpret",
+    ),
 )
 def flash_attention(
     q: jax.Array,        # [B, S, H, dh]
@@ -100,8 +107,13 @@ def flash_attention(
     q_offset: int = 0,
     bq: int = 512,
     bk: int = 512,
+    kv_len: int = 0,
+    head_scale: float = 0.0,
     interpret: bool = False,
 ) -> jax.Array:
+    """``kv_len`` (0 ≡ T) is the true kv length when T carries zero-padding
+    from the pad-and-mask tiling; ``head_scale`` (0 ≡ dh**-0.5) pins the
+    softmax scale to the *unpadded* head dim when dh was lane-padded."""
     B, S, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -109,12 +121,13 @@ def flash_attention(
     bk = min(bk, T)
     assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
     nq, nk = S // bq, T // bk
-    scale = dh ** -0.5
+    scale = head_scale if head_scale else dh ** -0.5
+    kv_len = kv_len or T
 
     kernel = functools.partial(
         _flash_kernel,
         bq=bq, bk=bk, nk=nk, scale=scale,
-        causal=causal, window=window, q_offset=q_offset,
+        causal=causal, window=window, q_offset=q_offset, kv_len=kv_len,
     )
     return pl.pallas_call(
         kernel,
@@ -131,7 +144,7 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

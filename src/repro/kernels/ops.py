@@ -33,6 +33,11 @@ mesh-partitioned leaf (core.dispatch derives them inside shard_map) — so
 the counter streams stay functions of the *global* element; update wrappers
 take ``decay`` (the decoupled weight-decay factor 1 − lr·wd) and fold it
 into the kernels' scalar params instead of a separate full-W pass.
+
+The FORWARD kernels are production code too (PR 4): ``flash_attention``
+and ``selective_scan`` at the bottom are the hot-forward wrappers that
+``core.dispatch.attention_fwd`` / ``selective_scan_fwd`` call, with the
+same pad-and-mask tiling contract on awkward sequence/head dims.
 """
 from __future__ import annotations
 
@@ -73,6 +78,20 @@ def is_interpret() -> bool:
     return _interpret()
 
 
+def interpret_forced() -> bool:
+    """Was interpret mode explicitly pinned via ``set_interpret(True)``?
+
+    The forward dispatch (core.dispatch.attention_fwd / selective_scan_fwd)
+    uses this to distinguish a *test* override — run the real kernel via the
+    interpreter, the cross-lowering parity path — from plain off-TPU
+    auto-detection, where the production forward takes the XLA twin inside
+    the kernel-modeled marker region instead (interpret-mode emulation in a
+    model's hot forward would be pathologically slow and would wreck the
+    dry-run's HLO costing).
+    """
+    return _FORCE_INTERPRET is True
+
+
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
@@ -95,21 +114,6 @@ def _pad_sigma(sigma, multiple: int = 128):
     if r_pad == r:
         return sigma
     return jnp.pad(sigma, [(0, r_pad - r), (0, r_pad - r)])
-
-
-def _tile(dim: int, pref: int) -> int:
-    """Largest divisor of `dim` that is <= pref (power-of-two-ish search).
-
-    Used by the sequence-dim kernels (flash attention / selective scan)
-    whose dims are framework-controlled multiples; the weight-leaf ZO
-    kernels use ``_tile_padded`` instead, which never degrades on awkward
-    dims (the old divisor-search pathology: a prime-ish dim like vocab
-    50257 fell all the way to tile size 1).
-    """
-    t = min(pref, dim)
-    while dim % t != 0:
-        t -= 1
-    return t
 
 
 def _tile_padded(dim: int, pref: int, mult: int) -> tuple[int, int]:
@@ -393,24 +397,75 @@ def subzo_perturb(w, u, v, sigma, scale, *, decay=None, pad_rank: bool = True):
 
 
 # ---------------------------------------------------------------------------
-# Attention / SSM
+# Attention / SSM — the forward-path kernels, same pad-and-mask contract as
+# the ZO weight-leaf kernels: awkward sequence/head dims are zero-padded up
+# to the tile multiple (via _tile_padded) instead of degrading the tile size
+# through divisor search, and the tail is masked/sliced after the call.
 # ---------------------------------------------------------------------------
 
 
+def _pad_axis(a, axis: int, target: int):
+    if a.shape[axis] == target:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, target - a.shape[axis])
+    return jnp.pad(a, pad)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, bq=512, bk=512):
-    bq = _tile(q.shape[1], bq)
-    bk = _tile(k.shape[1], bk)
-    return _flash(
-        q, k, v, causal=causal, window=window, q_offset=int(q_offset),
-        bq=bq, bk=bk, interpret=_interpret(),
+    """Fused flash attention with pad-and-mask tiling.
+
+    Awkward S/T pad to the sublane-aligned tile (padded kv columns masked
+    in-kernel via ``kv_len``, padded q rows sliced off); an awkward head dim
+    pads to the lane multiple with the softmax scale pinned to the true dh
+    (zero-padded q/k columns contribute nothing to the scores and padded v
+    columns produce sliced-off output columns).
+    """
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    bq_t, s_pad = _tile_padded(S, bq, _SUBLANE)
+    bk_t, t_pad = _tile_padded(T, bk, _SUBLANE)
+    # sublane-align a truly awkward head dim; aligned dims (the ubiquitous
+    # 64/128) pass through untouched — Mosaic pads sub-lane minor dims in
+    # VMEM implicitly, so padding dh=64 to the 128 lane width here would
+    # double the q/k/v/o HBM traffic for nothing
+    dh_pad = _round_up(dh, _SUBLANE)
+    out = _flash(
+        _pad_axis(_pad_axis(q, 1, s_pad), 3, dh_pad),
+        _pad_axis(_pad_axis(k, 1, t_pad), 3, dh_pad),
+        _pad_axis(_pad_axis(v, 1, t_pad), 3, dh_pad),
+        causal=causal, window=window, q_offset=int(q_offset),
+        bq=bq_t, bk=bk_t, kv_len=T, head_scale=dh ** -0.5,
+        interpret=_interpret(),
     )
+    if (s_pad, dh_pad) != (S, dh):
+        out = out[:, :S, :, :dh]
+    return out
 
 
 def selective_scan(x, dt, a, b, c, h0, *, bd=128, bs=2048):
     """Mamba-1 selective scan; VMEM-resident state on TPU (see
-    kernels/selective_scan.py), interpret-mode oracle path on CPU."""
+    kernels/selective_scan.py), interpret-mode oracle path on CPU.
+
+    Pad-and-mask tiling: an awkward channel dim D pads to the tile multiple
+    (zero channels evolve zero state, sliced off) and an awkward sequence
+    pads with identity timesteps — dt ≡ 0 ⇒ exp(0·A) = 1 and a zero input
+    injection, so h_last is exact and the padded y tail is sliced off.
+    """
     from repro.kernels.selective_scan import selective_scan as _scan
 
-    bd_t = _tile(x.shape[2], bd)
-    bs_t = _tile(x.shape[1], bs)
-    return _scan(x, dt, a, b, c, h0, bd=bd_t, bs=bs_t, interpret=_interpret())
+    B, S, D = x.shape
+    bd_t, d_pad = _tile_padded(D, bd, _SUBLANE)
+    bs_t, s_pad = _tile_padded(S, bs, _SUBLANE)
+    if (d_pad, s_pad) != (D, S):
+        x = _pad_axis(_pad_axis(x, 1, s_pad), 2, d_pad)
+        dt = _pad_axis(_pad_axis(dt, 1, s_pad), 2, d_pad)
+        a = _pad_axis(a, 0, d_pad)
+        b = _pad_axis(b, 1, s_pad)
+        c = _pad_axis(c, 1, s_pad)
+        h0 = _pad_axis(h0, 1, d_pad)
+    y, h_last = _scan(x, dt, a, b, c, h0, bd=bd_t, bs=bs_t, interpret=_interpret())
+    if (d_pad, s_pad) != (D, S):
+        y = y[:, :S, :D]
+        h_last = h_last[:, :D]
+    return y, h_last

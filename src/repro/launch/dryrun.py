@@ -133,10 +133,13 @@ def run_cell(
     ba = overrides.pop("batch_axis_names", None)
     if ba is not None and multi_pod:
         ba = ("pod",) + tuple(a for a in ba if a != "pod")
+    # kernel_mode reaches the model config too: the forward compute (flash
+    # attention / selective scan) dispatches on it, for every cell kind —
+    # explicit per-preset overrides still win.
     cfg = get_config(arch).reduced(
         spmd_hints=True,
         batch_axis_names=ba or batch_axes(mesh),
-        **overrides,
+        **{"kernel_mode": kernel_mode, **overrides},
     )
     model = build_model(cfg)
     axes = model.logical_axes()
@@ -153,6 +156,16 @@ def run_cell(
     }
 
     t0 = time.time()
+    if shape.kind != "train":
+        # serving cells run no ZO step but their forward still dispatches:
+        # record the forward lowering (off-TPU "pallas" is the marker-region
+        # XLA twin, costed with the kernel HBM model by analyze_hlo)
+        from repro.core.dispatch import forward_execution
+
+        fwd_path, fwd_kernel = forward_execution(cfg.kernel_mode)
+        record["kernel_mode"] = fwd_path
+        if fwd_path == "pallas":
+            record["forward_kernel_executed"] = fwd_kernel
     if shape.kind == "train":
         # every ZO method routes through the kernel dispatch now; mark
         # interpret-mode pallas legs (off-TPU emulation, not Mosaic) so the
@@ -287,10 +300,10 @@ def main() -> None:
     ap.add_argument(
         "--kernel-mode", default="auto",
         choices=["auto", "pallas", "xla", "both"],
-        help="ZO hot-path lowering for train cells (all nine methods route "
-        "through the kernel dispatch); 'both' runs each train "
-        "cell twice (prefill/decode cells never touch the ZO step and run "
-        "once), tagging records [TAG-]kernel-xla / [TAG-]kernel-pallas so "
+        help="hot-path lowering for every cell — the ZO leaf ops (all nine "
+        "methods) and the forward compute (flash attention / selective "
+        "scan) dispatch on it; 'both' runs each cell twice, "
+        "tagging records [TAG-]kernel-xla / [TAG-]kernel-pallas so "
         "`benchmarks.roofline --tag [TAG-]kernel-xla --compare "
         "[TAG-]kernel-pallas` reports the two paths from this one "
         "invocation (the exact command is printed at the end)",
@@ -320,7 +333,12 @@ def main() -> None:
         if args.preset != "optimized":
             return {}
         cfg = get_config(arch)
-        ov: dict = {"attention_impl": "pallas", "logits_chunk": 1024}
+        ov: dict = {"logits_chunk": 1024}
+        if args.kernel_mode == "auto":
+            # the preset's default lowering is the kernel path — but an
+            # explicit --kernel-mode (incl. "both", whose whole point is the
+            # per-leg comparison) must keep control of the dispatch knob
+            ov["kernel_mode"] = "pallas"
         if cfg.family == "moe":
             ov["moe_impl"] = "ep"
         if cfg.family == "ssm":
@@ -330,15 +348,14 @@ def main() -> None:
         return ov
 
     if args.kernel_mode == "both" and args.method not in KERNEL_METHODS:
-        # every ZO method has a kernel path now; this only triggers for a
-        # hypothetical kernel-less method registered in the future
+        # even a hypothetical kernel-less ZO method still dispatches its
+        # FORWARD compute on kernel_mode, so 'both' stays meaningful
         print(
-            f"[dryrun] --kernel-mode both ignored: method {args.method!r} "
-            "has no kernel path; running once",
+            f"[dryrun] note: method {args.method!r} has no ZO kernel path; "
+            "--kernel-mode both still compares the forward lowerings",
             flush=True,
         )
-        kernel_runs = [("xla", args.tag)]
-    elif args.kernel_mode == "both":
+    if args.kernel_mode == "both":
         # one invocation → two tagged record sets for benchmarks.roofline
         prefix = args.tag + "-" if args.tag else ""
         kernel_runs = [
@@ -351,13 +368,10 @@ def main() -> None:
     failures = []
     n_cells = 0
     for arch, shape in cells:
-        # kernel_mode only reaches the ZO train step; prefill/decode cells
-        # are identical under both lowerings, so run them once — under the
-        # base tag, so they stay visible to the baseline roofline tables.
-        if SHAPES[shape].kind == "train":
-            runs = kernel_runs
-        else:
-            runs = [(kernel_runs[0][0], args.tag)]
+        # kernel_mode now reaches the whole step: train cells dispatch the
+        # ZO leaf ops AND the forward; prefill/decode cells dispatch their
+        # forward, so they run per kernel mode too.
+        runs = kernel_runs
         for mp in meshes:
             for kmode, tag in runs:
                 try:

@@ -219,18 +219,22 @@ def _dot_flops(inst: _Instr, comp: _Comp) -> float:
     m = _CONTRACT_RE.search(inst.line)
     if not m:
         return 2.0 * out_elems  # unknown contraction; minimal estimate
-    # lhs operand name = first arg
+    # lhs shape: this XLA version prints operand shapes inline in the arg
+    # list — ``dot(f32[32,64]{1,0} %lhs, f32[64,64]{1,0} %rhs)`` — so take
+    # the first shape literal after the paren; older pins printed bare
+    # operand names, for which we fall back to the symbol table.
     args = inst.line.split("(", 1)[1]
-    lhs_name = re.match(r"\s*%?([\w\.\-]+)", args)
+    dims_m = _SHAPE_RE.search(args)
+    if dims_m is None:
+        lhs_name = re.match(r"\s*%?([\w\.\-]+)", args)
+        if lhs_name and lhs_name.group(1) in comp.shapes:
+            dims_m = _SHAPE_RE.search(comp.shapes[lhs_name.group(1)])
     contract = 1.0
-    if lhs_name and lhs_name.group(1) in comp.shapes:
-        lhs_shape = comp.shapes[lhs_name.group(1)]
-        dims_m = _SHAPE_RE.search(lhs_shape)
-        if dims_m:
-            dims = [int(d) for d in dims_m.group(2).split(",") if d]
-            for idx in m.group(1).split(","):
-                if idx and int(idx) < len(dims):
-                    contract *= dims[int(idx)]
+    if dims_m:
+        dims = [int(d) for d in dims_m.group(2).split(",") if d]
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
     return 2.0 * out_elems * contract
 
 

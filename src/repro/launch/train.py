@@ -68,6 +68,9 @@ def train(
     verbose: bool = True,
 ) -> dict:
     cfg = (get_smoke_config(arch) if smoke else get_config(arch))
+    # one knob rules the whole step: the ZO kernel_mode also selects the
+    # forward compute lowering (flash attention / selective scan dispatch)
+    cfg = cfg.reduced(kernel_mode=kernel_mode)
     model = build_model(cfg)
     data = data_cfg or DataConfig(
         seq_len=seq_len, global_batch=global_batch,

@@ -75,46 +75,22 @@ class HymbaLM:
 
         Mamba-1's per-(channel,state) gating makes the recurrence
         chunk-UNparallelizable (unlike mLSTM); the hardware answer is the
-        VMEM-resident-state Pallas kernel (kernels/selective_scan.py) — on
-        the CPU dry-run host the same scan runs inside the kernel-modeled
-        region so the roofline reflects the deployed kernel (DESIGN §6)."""
+        VMEM-resident-state Pallas kernel (kernels/selective_scan.py).  The
+        lowering is selected solely by the jit-static ``kernel_mode`` via
+        ``dispatch.selective_scan_fwd`` — the kernel on the pallas path
+        (shard_map'd over the batch axes under a shard context; on the CPU
+        dry-run host the same scan runs inside the kernel-modeled region so
+        the roofline reflects the deployed kernel, DESIGN §6), the
+        sequential XLA scan otherwise and for S == 1 decode steps."""
+        from repro.core import dispatch
+
+        c = self.cfg
         A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [Di,N]
-        use_kernel = self.cfg.attention_impl == "pallas" and xc.shape[1] > 1
-        if use_kernel and jax.default_backend() == "tpu":
-            from repro.kernels import ops as kernel_ops
-
-            y, h_last = kernel_ops.selective_scan(
-                xc.astype(jnp.float32), dt.astype(jnp.float32), A,
-                B_in.astype(jnp.float32), C_in.astype(jnp.float32), h0,
-            )
-            y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
-            return y, h_last
-
-        def step(h, z):
-            x_t, dt_t, b_t, c_t = z       # [B,Di], [B,Di], [B,N], [B,N]
-            da = jnp.exp(dt_t[..., None] * A[None])             # [B,Di,N]
-            h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
-            y = jnp.einsum("bdn,bn->bd", h, c_t)
-            return h, y
-
-        def run_scan():
-            xs = tuple(
-                jnp.moveaxis(t, 1, 0)
-                for t in (
-                    xc.astype(jnp.float32),
-                    dt.astype(jnp.float32),
-                    B_in.astype(jnp.float32),
-                    C_in.astype(jnp.float32),
-                )
-            )
-            h_last, ys = jax.lax.scan(step, h0, xs)
-            return jnp.moveaxis(ys, 0, 1), h_last
-
-        if use_kernel:  # CPU dry-run: model the kernel's HBM behavior
-            with jax.named_scope("PALLAS_FLASH_REGION"):
-                y, h_last = run_scan()
-        else:
-            y, h_last = run_scan()
+        y, h_last = dispatch.selective_scan_fwd(
+            xc.astype(jnp.float32), dt.astype(jnp.float32), A,
+            B_in.astype(jnp.float32), C_in.astype(jnp.float32), h0,
+            mode=c.kernel_mode, batch_axes=c.batch_axis_names,
+        )
         y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
         return y, h_last
 
@@ -166,7 +142,8 @@ class HymbaLM:
         q = layers.apply_rope(q, sin, cos)
         k = layers.apply_rope(k, sin, cos)
         o = layers.attention(
-            q, k, v, window=c.window, q_offset=q_offset, impl=c.attention_impl,
+            q, k, v, window=c.window, q_offset=q_offset, mode=c.kernel_mode,
+            batch_axes=c.batch_axis_names,
             chunk_q=c.attn_chunk_q, chunk_k=c.attn_chunk_k,
             chunked_min_seq=c.attn_chunked_min_seq,
         )

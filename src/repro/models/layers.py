@@ -180,36 +180,26 @@ def decode_attention(
 
 
 def attention(
-    q, k, v, *, window=0, q_offset=0, impl="xla",
+    q, k, v, *, window=0, q_offset=0, mode="auto", batch_axes=(),
     chunk_q=1024, chunk_k=1024, chunked_min_seq=8192,
 ):
-    """Dispatch between materialized and online-softmax attention.
-
-    impl="pallas": on TPU, the fused flash kernel (repro/kernels).  On CPU
-    (dry-run host) the same online-softmax math runs as XLA inside a
+    """Forward-attention entry point: the lowering is selected solely by the
+    jit-static ``kernel_mode`` through ``repro.core.dispatch.attention_fwd``
+    (the single compute-dispatch authority for the step) — the fused flash
+    kernel on the pallas path (shard_map'd over ``batch_axes`` under a
+    registered shard context), or the materialized/chunked XLA math here.
+    Off-TPU the pallas path runs the chunked twin inside a
     PALLAS_FLASH_REGION named scope — the HLO analyzer recognizes the marker
     and costs the region with the kernel's HBM model (q/k/v/o traffic only;
     score blocks live in VMEM), while FLOPs/collectives are counted normally
     (launch/hlo_analysis.py, DESIGN §6)."""
-    S = q.shape[1]
-    if impl == "pallas":
-        if jax.default_backend() == "tpu":
-            from repro.kernels import ops as kernel_ops
+    from repro.core import dispatch
 
-            return kernel_ops.flash_attention(
-                q, k, v, window=window, q_offset=q_offset
-            )
-        with jax.named_scope("PALLAS_FLASH_REGION"):
-            return chunked_attention(
-                q, k, v, window=window, q_offset=q_offset,
-                chunk_q=chunk_q, chunk_k=chunk_k,
-            )
-    if S >= chunked_min_seq:
-        return chunked_attention(
-            q, k, v, window=window, q_offset=q_offset,
-            chunk_q=chunk_q, chunk_k=chunk_k,
-        )
-    return full_attention(q, k, v, window=window, q_offset=q_offset)
+    return dispatch.attention_fwd(
+        q, k, v, window=window, q_offset=q_offset, mode=mode,
+        batch_axes=batch_axes, chunk_q=chunk_q, chunk_k=chunk_k,
+        chunked_min_seq=chunked_min_seq,
+    )
 
 
 # --------------------------------------------------------------------------

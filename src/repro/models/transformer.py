@@ -101,7 +101,8 @@ class TransformerLM:
         k = layers.apply_rope(k, sin, cos)
         o = layers.attention(
             q, k, v,
-            window=c.window, q_offset=q_offset, impl=c.attention_impl,
+            window=c.window, q_offset=q_offset, mode=c.kernel_mode,
+            batch_axes=c.batch_axis_names,
             chunk_q=c.attn_chunk_q, chunk_k=c.attn_chunk_k,
             chunked_min_seq=c.attn_chunked_min_seq,
         )

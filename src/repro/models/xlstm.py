@@ -116,7 +116,7 @@ class XLSTMLM:
 
         qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
         ic, fc = to_chunks(it), to_chunks(ft)
-        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
 
         def body(carry, zs):
             C, n, m = carry                          # [B,Nh,dh,dh],[B,Nh,dh],[B,Nh]
@@ -127,8 +127,14 @@ class XLSTMLM:
                 m[..., None], jax.lax.cummax(a, axis=a.ndim - 1)
             )                                        # [B,Nh,Q]
             c_inter = jnp.exp(m[..., None] - M)      # ≤ 1
-            d_w = jnp.exp(a[..., None, :] - M[..., :, None])  # [B,Nh,Q(j),Q(l)]
-            scores = jnp.einsum("bhqd,bhld->bhql", qb, kb) * d_w * causal
+            # causal mask INSIDE the exponent: for l > j the raw exponent
+            # a_l − M_j grows ~|log f|·(l − j) and overflows f32 exp at
+            # chunk ≳ 128, where inf·0 from a post-exp mask would be NaN
+            expo = jnp.where(
+                causal, a[..., None, :] - M[..., :, None], -jnp.inf
+            )                                        # [B,Nh,Q(j),Q(l)]
+            d_w = jnp.exp(expo)                      # ≤ 1, 0 above diagonal
+            scores = jnp.einsum("bhqd,bhld->bhql", qb, kb) * d_w
             num = jnp.einsum("bhql,bhli->bhqi", scores, vb)
             num = num + c_inter[..., None] * jnp.einsum("bhij,bhqj->bhqi", C, qb)
             nq = jnp.sum(scores, axis=-1) + c_inter * jnp.einsum(
@@ -152,10 +158,29 @@ class XLSTMLM:
         hs = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, Nh, dh)
         return state, hs
 
+    def _mlstm_chunk(self) -> int:
+        """The chunkwise-parallel chunk size for this forward, selected by
+        the same dispatch knob as the attention/scan kernels.
+
+        There is no Pallas mLSTM kernel (the chunkwise reformulation already
+        turns the recurrence into MXU matmuls with O(S/chunk) state
+        traffic), so ``kernel_mode`` here picks between the two exact-equal
+        XLA lowerings: an explicit ``cfg.mlstm_chunk`` always wins; with the
+        default 0 the fast chunkwise path turns on whenever the mode
+        resolves to "pallas" (the run-at-hardware-speed setting), and the
+        sequential scan stays the "xla" reference lowering."""
+        from repro.core import dispatch
+
+        c = self.cfg
+        if c.mlstm_chunk:
+            return c.mlstm_chunk
+        path, _ = dispatch.forward_execution(c.kernel_mode)
+        return 256 if path == "pallas" else 0
+
     def _mlstm_block(self, p, x, state=None):
         """x [B,S,D] -> (y [B,S,D], new_state).  Sequential scan over S, or
-        chunkwise-parallel when cfg.mlstm_chunk divides S (exact same math —
-        tests assert equality)."""
+        chunkwise-parallel when the dispatch-selected chunk divides S (exact
+        same math — tests assert equality)."""
         c = self.cfg
         B, S, D = x.shape
         Nh, dh = c.n_heads, self.dh_m
@@ -176,7 +201,7 @@ class XLSTMLM:
                 jnp.zeros((B, Nh, dh), jnp.float32),
                 jnp.full((B, Nh), -1e30, jnp.float32),
             )
-        chunk = c.mlstm_chunk
+        chunk = self._mlstm_chunk()
         if chunk and S > chunk and S % chunk == 0:
             state, hs4 = self._mlstm_chunk_scan(q, k, v, it, ft, state, chunk)
             hs = hs4.reshape(B, S, Di).astype(x.dtype)

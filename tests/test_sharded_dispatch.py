@@ -234,6 +234,121 @@ _INVARIANCE_SCRIPT = textwrap.dedent(
 )
 
 
+_FORWARD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_threefry_partitionable", True)
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.core import dispatch
+    from repro.kernels import ops
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.distributed import batch_shardings
+    from repro.distributed.sharding import param_shardings
+
+    ops.set_interpret(True)
+    mesh = make_host_mesh(data=2, model=4)
+
+    # ---- leaf level: the shard_map'd flash kernel on a batch-sharded (and,
+    # when head dims divide the model axis, head-sharded) activation draws
+    # the same output as the unsharded kernel ------------------------------
+    key = jax.random.PRNGKey(11)
+    for H, KV, hspec in [
+        (4, 2, None),       # KV % model-size != 0 -> batch-only shard_map
+        (8, 4, "model"),    # GQA heads ride the TP axis (local KV groups)
+    ]:
+        q = jax.random.normal(key, (8, 60, H, 24)) * 0.3   # awkward S and dh
+        k = jax.random.normal(jax.random.fold_in(key, 1), (8, 60, KV, 24)) * 0.3
+        v = jax.random.normal(jax.random.fold_in(key, 2), (8, 60, KV, 24)) * 0.3
+        want = dispatch.attention_fwd(
+            q, k, v, window=17, mode="pallas", batch_axes=("data",)
+        )
+        sh = NamedSharding(mesh, P("data", None, hspec, None))
+
+        def f(q, k, v):
+            with dispatch.shard_context(mesh, {}):
+                return dispatch.attention_fwd(
+                    q, k, v, window=17, mode="pallas", batch_axes=("data",)
+                )
+
+        with mesh:
+            got = jax.jit(f, in_shardings=(sh, sh, sh), out_shardings=sh)(
+                jax.device_put(q, sh), jax.device_put(k, sh),
+                jax.device_put(v, sh)
+            )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=2e-5, err_msg=str(hspec)
+        )
+    print("ATTN_LEAF_SHARDED_OK")
+
+    # ---- and the shard_map'd selective scan ------------------------------
+    B, S, D, N = 8, 40, 24, 4
+    x = jax.random.normal(key, (B, S, D)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (B, S, D)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (D, N)) * 0.3)
+    bb = jax.random.normal(jax.random.fold_in(key, 5), (B, S, N)) * 0.5
+    cc = jax.random.normal(jax.random.fold_in(key, 6), (B, S, N)) * 0.5
+    h0 = jax.random.normal(jax.random.fold_in(key, 7), (B, D, N)) * 0.1
+    wy, wh = dispatch.selective_scan_fwd(
+        x, dt, a, bb, cc, h0, mode="pallas", batch_axes=("data",)
+    )
+    s3 = NamedSharding(mesh, P("data", None, None))
+
+    def g(x, dt, a, bb, cc, h0):
+        with dispatch.shard_context(mesh, {}):
+            return dispatch.selective_scan_fwd(
+                x, dt, a, bb, cc, h0, mode="pallas", batch_axes=("data",)
+            )
+
+    rep2 = NamedSharding(mesh, P(None, None))
+    with mesh:
+        gy, gh = jax.jit(
+            g,
+            in_shardings=(s3, s3, rep2, s3, s3, s3),
+            out_shardings=(s3, s3),
+        )(*(jax.device_put(t, s)
+            for t, s in zip((x, dt, a, bb, cc, h0), (s3, s3, rep2, s3, s3, s3))))
+    np.testing.assert_allclose(np.asarray(gy), np.asarray(wy), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(wh), atol=1e-5)
+    print("SCAN_LEAF_SHARDED_OK")
+
+    # ---- model level: a whole sharded forward (flash kernels inside the
+    # layer scan, shard_map inside pjit) matches the single-device xla loss -
+    shape = ShapeConfig("t", seq_len=24, global_batch=8, kind="train")
+    base = get_smoke_config("opt-125m").reduced(batch_axis_names=("data",))
+    # reference runs on one device with no mesh -> no spmd hints there
+    model_x = build_model(base.reduced(kernel_mode="xla"))
+    model_p = build_model(base.reduced(kernel_mode="pallas", spmd_hints=True))
+    params = model_x.init(jax.random.PRNGKey(0))
+    batch = model_x.make_inputs(jax.random.PRNGKey(1), shape)
+    want_loss = float(model_x.loss_fn(params, batch))
+
+    p_sh = param_shardings(mesh, model_p.logical_axes(), model_p.abstract_params())
+    b_sh = batch_shardings(mesh, jax.eval_shape(lambda: batch))
+
+    def loss_sharded(p, b):
+        with dispatch.shard_context(mesh, {}):
+            return model_p.loss_fn(p, b)
+
+    with mesh:
+        got_loss = float(
+            jax.jit(loss_sharded, in_shardings=(p_sh, b_sh))(
+                jax.device_put(params, p_sh), jax.device_put(batch, b_sh)
+            )
+        )
+    np.testing.assert_allclose(got_loss, want_loss, rtol=2e-5)
+    print("MODEL_FORWARD_SHARDED_OK")
+    """
+)
+
+
 def _run_script(tmp_path, name, script, markers):
     path = tmp_path / name
     path.write_text(script)
@@ -257,6 +372,22 @@ def test_sharded_dispatch_parity(tmp_path):
     _run_script(
         tmp_path, "sharded_parity.py", _PARITY_SCRIPT,
         ("PARITY_TEZO_ADAM_OK", "PARITY_SUBZO_OK", "MEZO_LR0_IDENTITY_OK"),
+    )
+
+
+@pytest.mark.slow
+def test_sharded_forward_dispatch_parity(tmp_path):
+    """The forward kernels are shard-aware under the PR-3 shard context:
+    shard_map'd flash attention / selective scan on a 2x4 mesh == the
+    unsharded kernels (leaf level), and a whole batch-sharded model forward
+    under kernel_mode="pallas" == the single-device xla loss."""
+    _run_script(
+        tmp_path, "sharded_forward.py", _FORWARD_SCRIPT,
+        (
+            "ATTN_LEAF_SHARDED_OK",
+            "SCAN_LEAF_SHARDED_OK",
+            "MODEL_FORWARD_SHARDED_OK",
+        ),
     )
 
 
