@@ -8,7 +8,9 @@ smoke runs width x1 only while the committed baseline also carries x4).  A
 method silently losing its pallas leg, a kernel-mode regressing to the
 dense path, the sharded leg disappearing, or the forward leg (schema 3:
 prefill rows per model × kernel mode, ``leg: "forward"``) vanishing all
-fail here; a fresh file with no forward-leg rows fails unconditionally.
+fail here; a fresh file with no forward-leg rows fails unconditionally, and
+so does a zo-step row without the schema-4 ``zo_passes`` field (the chained
+2q+1 pass schedule must stay self-describing).
 New combinations are allowed (they become binding once committed).
 
 Usage (CI):
@@ -51,6 +53,20 @@ def check(fresh_path: str, baseline_path: str) -> int:
     # path, regardless of what the baseline carries
     if not any(r.get("leg") == "forward" for r in fresh.get("records", [])):
         print(f"[check_bench] FAIL: {fresh_path} has no forward-leg records")
+        return 1
+    # schema 4: zo-step rows must be pass-count self-describing (the
+    # chained-perturbation schedule — 2q+1 full-W passes — is part of the
+    # record; a row silently losing ``zo_passes`` would make the bytes-moved
+    # trajectory unverifiable across PRs)
+    no_passes = 0
+    for rec in fresh.get("records", []):
+        if rec.get("leg", "zo-step") == "zo-step" and "zo_passes" not in rec:
+            no_passes += 1
+    if no_passes:
+        print(
+            f"[check_bench] FAIL: {no_passes} zo-step record(s) in "
+            f"{fresh_path} lack the schema-4 'zo_passes' field",
+        )
         return 1
     missing = sorted(record_keys(baseline) - record_keys(fresh))
     if missing:

@@ -75,35 +75,43 @@ def zo_memory_model(
 # reduce; tracked across PRs via BENCH_kernels.json).  Coarse by design:
 # counts parameter-sized streams only (factor/τ reads are an r/min(m,n)
 # fraction and activations depend on the model, not the ZO method).
+# Pass-count-aware since the chained-perturbation fusion: the chained
+# "inplace" schedule makes 2q+1 full-W passes, the literal Algorithm-1
+# "unchained" branch 3q+1 — ``repro.core.zo_step.zo_pass_count`` is the
+# single source of truth (also recorded per BENCH row as ``zo_passes``).
 # ---------------------------------------------------------------------------
 def zo_step_bytes_model(
     n_params: float,
     method: str,
     kernel_path: str,          # "pallas" | "xla"
     q_probes: int = 1,
+    restore_mode: str = "inplace",
     dtype_bytes: int = 2,      # bf16 weights
     state_bytes: int = 4,      # f32 dense moments
 ) -> float:
     """Estimated HBM bytes moved by the ZO step's perturb/update touches.
 
-    Per probe there are 3 perturbation passes; fused, each is one W
-    round-trip (read+write = 2·P); unfused, the dense Z is materialized and
-    re-read (≈ 4·P).  The update adds one more touch, plus a round-trip per
+    ``zo_pass_count(q_probes, restore_mode)`` full-parameter passes per
+    step (chained: first_perturb + q flips + q−1 bridges + the
+    restore-fused update = 2q+1; unchained: 3q+1).  Fused, each pass is one
+    W round-trip (read+write = 2·P); unfused, the dense Z is materialized
+    and re-read (≈ 4·P).  The update pass additionally round-trips each
     dense moment buffer (MeZO-m/-Adam; TeZO moments are r-vectors, LOZO-m's
     factored momentum is r·n — both negligible here).
     """
+    from repro.core.zo_step import zo_pass_count
+
     P = n_params * dtype_bytes
     S = n_params * state_bytes
     touch = 2.0 * P if kernel_path == "pallas" else 4.0 * P
-    perturbs = 3.0 * q_probes * touch
-    update = touch
+    total = zo_pass_count(q_probes, restore_mode) * touch
     if method in ("mezo_m",):
-        update += 2.0 * S
+        total += 2.0 * S
     elif method in ("mezo_adam",):
-        update += 4.0 * S
+        total += 4.0 * S
     elif method in ("tezo_adam",) and kernel_path == "xla":
-        update += 2.0 * P   # dense M and V reconstructions materialized
-    return perturbs + update
+        total += 2.0 * P   # dense M and V reconstructions materialized
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,11 @@ Besides the stdout CSV, ``run()`` writes ``results/BENCH_kernels.json`` —
 per-(leg, model, method, kernel-mode, mesh) walltime plus an analytic
 bytes-moved estimate — so the perf trajectory is machine-trackable across
 PRs (``benchmarks/check_bench.py`` gates CI on record coverage, including
-the forward-leg records).
+the forward-leg records).  Schema 4: every zo-step row records its step
+schedule (``q_probes``, ``restore_mode``, ``zo_passes`` — 2q+1 full-W
+passes on the chained default; see ``repro.core.zo_step.zo_pass_count``)
+and the bytes-moved model is pass-count-aware; ``check_bench`` fails a
+fresh file whose zo-step rows lack ``zo_passes``.
 """
 from __future__ import annotations
 
@@ -56,7 +60,7 @@ from benchmarks.common import (
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core import KERNEL_METHODS, ZOConfig, build_zo_train_step, init_zo_state
-from repro.core import kernel_execution
+from repro.core import kernel_execution, zo_pass_count
 from repro.core.dispatch import forward_execution
 from repro.kernels.ops import is_interpret
 from repro.models import build_model
@@ -182,8 +186,20 @@ def _single_device_rows(widths, iters: int) -> list[dict]:
                         "mesh": "1x1",
                         "ms_per_iter": round(sec * 1e3, 2),
                         "vs_mezo": round(sec / base, 3) if base else 1.0,
+                        # schema 4: the step schedule is part of the record
+                        # (2q+1 chained full-W passes — check_bench ratchets
+                        # on the field's presence)
+                        "q_probes": zo_cfg.q_probes,
+                        "restore_mode": zo_cfg.restore_mode,
+                        "zo_passes": zo_pass_count(
+                            zo_cfg.q_probes, zo_cfg.restore_mode
+                        ),
                         "bytes_moved_est_mb": round(
-                            zo_step_bytes_model(n_params, method, resolved)
+                            zo_step_bytes_model(
+                                n_params, method, resolved,
+                                q_probes=zo_cfg.q_probes,
+                                restore_mode=zo_cfg.restore_mode,
+                            )
                             / 2 ** 20,
                             1,
                         ),
@@ -258,8 +274,17 @@ def sharded_leg_rows(iters: int) -> list[dict]:
                     "mesh": SHARDED_MESH_LABEL,
                     "ms_per_iter": round(sec * 1e3, 2),
                     "vs_mezo": round(sec / base, 3) if base else 1.0,
+                    "q_probes": zo_cfg.q_probes,
+                    "restore_mode": zo_cfg.restore_mode,
+                    "zo_passes": zo_pass_count(
+                        zo_cfg.q_probes, zo_cfg.restore_mode
+                    ),
                     "bytes_moved_est_mb": round(
-                        zo_step_bytes_model(n_params, method, resolved) / 2 ** 20,
+                        zo_step_bytes_model(
+                            n_params, method, resolved,
+                            q_probes=zo_cfg.q_probes,
+                            restore_mode=zo_cfg.restore_mode,
+                        ) / 2 ** 20,
                         1,
                     ),
                 }
@@ -355,7 +380,9 @@ def run(
     out.write_text(
         json.dumps(
             {
-                "schema": 3,
+                # schema 4: zo-step rows carry q_probes / restore_mode /
+                # zo_passes (the chained 2q+1 full-W pass schedule)
+                "schema": 4,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter

@@ -23,8 +23,10 @@ from repro.core.dispatch import (
 from repro.core.estimator import METHODS, ZOConfig, ZOMethod, get_method
 from repro.core.rank import leaf_spectral_ranks, select_ranks, spectral_rank
 from repro.core.zo_step import (
+    RESTORE_MODES,
     ZOTrainState,
     build_eval_step,
     build_zo_train_step,
     init_zo_state,
+    zo_pass_count,
 )

@@ -2,12 +2,17 @@
 step's compute — every ZO method's perturb/update leaf ops AND the forward
 kernels (flash attention, Mamba selective scan) — to Pallas or XLA.
 
-Every ZO method touches every parameter leaf four times per step (three
-Algorithm-1 perturbation passes + one optimizer update).  The naive XLA
-lowering materializes the perturbation ``Z`` — a dense parameter-sized
-buffer — in HBM for each of those touches; the fused kernels in
-``repro.kernels`` keep Z (and any reconstructed moments) tile-resident in
-VMEM so each weight leaf makes exactly one HBM round-trip per touch.  And
+Every ZO method touches every parameter leaf on each of the step's
+full-parameter passes — 2q+1 under the chained transition schedule of
+``core.zo_step`` (first_perturb / flip / bridge / restore_into_update),
+3q+1 on the unchained branch.  The naive XLA lowering materializes the
+perturbation ``Z`` — a dense parameter-sized buffer — in HBM for each of
+those touches; the fused kernels in ``repro.kernels`` keep Z (and any
+reconstructed moments) tile-resident in VMEM so each weight leaf makes
+exactly one HBM round-trip per pass, and the chain leaf ops
+(``perturb_pair_leaf`` / ``noise_perturb_pair_leaf`` / the ``restore_*``
+update operands) merge two logical passes into one such round-trip with
+bitwise-identical arithmetic.  And
 because ZO fine-tuning has no backward pass, the three forward passes those
 perturbations feed are ~all of step walltime — so the forward compute
 dispatches here too (see the forward-path section at the bottom:
@@ -301,9 +306,11 @@ def noise_kernel_eligible(w: jax.Array) -> bool:
 
 def _tezo_kernel_call(w, factor, tau, scale, decay, path: str) -> jax.Array:
     """Fused decay·W + scale·recon(τ) — shard_map'd over the mesh when a
-    shard context is registered, plain ops call otherwise."""
+    shard context is registered, plain ops call otherwise.  ``tau`` may be a
+    stacked [..., k, r] transition chain with ``scale`` [k] (one W pass
+    applying k deltas — see ops.tezo_perturb)."""
     mesh, spec = _leaf_mesh_spec(path, w.ndim)
-    scale_a = _scalar_f32(scale)
+    scale_a = jnp.asarray(scale, jnp.float32)
     if mesh is None:
         return ops.tezo_perturb(w, factor.u, factor.v, tau, scale_a, decay=decay)
     decay_a = _decay_f32(decay)
@@ -338,6 +345,39 @@ def perturb_leaf(
     return add_scaled(w, reconstruct(factor, tau), scale)
 
 
+def _stack_taus(tau_a: jax.Array, tau_b: jax.Array) -> jax.Array:
+    """[..., 2, r] chain from two per-probe τ vectors."""
+    return jnp.stack([tau_a, tau_b], axis=-2)
+
+
+def perturb_pair_leaf(
+    w: jax.Array,
+    factor: CPDFactor,
+    tau_a: jax.Array,
+    tau_b: jax.Array,
+    scale_a,
+    scale_b,
+    *,
+    use_kernel: bool,
+    path: str = "",
+) -> jax.Array:
+    """Bridge transition: scale_a·recon(τ_a) then scale_b·recon(τ_b) — the
+    restore of probe i and the perturb of probe i+1 — in ONE fused pass.
+
+    Kernel path: the stacked-τ chain kernel rounds to the weight dtype
+    between the deltas, so the result is bitwise identical to two
+    ``perturb_leaf`` passes at half the HBM traffic.  XLA path: two dense
+    adds (identical arithmetic to the unchained calls, for parity).
+    """
+    if use_kernel and kernel_eligible(factor, w):
+        scales = jnp.stack([_scalar_f32(scale_a), _scalar_f32(scale_b)])
+        return _tezo_kernel_call(
+            w, factor, _stack_taus(tau_a, tau_b), scales, None, path
+        )
+    w = add_scaled(w, reconstruct(factor, tau_a), scale_a)
+    return add_scaled(w, reconstruct(factor, tau_b), scale_b)
+
+
 def sgd_update_leaf(
     w: jax.Array,
     factor: CPDFactor,
@@ -347,6 +387,8 @@ def sgd_update_leaf(
     use_kernel: bool,
     decay=None,
     path: str = "",
+    restore_tau=None,
+    restore_scale=0.0,
 ) -> jax.Array:
     """W ← decay·W − lr·reconstruct(ktau): the TeZO / TeZO-m descent step.
 
@@ -355,9 +397,22 @@ def sgd_update_leaf(
     the kernel path reuses the fused perturb kernel with scale = −lr;
     ``decay`` (1 − lr·wd, or None) folds decoupled weight decay into the
     same pass instead of a separate full-W round-trip.
+
+    ``restore_tau`` + ``restore_scale`` (the chained restore-into-update)
+    prepend the last probe's +ρ·recon(τ_q) restore to the same pass: the
+    kernel path runs the two-delta τ chain (restore, then decayed update —
+    bitwise identical to the separate restore pass), the XLA path composes
+    the same two dense adds.
     """
     if use_kernel and kernel_eligible(factor, w):
+        if restore_tau is not None:
+            scales = jnp.stack([_scalar_f32(restore_scale), -_scalar_f32(lr)])
+            return _tezo_kernel_call(
+                w, factor, _stack_taus(restore_tau, ktau), scales, decay, path
+            )
         return _tezo_kernel_call(w, factor, ktau, -lr, decay, path)
+    if restore_tau is not None:
+        w = add_scaled(w, reconstruct(factor, restore_tau), restore_scale)
     return add_scaled(w, reconstruct(factor, ktau), -lr, decay=decay)
 
 
@@ -372,33 +427,55 @@ def adam_update_leaf(
     use_kernel: bool,
     decay=None,
     path: str = "",
+    restore_tau=None,
+    restore_scale=0.0,
 ) -> jax.Array:
     """W ← decay·W − lr·M/√(V+ε) with M, V reconstructed from τ-space
     moments (Eq. 8).
 
     Kernel path: both reconstructions stay in VMEM (one HBM round-trip per W
     tile instead of materializing two parameter-sized moment buffers), and
-    the decoupled weight decay rides the same pass.
+    the decoupled weight decay rides the same pass.  ``restore_tau`` +
+    ``restore_scale`` fold the chained +ρ·recon(τ_q) restore into the same
+    pass (applied before the Adam math, with the replaced pass's rounding).
     """
     if use_kernel and kernel_eligible(factor, w):
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
+        rs_a = _scalar_f32(restore_scale)
         if mesh is None:
             return ops.tezo_adam_update(
-                w, factor.u, factor.v, tau_m, tau_v, lr_a, eps, decay=decay
+                w, factor.u, factor.v, tau_m, tau_v, lr_a, eps, decay=decay,
+                tau_r=restore_tau, restore_scale=rs_a,
             )
         decay_a = _decay_f32(decay)
         u_s, v_s, t_s = _factor_specs(spec)
+        if restore_tau is None:
 
-        def local_fn(w_l, u_l, v_l, tm_l, tv_l, lr_l, d_l):
+            def local_fn(w_l, u_l, v_l, tm_l, tv_l, lr_l, d_l):
+                return ops.tezo_adam_update(
+                    w_l, u_l, v_l, tm_l, tv_l, lr_l, eps, decay=d_l
+                )
+
+            return _shard_call(
+                local_fn, mesh, (spec, u_s, v_s, t_s, t_s, P(), P()), spec,
+                w, factor.u, factor.v, tau_m, tau_v, lr_a, decay_a,
+            )
+
+        def local_fn(w_l, u_l, v_l, tm_l, tv_l, tr_l, lr_l, d_l, rs_l):
             return ops.tezo_adam_update(
-                w_l, u_l, v_l, tm_l, tv_l, lr_l, eps, decay=d_l
+                w_l, u_l, v_l, tm_l, tv_l, lr_l, eps, decay=d_l,
+                tau_r=tr_l, restore_scale=rs_l,
             )
 
         return _shard_call(
-            local_fn, mesh, (spec, u_s, v_s, t_s, t_s, P(), P()), spec,
-            w, factor.u, factor.v, tau_m, tau_v, lr_a, decay_a,
+            local_fn, mesh,
+            (spec, u_s, v_s, t_s, t_s, t_s, P(), P(), P()), spec,
+            w, factor.u, factor.v, tau_m, tau_v, restore_tau,
+            lr_a, decay_a, rs_a,
         )
+    if restore_tau is not None:
+        w = add_scaled(w, reconstruct(factor, restore_tau), restore_scale)
     m_full = reconstruct(factor, tau_m).astype(jnp.float32)
     v_full = reconstruct_squared(factor, tau_v).astype(jnp.float32)
     return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr, decay=decay)
@@ -458,62 +535,125 @@ def noise_perturb_leaf(
     return add_scaled(w, dense_noise(w, key_t, path, probe), scale)
 
 
+def noise_perturb_pair_leaf(
+    w: jax.Array, key_t, path: str, probe_a: int, scale_a, probe_b: int,
+    scale_b, *, use_kernel: bool,
+) -> jax.Array:
+    """Chained bridge for one dense-noise leaf: W + scale_a·z_a + scale_b·z_b
+    (restore probe a, perturb probe b) in one pass.
+
+    Kernel path: the dual-draw kernel generates both probes' z in the same
+    tile visit — bitwise identical to two ``noise_perturb_leaf`` passes
+    (identical per-probe counter streams), half the HBM traffic; global-
+    coordinate seeding keeps it mesh-layout-invariant like the single-draw
+    op.  XLA path: two dense ``jax.random`` adds, identical arithmetic to
+    the unchained calls.
+    """
+    if use_kernel and noise_kernel_eligible(w):
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        sa, sb = _scalar_f32(scale_a), _scalar_f32(scale_b)
+        if mesh is None:
+            return ops.noise_perturb_pair(
+                w, seed, sa, sb, probe_a=probe_a, probe_b=probe_b
+            )
+
+        def local_fn(w_l, seed_l, sa_l, sb_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_perturb_pair(
+                w_l, seed_l, sa_l, sb_l, probe_a=probe_a, probe_b=probe_b,
+                offsets=offs,
+            )
+
+        return _shard_call(
+            local_fn, mesh, (spec, P(), P(), P()), spec, w, seed, sa, sb
+        )
+    w = add_scaled(w, dense_noise(w, key_t, path, probe_a), scale_a)
+    return add_scaled(w, dense_noise(w, key_t, path, probe_b), scale_b)
+
+
+def _noise_restored(w, key_t, path: str, restore_probe, restore_scale):
+    """XLA-path restore-into-update prologue: the +ρ·z add of the last
+    probe, identical to the separate restore pass it replaces."""
+    if restore_probe is None:
+        return w
+    return add_scaled(
+        w, dense_noise(w, key_t, path, restore_probe), restore_scale
+    )
+
+
 def noise_sgd_update_leaf(
-    w: jax.Array, key_t, path: str, kappas, lr, *, use_kernel: bool, decay=None
+    w: jax.Array, key_t, path: str, kappas, lr, *, use_kernel: bool,
+    decay=None, restore_probe=None, restore_scale=0.0,
 ) -> jax.Array:
     """W ← decay·W − lr·(mean_i κ_i z_i): the MeZO descent step for one
-    leaf, probe mean and weight decay fused in-kernel on the pallas path."""
+    leaf, probe mean and weight decay fused in-kernel on the pallas path.
+    ``restore_probe`` folds the chained +restore_scale·z restore into the
+    same pass (one extra on-chip draw; bitwise identical to the separate
+    restore on both lowerings)."""
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
+        rs_a = _scalar_f32(restore_scale)
         if mesh is None:
-            return ops.noise_update_sgd(w, seed, kappas, lr_a, decay=decay)
+            return ops.noise_update_sgd(
+                w, seed, kappas, lr_a, decay=decay,
+                restore_probe=restore_probe, restore_scale=rs_a,
+            )
         decay_a = _decay_f32(decay)
 
-        def local_fn(w_l, seed_l, kap_l, lr_l, d_l):
+        def local_fn(w_l, seed_l, kap_l, lr_l, d_l, rs_l):
             offs = _global_offsets(mesh, spec, w_l.shape)
             return ops.noise_update_sgd(
-                w_l, seed_l, kap_l, lr_l, decay=d_l, offsets=offs
+                w_l, seed_l, kap_l, lr_l, decay=d_l, offsets=offs,
+                restore_probe=restore_probe, restore_scale=rs_l,
             )
 
         return _shard_call(
-            local_fn, mesh, (spec, P(), P(), P(), P()), spec,
-            w, seed, kappas, lr_a, decay_a,
+            local_fn, mesh, (spec, P(), P(), P(), P(), P()), spec,
+            w, seed, kappas, lr_a, decay_a, rs_a,
         )
+    w = _noise_restored(w, key_t, path, restore_probe, restore_scale)
     g = _noise_probe_mean(w, key_t, path, kappas)
     return (_decayed(w, decay) - lr * g).astype(w.dtype)
 
 
 def noise_momentum_update_leaf(
     w: jax.Array, m_buf, key_t, path: str, kappas, lr, beta1, *,
-    use_kernel: bool, decay=None,
+    use_kernel: bool, decay=None, restore_probe=None, restore_scale=0.0,
 ):
     """Dense momentum step for one leaf: M ← β₁M + (1−β₁)g; W ← decay·W −
     lr·M.
 
     Returns (w', m').  Kernel path fuses the probe mean, the moment update,
-    the weight decay and the weight update into one pass over (W, M)."""
+    the weight decay, the weight update — and, when ``restore_probe`` is
+    set, the chained restore — into one pass over (W, M)."""
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
+        rs_a = _scalar_f32(restore_scale)
         if mesh is None:
             return ops.noise_update_momentum(
-                w, m_buf, seed, kappas, lr_a, beta1, decay=decay
+                w, m_buf, seed, kappas, lr_a, beta1, decay=decay,
+                restore_probe=restore_probe, restore_scale=rs_a,
             )
         decay_a = _decay_f32(decay)
 
-        def local_fn(w_l, m_l, seed_l, kap_l, lr_l, d_l):
+        def local_fn(w_l, m_l, seed_l, kap_l, lr_l, d_l, rs_l):
             offs = _global_offsets(mesh, spec, w_l.shape)
             return ops.noise_update_momentum(
-                w_l, m_l, seed_l, kap_l, lr_l, beta1, decay=d_l, offsets=offs
+                w_l, m_l, seed_l, kap_l, lr_l, beta1, decay=d_l, offsets=offs,
+                restore_probe=restore_probe, restore_scale=rs_l,
             )
 
         return _shard_call(
-            local_fn, mesh, (spec, spec, P(), P(), P(), P()), (spec, spec),
-            w, m_buf, seed, kappas, lr_a, decay_a,
+            local_fn, mesh, (spec, spec, P(), P(), P(), P(), P()),
+            (spec, spec),
+            w, m_buf, seed, kappas, lr_a, decay_a, rs_a,
         )
+    w = _noise_restored(w, key_t, path, restore_probe, restore_scale)
     g = _noise_probe_mean(w, key_t, path, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     return (_decayed(w, decay) - lr * m_new).astype(w.dtype), m_new
@@ -522,32 +662,37 @@ def noise_momentum_update_leaf(
 def noise_adam_update_leaf(
     w: jax.Array, m_buf, v_buf, key_t, path: str, kappas, lr,
     beta1, beta2, eps, *, use_kernel: bool, decay=None,
+    restore_probe=None, restore_scale=0.0,
 ):
     """Dense Adam step for one leaf; returns (w', m', v').  Kernel path
-    makes one HBM round-trip per buffer instead of materializing g."""
+    makes one HBM round-trip per buffer instead of materializing g; the
+    chained restore rides the same pass when ``restore_probe`` is set."""
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
+        rs_a = _scalar_f32(restore_scale)
         if mesh is None:
             return ops.noise_update_adam(
                 w, m_buf, v_buf, seed, kappas, lr_a, beta1, beta2, eps,
-                decay=decay,
+                decay=decay, restore_probe=restore_probe, restore_scale=rs_a,
             )
         decay_a = _decay_f32(decay)
 
-        def local_fn(w_l, m_l, v_l, seed_l, kap_l, lr_l, d_l):
+        def local_fn(w_l, m_l, v_l, seed_l, kap_l, lr_l, d_l, rs_l):
             offs = _global_offsets(mesh, spec, w_l.shape)
             return ops.noise_update_adam(
                 w_l, m_l, v_l, seed_l, kap_l, lr_l, beta1, beta2, eps,
                 decay=d_l, offsets=offs,
+                restore_probe=restore_probe, restore_scale=rs_l,
             )
 
         return _shard_call(
             local_fn, mesh,
-            (spec, spec, spec, P(), P(), P(), P()), (spec, spec, spec),
-            w, m_buf, v_buf, seed, kappas, lr_a, decay_a,
+            (spec, spec, spec, P(), P(), P(), P(), P()), (spec, spec, spec),
+            w, m_buf, v_buf, seed, kappas, lr_a, decay_a, rs_a,
         )
+    w = _noise_restored(w, key_t, path, restore_probe, restore_scale)
     g = _noise_probe_mean(w, key_t, path, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     v_new = beta2 * v_buf + (1.0 - beta2) * g * g
@@ -584,12 +729,60 @@ def lozo_perturb_leaf(
     return add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v), scale, decay=decay)
 
 
+def _lozo_chain_call(w, u, v_a, v_b, scale_a, scale_b, decay, path: str):
+    """Two LOZO deltas (shared lazy U, two fresh V factors) in one fused
+    pass — shard_map'd like the single-delta op; the widened 2r factors ride
+    the same row/column specs."""
+    mesh, spec = _leaf_mesh_spec(path, w.ndim)
+    sa, sb = _scalar_f32(scale_a), _scalar_f32(scale_b)
+    if mesh is None:
+        return ops.lozo_chain(w, u, v_a, v_b, sa, sb, decay=decay)
+    decay_a = _decay_f32(decay)
+    u_s, v_s, _ = _factor_specs(spec)
+
+    def local_fn(w_l, u_l, va_l, vb_l, sa_l, sb_l, d_l):
+        return ops.lozo_chain(w_l, u_l, va_l, vb_l, sa_l, sb_l, decay=d_l)
+
+    return _shard_call(
+        local_fn, mesh, (spec, u_s, v_s, v_s, P(), P(), P()), spec,
+        w, u, v_a, v_b, sa, sb, decay_a,
+    )
+
+
+def lozo_perturb_pair_leaf(
+    w: jax.Array, u, v_a, v_b, scale_a, scale_b, *, use_kernel: bool,
+    path: str = "",
+) -> jax.Array:
+    """Bridge transition for LOZO: scale_a·U·V_aᵀ + scale_b·U·V_bᵀ (restore
+    probe a, perturb probe b — U is window-lazy, shared) in one pass;
+    bitwise identical to two ``lozo_perturb_leaf`` passes."""
+    if use_kernel and w.ndim >= 2:
+        return _lozo_chain_call(w, u, v_a, v_b, scale_a, scale_b, None, path)
+    w = add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v_a), scale_a)
+    return add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v_b), scale_b)
+
+
 def lozo_update_leaf(
-    w: jax.Array, u, kv, lr, *, use_kernel: bool, decay=None, path: str = ""
+    w: jax.Array, u, kv, lr, *, use_kernel: bool, decay=None, path: str = "",
+    restore_v=None, restore_scale=0.0,
 ) -> jax.Array:
     """W ← decay·W − lr·U·(kv)ᵀ where ``kv`` is the probe-averaged κ·V (or
     the LOZO-m factored momentum) — the whole gradient signal lives in the
-    [n, r] factor, so the update is one fused rank-r pass."""
+    [n, r] factor, so the update is one fused rank-r pass.
+
+    ``restore_v`` + ``restore_scale`` fold the chained +ρ·U·V_qᵀ restore of
+    the last probe into the same pass (the V-factor twin of the τ-chain)."""
+    if restore_v is not None:
+        if use_kernel and w.ndim >= 2:
+            return _lozo_chain_call(
+                w, u, restore_v, kv, restore_scale, -lr, decay, path
+            )
+        w = add_scaled(
+            w, jnp.einsum("...mr,...nr->...mn", u, restore_v), restore_scale
+        )
+        return add_scaled(
+            w, jnp.einsum("...mr,...nr->...mn", u, kv), -lr, decay=decay
+        )
     return lozo_perturb_leaf(
         w, u, kv, -lr, use_kernel=use_kernel, decay=decay, path=path
     )
@@ -622,11 +815,57 @@ def subzo_perturb_leaf(
     )
 
 
+def _stack_sigmas(sig_a, sig_b):
+    """[..., 2, r, r] chain from two Σ cores."""
+    return jnp.stack([sig_a, sig_b], axis=-3)
+
+
+def subzo_perturb_pair_leaf(
+    w: jax.Array, u, v, sig_a, sig_b, scale_a, scale_b, *, use_kernel: bool,
+    path: str = "",
+) -> jax.Array:
+    """Bridge transition for SubZO: scale_a·U·Σ_a·Vᵀ + scale_b·U·Σ_b·Vᵀ
+    (restore probe a, perturb probe b — U, V window-lazy, shared) in one
+    pass; bitwise identical to two ``subzo_perturb_leaf`` passes."""
+    if use_kernel and w.ndim >= 2:
+        scales = jnp.stack([_scalar_f32(scale_a), _scalar_f32(scale_b)])
+        return subzo_perturb_leaf(
+            w, u, v, _stack_sigmas(sig_a, sig_b), scales,
+            use_kernel=True, path=path,
+        )
+    w = add_scaled(
+        w, jnp.einsum("...mr,...rk,...nk->...mn", u, sig_a, v), scale_a
+    )
+    return add_scaled(
+        w, jnp.einsum("...mr,...rk,...nk->...mn", u, sig_b, v), scale_b
+    )
+
+
 def subzo_update_leaf(
-    w: jax.Array, u, v, sbar, lr, *, use_kernel: bool, decay=None, path: str = ""
+    w: jax.Array, u, v, sbar, lr, *, use_kernel: bool, decay=None,
+    path: str = "", restore_sigma=None, restore_scale=0.0,
 ) -> jax.Array:
     """W ← decay·W − lr·U·(mean_i κ_i Σ_i)·Vᵀ: the probe mean collapses onto
-    the tiny [r, r] core, then one fused rank-r pass applies it."""
+    the tiny [r, r] core, then one fused rank-r pass applies it.
+
+    ``restore_sigma`` + ``restore_scale`` fold the chained +ρ·U·Σ_q·Vᵀ
+    restore into the same pass (a two-core Σ chain; decay hits the update
+    delta only)."""
+    if restore_sigma is not None:
+        if use_kernel and w.ndim >= 2:
+            scales = jnp.stack([_scalar_f32(restore_scale), -_scalar_f32(lr)])
+            return subzo_perturb_leaf(
+                w, u, v, _stack_sigmas(restore_sigma, sbar), scales,
+                use_kernel=True, decay=decay, path=path,
+            )
+        w = add_scaled(
+            w, jnp.einsum("...mr,...rk,...nk->...mn", u, restore_sigma, v),
+            restore_scale,
+        )
+        return add_scaled(
+            w, jnp.einsum("...mr,...rk,...nk->...mn", u, sbar, v), -lr,
+            decay=decay,
+        )
     return subzo_perturb_leaf(
         w, u, v, sbar, -lr, use_kernel=use_kernel, decay=decay, path=path
     )

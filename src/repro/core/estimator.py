@@ -2,13 +2,17 @@
 
 A ZO *method* couples (a) how the SPSA perturbation ``Z`` is generated with
 (b) how the projected coefficient ``κ = (f₊ − f₋)/2ρ`` is turned into a weight
-update (possibly through momentum / adaptive state).  All methods share the
-three-pass in-place perturbation schedule of Algorithm 1:
+update (possibly through momentum / adaptive state).  All methods implement
+the perturbation-chain transition schedule of ``core.zo_step`` (Algorithm 1
+restructured to 2q+1 full-parameter passes):
 
-    W ← W + ρZ ;  f₊ ;  W ← W − 2ρZ ;  f₋ ;  W ← W + ρZ   (restore)
+    W ← W + ρZ₀ ;  f₊ ;  W ← W − 2ρZ_i ;  f₋ ;
+    W ← W + ρZ_i + ρZ_{i+1}   (bridge: restore i + perturb i+1, one pass)
+    W ← update(W + ρZ_q)      (restore folded into the update pass)
 
 with Z regenerated from the step key at each pass (MeZO's resampling trick,
-here a pure function of (key, step, path, probe) — see cpd.sample_tau).
+here a pure function of (key, step, path, probe) — see cpd.sample_tau);
+that reconstructibility is exactly what makes adjacent passes mergeable.
 
 Implemented methods (paper §4.3 + baselines from §6):
 
@@ -86,7 +90,9 @@ class ZOConfig:
     lazy_interval: int = 50        # LOZO/SubZO subspace refresh period ν
     q_probes: int = 1              # q-SPSA ensemble size (variance reduction)
     seed: int = 0
-    restore_mode: str = "inplace"  # inplace (Alg.1, 1× param mem) | exact
+    restore_mode: str = "inplace"  # inplace (chained, 2q+1 passes, 1× mem) |
+    #                                unchained (literal Alg.1, 3q+1 passes) |
+    #                                exact (branch off originals, 2× mem)
     factor_dtype: Any = jnp.float32
     lr_schedule: str = "const"     # const | cosine | linear_warmup_cosine
     warmup_steps: int = 0
@@ -125,10 +131,27 @@ def _decay_factor(lr: jax.Array, cfg: ZOConfig):
 
 
 class ZOMethod:
-    """Base class; subclasses override the four hooks.  Stateless — all run
+    """Base class; subclasses override the hooks.  Stateless — all run
     state is in the mstate pytree.  Subclasses never touch jnp for leaf
     perturb/update math directly: they compute the (small) state algebra and
-    call the ``dispatch`` leaf ops, which own the pallas-vs-xla lowering."""
+    call the ``dispatch`` leaf ops, which own the pallas-vs-xla lowering.
+
+    The perturbation-chain contract (core.zo_step): besides the single-probe
+    ``perturb`` (the ``first_perturb`` and ``flip`` transitions), a method
+    implements
+
+      * ``perturb_pair`` — the ``bridge``: apply scale_a·Z_{probe_a} then
+        scale_b·Z_{probe_b} in ONE full-parameter pass (restore of probe i
+        fused with the perturb of probe i+1);
+      * ``update(..., restore_probe=, restore_scale=)`` — the
+        ``restore_into_update``: fold the last probe's +ρ·Z restore into the
+        optimizer's own full-parameter pass.
+
+    Both must be *bitwise* identical to the two separate passes they merge
+    (the leaf ops reproduce each replaced pass's weight-dtype rounding —
+    see repro.kernels).  The base ``perturb_pair`` is a correct two-pass
+    fallback for any future kernel-less method.
+    """
 
     name: str = "base"
 
@@ -144,9 +167,18 @@ class ZOMethod:
                 scale: float, cfg: ZOConfig, step: jax.Array) -> Any:
         raise NotImplementedError
 
+    def perturb_pair(self, params: Any, mstate: dict, key_t: jax.Array,
+                     probe_a: int, scale_a: float, probe_b: int,
+                     scale_b: float, cfg: ZOConfig, step: jax.Array) -> Any:
+        """Bridge transition; default = two chained single-probe passes
+        (correct, but without the fused-pass HBM saving)."""
+        p = self.perturb(params, mstate, key_t, probe_a, scale_a, cfg, step)
+        return self.perturb(p, mstate, key_t, probe_b, scale_b, cfg, step)
+
     def update(self, params: Any, mstate: dict, key_t: jax.Array,
                kappas: jax.Array, lr: jax.Array, cfg: ZOConfig,
-               step: jax.Array) -> tuple[Any, dict]:
+               step: jax.Array, restore_probe: Optional[int] = None,
+               restore_scale: float = 0.0) -> tuple[Any, dict]:
         raise NotImplementedError
 
 
@@ -187,6 +219,26 @@ class TeZO(ZOMethod):
 
         return map_with_path(f, params)
 
+    def perturb_pair(self, params, mstate, key_t, probe_a, scale_a, probe_b,
+                     scale_b, cfg, step):
+        factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
+
+        def f(path, w):
+            if path in factors:
+                tau_a = sample_tau(factors[path], key_t, path, probe_a)
+                tau_b = sample_tau(factors[path], key_t, path, probe_b)
+                return dispatch.perturb_pair_leaf(
+                    w, factors[path], tau_a, tau_b, scale_a, scale_b,
+                    use_kernel=use_kernel, path=path,
+                )
+            return dispatch.noise_perturb_pair_leaf(
+                w, key_t, path, probe_a, scale_a, probe_b, scale_b,
+                use_kernel=use_kernel,
+            )
+
+        return map_with_path(f, params)
+
     def _probe_mean_ktau(self, factor: CPDFactor, path: str, key_t, kappas):
         """mean_i κ_i τ_i — an r-vector; the whole gradient signal of a leaf."""
         q = kappas.shape[0]
@@ -195,7 +247,13 @@ class TeZO(ZOMethod):
             acc = acc + kappas[i] * sample_tau(factor, key_t, path, i)
         return acc / q
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def _restore_tau(self, factor, path, key_t, restore_probe):
+        if restore_probe is None:
+            return None
+        return sample_tau(factor, key_t, path, restore_probe)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
@@ -206,9 +264,14 @@ class TeZO(ZOMethod):
                 return dispatch.sgd_update_leaf(
                     w, factors[path], ktau, lr,
                     use_kernel=use_kernel, decay=decay, path=path,
+                    restore_tau=self._restore_tau(
+                        factors[path], path, key_t, restore_probe
+                    ),
+                    restore_scale=restore_scale,
                 )
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
 
         return map_with_path(f, params), mstate
@@ -238,7 +301,8 @@ class TeZOMomentum(TeZO):
         mstate["dense_m"] = dense_m
         return mstate
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
@@ -253,10 +317,15 @@ class TeZOMomentum(TeZO):
                 return dispatch.sgd_update_leaf(
                     w, factors[path], tm, lr,
                     use_kernel=use_kernel, decay=decay, path=path,
+                    restore_tau=self._restore_tau(
+                        factors[path], path, key_t, restore_probe
+                    ),
+                    restore_scale=restore_scale,
                 )
             w, dm = dispatch.noise_momentum_update_leaf(
                 w, mstate["dense_m"][path], key_t, path, kappas, lr,
                 cfg.beta1, use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
             new_dense_m[path] = dm
             return w
@@ -299,7 +368,8 @@ class TeZOAdam(TeZOMomentum):
             acc = acc + (kappas[i] ** 2) * (ti * ti)
         return acc / q
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         factors = mstate["factors"]
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
@@ -320,11 +390,14 @@ class TeZOAdam(TeZOMomentum):
                 return dispatch.adam_update_leaf(
                     w, fac, tm, tv, lr, cfg.eps,
                     use_kernel=use_kernel, decay=decay, path=path,
+                    restore_tau=self._restore_tau(fac, path, key_t, restore_probe),
+                    restore_scale=restore_scale,
                 )
             w, dm, dv = dispatch.noise_adam_update_leaf(
                 w, mstate["dense_m"][path], mstate["dense_v"][path], key_t,
                 path, kappas, lr, cfg.beta1, cfg.beta2, cfg.eps,
                 use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
             new_dense_m[path] = dm
             new_dense_v[path] = dv
@@ -360,13 +433,27 @@ class MeZO(ZOMethod):
 
         return map_with_path(f, params)
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def perturb_pair(self, params, mstate, key_t, probe_a, scale_a, probe_b,
+                     scale_b, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
+        def f(path, w):
+            return dispatch.noise_perturb_pair_leaf(
+                w, key_t, path, probe_a, scale_a, probe_b, scale_b,
+                use_kernel=use_kernel,
+            )
+
+        return map_with_path(f, params)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
 
         def f(path, w):
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
 
         return map_with_path(f, params), mstate
@@ -385,7 +472,8 @@ class MeZOMomentum(MeZO):
         map_with_path(visit, params)
         return {"m": m}
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
         new_m = dict(mstate["m"])
@@ -394,6 +482,7 @@ class MeZOMomentum(MeZO):
             w, dm = dispatch.noise_momentum_update_leaf(
                 w, mstate["m"][path], key_t, path, kappas, lr, cfg.beta1,
                 use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
             new_m[path] = dm
             return w
@@ -416,7 +505,8 @@ class MeZOAdam(MeZO):
         map_with_path(visit, params)
         return {"m": m, "v": v}
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
         new_m = dict(mstate["m"])
@@ -427,6 +517,7 @@ class MeZOAdam(MeZO):
                 w, mstate["m"][path], mstate["v"][path], key_t, path, kappas,
                 lr, cfg.beta1, cfg.beta2, cfg.eps,
                 use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
             new_m[path] = dm
             new_v[path] = dv
@@ -489,6 +580,26 @@ class LOZO(ZOMethod):
 
         return map_with_path(f, params)
 
+    def perturb_pair(self, params, mstate, key_t, probe_a, scale_a, probe_b,
+                     scale_b, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
+        def f(path, w):
+            if is_lowrank_leaf(path, w):
+                u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
+                v_a = _lozo_v(w, key_t, path, probe_a, r)
+                v_b = _lozo_v(w, key_t, path, probe_b, r)
+                return dispatch.lozo_perturb_pair_leaf(
+                    w, u, v_a, v_b, scale_a, scale_b,
+                    use_kernel=use_kernel, path=path,
+                )
+            return dispatch.noise_perturb_pair_leaf(
+                w, key_t, path, probe_a, scale_a, probe_b, scale_b,
+                use_kernel=use_kernel,
+            )
+
+        return map_with_path(f, params)
+
     def _probe_mean_kv(self, path, w, key_t, kappas, r):
         """mean_i κ_i V_i — [n, r]: U is window-lazy (probe-independent), so
         the probe mean collapses onto the fresh factor before any dense
@@ -499,7 +610,13 @@ class LOZO(ZOMethod):
             acc = acc + kappas[i] * _lozo_v(w, key_t, path, i, r)
         return acc / q
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def _restore_v(self, path, w, key_t, restore_probe, r):
+        if restore_probe is None:
+            return None
+        return _lozo_v(w, key_t, path, restore_probe, r)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
 
@@ -508,10 +625,13 @@ class LOZO(ZOMethod):
                 u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
                 kv = self._probe_mean_kv(path, w, key_t, kappas, r)
                 return dispatch.lozo_update_leaf(
-                    w, u, kv, lr, use_kernel=use_kernel, decay=decay, path=path
+                    w, u, kv, lr, use_kernel=use_kernel, decay=decay, path=path,
+                    restore_v=self._restore_v(path, w, key_t, restore_probe, r),
+                    restore_scale=restore_scale,
                 )
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
 
         return map_with_path(f, params), mstate
@@ -550,7 +670,8 @@ class LOZOMomentum(LOZO):
         out["v_m"] = new_vm
         return out
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
         new_vm = dict(mstate["v_m"])
@@ -562,11 +683,14 @@ class LOZOMomentum(LOZO):
                 vm = cfg.beta1 * mstate["v_m"][path] + (1.0 - cfg.beta1) * kv
                 new_vm[path] = vm
                 return dispatch.lozo_update_leaf(
-                    w, u, vm, lr, use_kernel=use_kernel, decay=decay, path=path
+                    w, u, vm, lr, use_kernel=use_kernel, decay=decay, path=path,
+                    restore_v=self._restore_v(path, w, key_t, restore_probe, r),
+                    restore_scale=restore_scale,
                 )
             w, vm = dispatch.noise_momentum_update_leaf(
                 w, mstate["v_m"][path], key_t, path, kappas, lr, cfg.beta1,
                 use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
             new_vm[path] = vm
             return w
@@ -659,22 +783,49 @@ class SubZO(ZOMethod):
 
         return map_with_path(f, params)
 
-    def update(self, params, mstate, key_t, kappas, lr, cfg, step):
+    def perturb_pair(self, params, mstate, key_t, probe_a, scale_a, probe_b,
+                     scale_b, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+
+        def f(path, w):
+            if path in mstate["U"]:
+                u, v = mstate["U"][path], mstate["V"][path]
+                r, batch = u.shape[-1], u.shape[:-2]
+                sig_a = self._sigma(path, key_t, probe_a, r, batch)
+                sig_b = self._sigma(path, key_t, probe_b, r, batch)
+                return dispatch.subzo_perturb_pair_leaf(
+                    w, u, v, sig_a, sig_b, scale_a, scale_b,
+                    use_kernel=use_kernel, path=path,
+                )
+            return dispatch.noise_perturb_pair_leaf(
+                w, key_t, path, probe_a, scale_a, probe_b, scale_b,
+                use_kernel=use_kernel,
+            )
+
+        return map_with_path(f, params)
+
+    def update(self, params, mstate, key_t, kappas, lr, cfg, step,
+               restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
         decay = _decay_factor(lr, cfg)
 
         def f(path, w):
             if path in mstate["U"]:
                 u, v = mstate["U"][path], mstate["V"][path]
-                sbar = self._probe_mean_sigma(
-                    path, key_t, kappas, u.shape[-1], u.shape[:-2]
+                r, batch = u.shape[-1], u.shape[:-2]
+                sbar = self._probe_mean_sigma(path, key_t, kappas, r, batch)
+                restore_sigma = (
+                    None if restore_probe is None
+                    else self._sigma(path, key_t, restore_probe, r, batch)
                 )
                 return dispatch.subzo_update_leaf(
                     w, u, v, sbar, lr, use_kernel=use_kernel, decay=decay,
-                    path=path,
+                    path=path, restore_sigma=restore_sigma,
+                    restore_scale=restore_scale,
                 )
             return dispatch.noise_sgd_update_leaf(
-                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay
+                w, key_t, path, kappas, lr, use_kernel=use_kernel, decay=decay,
+                restore_probe=restore_probe, restore_scale=restore_scale,
             )
 
         return map_with_path(f, params), mstate

@@ -1,35 +1,76 @@
-"""The ZO training step: Algorithm 1 of the paper, as a single jit-able fn.
+"""The ZO training step: Algorithm 1 of the paper as a *perturbation chain*.
 
-    W ← Perturb(W, +ρ, ζ_t);  f₊ = f(W, ξ)
-    W ← Perturb(W, −2ρ, ζ_t); f₋ = f(W, ξ)
-    W ← Perturb(W, +ρ, ζ_t);  κ_t = (f₊ − f₋)/2ρ
-    W ← optimizer update in τ-space
+Algorithm 1 evaluates ±ρ probes and updates:
 
-The in-place chain keeps exactly ONE parameter-sized buffer live through the
-step (XLA reuses the donated buffer across the three adds); ``restore_mode=
-"exact"`` instead branches the ±ρ copies off the original params (2× transient
-memory, bit-exact restore) for numerical studies.
+    W ← W + ρZ ;  f₊ ;  W ← W − 2ρZ ;  f₋ ;  W ← W + ρZ (restore) ;  update
+
+Naively that is ``3q + 1`` full-parameter HBM passes for ``q`` probes even
+when every individual pass is a fused one-round-trip kernel — and ZO
+fine-tuning has no backward pass, so those weight sweeps are the step's
+entire non-forward walltime.  But adjacent passes apply known linear
+combinations of *reconstructible* Z's (Z is a pure function of the step key
+— MeZO's resampling trick), so the step is emitted here as **transitions**:
+
+    first_perturb        W ← W + ρZ₀                          (1 pass)
+    flip                 W ← W − 2ρZ_i                        (q passes)
+    bridge               W ← W + ρZ_i + ρZ_{i+1}              (q − 1 passes)
+                         — the restore of probe i FUSED with the perturb of
+                         probe i+1, one pass instead of two
+    restore_into_update  W ← optimizer(W + ρZ_{q−1})          (1 pass)
+                         — the last restore folded into the fused update
+                         kernels via their ``restore_*`` operands
+
+Total: ``2q + 1`` full-parameter passes (q=1: 4→3, q=4: 13→9).  Every
+method implements the transitions through ``ZOMethod.perturb_pair`` and
+``ZOMethod.update(..., restore_probe=, restore_scale=)`` (see
+repro.core.estimator); the fused leaf ops reproduce the weight-dtype
+rounding of each pass they merge, so the chained trajectory is **bitwise
+identical** to the unchained one — for the factor methods on both
+lowerings, and for the MeZO family within each lowering, where chained and
+unchained regenerate identical per-probe counter streams (the dual-draw
+bridge kernel draws z_i and z_{i+1} from the same counters in one tile
+visit — bitwise the same draws, not merely the same distribution).
+
+``cfg.restore_mode`` selects the schedule:
+
+  "inplace"    (default) the chained transitions above — 2q+1 passes, one
+               parameter-sized buffer live (XLA reuses the donated buffer).
+  "unchained"  the literal Algorithm-1 pass structure — 3q+1 passes, kept
+               for numerical studies and as the chained path's bitwise
+               reference (tests/test_chain_fusion.py).
+  "exact"      branch the ±ρ copies off the original params — 2q+1 passes
+               at 2× transient memory, bit-exact restore by construction.
+
+``zo_pass_count(q, restore_mode)`` is the canonical pass-count model; the
+benchmarks' bytes-moved model, the dry-run record, and the kernel-invocation
+spy test all consume it.
 
 q-SPSA: with cfg.q_probes = q > 1 the step runs q independent ±probes and the
 optimizer consumes the κ vector — for TeZO this collapses to the r-vector
 mean_i κᵢτᵢ per leaf, i.e. ensemble variance reduction at zero memory.
 
 Kernel dispatch: ``cfg.kernel_mode`` ("auto" | "pallas" | "xla", jit-static)
-selects whether perturb/update leaf ops lower to the fused Pallas kernels or
+selects whether the transition leaf ops lower to the fused Pallas kernels or
 the dense-reconstruct XLA path — for *every* method (TeZO reconstructs Z
 from CPD factors in-tile, MeZO generates z on-chip from a counter PRNG,
 LOZO/SubZO reconstruct their factored Z in-tile; see repro.core.dispatch).
-build_zo_train_step validates the mode eagerly so a typo fails at build time,
-not inside the jitted step.  Note the MeZO-family caveat: the pallas and xla
-lowerings draw *different* (equally distributed) noise streams, so switching
-kernel_mode changes that baseline's sample path, not its statistics.
+The XLA lowering has fused-delta twins for every transition (identical
+arithmetic to the unchained dense passes), so parity tests cover both paths.
+build_zo_train_step validates kernel_mode AND restore_mode eagerly so a typo
+fails at build time, not inside the jitted step.  Note the MeZO-family
+caveat: the pallas and xla lowerings draw *different* (equally distributed)
+noise streams, so switching kernel_mode changes that baseline's sample path,
+not its statistics — but within a lowering, chained and unchained replay the
+same streams bitwise.
 
 Sharded execution: pass ``mesh`` + ``param_specs`` (the per-leaf
 PartitionSpec table from ``distributed.sharding.param_spec_table``) and the
-kernel path wraps each leaf op in shard_map over that mesh — local-shard
-Pallas kernels with a mesh-layout-invariant noise stream (see the Sharded
-dispatch section of repro.core.dispatch).  Without them the Pallas path
-assumes unsharded leaves, exactly as before.
+kernel path wraps each transition leaf op in shard_map over that mesh —
+local-shard Pallas kernels with a mesh-layout-invariant noise stream (the
+dual-draw and restore-fused kernels carry the same global-coordinate PRNG
+contract as the single-draw ops; see the Sharded dispatch section of
+repro.core.dispatch).  Without them the Pallas path assumes unsharded
+leaves, exactly as before.
 """
 from __future__ import annotations
 
@@ -42,6 +83,25 @@ import jax.numpy as jnp
 from repro.core import dispatch
 from repro.core.dispatch import resolve_kernel_mode
 from repro.core.estimator import ZOConfig, get_method
+
+RESTORE_MODES = ("inplace", "unchained", "exact")
+
+
+def zo_pass_count(q_probes: int, restore_mode: str = "inplace") -> int:
+    """Full-parameter HBM passes per ZO step (perturb/flip/bridge/update).
+
+    The single source of truth the benchmarks' bytes-moved model, the
+    dry-run/train records, and the kernel-invocation spy test share:
+    chained "inplace" and branching "exact" make ``2q + 1`` passes,
+    the literal Algorithm-1 "unchained" schedule ``3q + 1``.
+    """
+    if restore_mode not in RESTORE_MODES:
+        raise ValueError(
+            f"unknown restore_mode {restore_mode!r}; expected one of {RESTORE_MODES}"
+        )
+    if restore_mode == "unchained":
+        return 3 * q_probes + 1
+    return 2 * q_probes + 1
 
 
 @jax.tree_util.register_dataclass
@@ -91,6 +151,7 @@ def build_zo_train_step(
     """
     method = get_method(cfg.method)
     resolve_kernel_mode(cfg.kernel_mode)  # fail fast on unknown modes
+    zo_pass_count(cfg.q_probes, cfg.restore_mode)  # …and unknown schedules
 
     def step_fn(state: ZOTrainState, batch: Any) -> tuple[ZOTrainState, dict]:
         with dispatch.shard_context(mesh, param_specs):
@@ -99,29 +160,55 @@ def build_zo_train_step(
             lr = cfg.schedule(state.step)
 
             params = state.params
+            rho = cfg.rho
             kappas = []
             f_plus_acc = jnp.zeros((), jnp.float32)
             f_minus_acc = jnp.zeros((), jnp.float32)
+            p = params
             for probe in range(cfg.q_probes):
-                if cfg.restore_mode == "inplace":
-                    p = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
-                    f_plus = loss_fn(p, batch)
-                    p = method.perturb(p, mstate, key_t, probe, -2.0 * cfg.rho, cfg, state.step)
-                    f_minus = loss_fn(p, batch)
-                    params = method.perturb(p, mstate, key_t, probe, +cfg.rho, cfg, state.step)
-                else:  # exact: branch both sides off the original params
-                    p_plus = method.perturb(params, mstate, key_t, probe, +cfg.rho, cfg, state.step)
+                if cfg.restore_mode == "exact":
+                    # branch ±ρ copies off the original params (bit-exact
+                    # restore, 2× transient memory)
+                    p_plus = method.perturb(params, mstate, key_t, probe, +rho, cfg, state.step)
                     f_plus = loss_fn(p_plus, batch)
-                    p_minus = method.perturb(params, mstate, key_t, probe, -cfg.rho, cfg, state.step)
+                    p_minus = method.perturb(params, mstate, key_t, probe, -rho, cfg, state.step)
                     f_minus = loss_fn(p_minus, batch)
-                kappas.append((f_plus - f_minus) / (2.0 * cfg.rho))
+                elif cfg.restore_mode == "unchained":
+                    # the literal Algorithm-1 in-place schedule: restore and
+                    # next-probe perturb are separate full-W passes
+                    p = method.perturb(params, mstate, key_t, probe, +rho, cfg, state.step)
+                    f_plus = loss_fn(p, batch)
+                    p = method.perturb(p, mstate, key_t, probe, -2.0 * rho, cfg, state.step)
+                    f_minus = loss_fn(p, batch)
+                    params = method.perturb(p, mstate, key_t, probe, +rho, cfg, state.step)
+                else:  # "inplace": the chained transitions
+                    if probe == 0:
+                        p = method.perturb(p, mstate, key_t, 0, +rho, cfg, state.step)
+                    else:
+                        # bridge: restore probe−1 and perturb probe, one pass
+                        p = method.perturb_pair(
+                            p, mstate, key_t,
+                            probe - 1, +rho, probe, +rho, cfg, state.step,
+                        )
+                    f_plus = loss_fn(p, batch)
+                    p = method.perturb(p, mstate, key_t, probe, -2.0 * rho, cfg, state.step)
+                    f_minus = loss_fn(p, batch)
+                kappas.append((f_plus - f_minus) / (2.0 * rho))
                 f_plus_acc = f_plus_acc + f_plus
                 f_minus_acc = f_minus_acc + f_minus
 
             kappa_vec = jnp.stack(kappas).astype(jnp.float32)
-            params, mstate = method.update(
-                params, mstate, key_t, kappa_vec, lr, cfg, state.step
-            )
+            if cfg.restore_mode == "inplace":
+                # restore_into_update: the last probe's +ρZ restore rides the
+                # fused update pass
+                params, mstate = method.update(
+                    p, mstate, key_t, kappa_vec, lr, cfg, state.step,
+                    restore_probe=cfg.q_probes - 1, restore_scale=+rho,
+                )
+            else:
+                params, mstate = method.update(
+                    params, mstate, key_t, kappa_vec, lr, cfg, state.step
+                )
 
         new_state = ZOTrainState(
             params=params,
@@ -134,6 +221,10 @@ def build_zo_train_step(
             "loss": (f_plus_acc + f_minus_acc) / (2.0 * q),
             "kappa_abs": jnp.mean(jnp.abs(kappa_vec)),
             "lr": lr,
+            # static per config, surfaced so step records are self-describing
+            "zo_passes": jnp.asarray(
+                zo_pass_count(cfg.q_probes, cfg.restore_mode), jnp.int32
+            ),
         }
         return new_state, metrics
 

@@ -21,6 +21,16 @@ kernels in interpret mode — or pin it with ``set_interpret``).
   * LOZO            → ``lozo_perturb`` (tezo tiling with τ ≡ 1)
   * SubZO           → ``subzo_perturb`` (tezo tiling with a Σ core)
 
+Chained transitions (the 2q+1-pass schedule of core.zo_step): stacked-τ
+``tezo_perturb`` / stacked-Σ ``subzo_perturb`` / ``lozo_chain`` apply two
+deltas in one W round-trip (bridge and restore-into-update for the factor
+methods), ``noise_perturb_pair`` is the dual-draw noise bridge, and every
+update wrapper takes ``restore_probe``/``restore_scale`` (noise family) or
+``tau_r``/``restore_scale`` (tezo_adam) to fold the last probe's restore
+into the update pass.  All of them reproduce the replaced passes'
+weight-dtype rounding — bitwise-identical trajectories, half the HBM
+traffic on the merged passes.
+
 Leaves too small/oddly shaped for tiles (biases, norm scales: ndim < 2 or a
 dim < 8) always stay on the dense jnp path — see dispatch's eligibility
 predicates.  ``input_output_aliases`` inside the kernels keeps the three
@@ -105,15 +115,22 @@ def _pad_rank(u, v, *taus, multiple: int = 128):
     return (
         jnp.pad(u, pad),
         jnp.pad(v, pad),
-    ) + tuple(jnp.pad(t, [(0, r_pad - t.shape[-1])]) for t in taus)
+    ) + tuple(
+        # τ may be [r] or a stacked [k, r] transition chain — pad the rank
+        # (trailing) axis only
+        jnp.pad(t, [(0, 0)] * (t.ndim - 1) + [(0, r_pad - t.shape[-1])])
+        for t in taus
+    )
 
 
 def _pad_sigma(sigma, multiple: int = 128):
+    """Zero-pad Σ's trailing [r, r] core (possibly stacked [k, r, r])."""
     r = sigma.shape[-1]
     r_pad = _round_up(r, multiple)
     if r_pad == r:
         return sigma
-    return jnp.pad(sigma, [(0, r_pad - r), (0, r_pad - r)])
+    pad = [(0, 0)] * (sigma.ndim - 2) + [(0, r_pad - r), (0, r_pad - r)]
+    return jnp.pad(sigma, pad)
 
 
 def _tile_padded(dim: int, pref: int, mult: int) -> tuple[int, int]:
@@ -187,6 +204,12 @@ def tezo_perturb(w, u, v, tau, scale, *, decay=None, pad_rank: bool = True):
 
     ``decay`` is the decoupled weight-decay factor 1 − lr·wd, fused into the
     same HBM pass on update touches; None (≡ 1.0) on perturbation touches.
+
+    Transition chains: a stacked ``tau`` [..., k, r] with per-delta ``scale``
+    [k] applies k rank-r deltas in ONE W round-trip (the chained bridge /
+    restore-into-update of core.zo_step), each delta rounding to the weight
+    dtype exactly as its own pass would — bitwise identical to k separate
+    calls.  ``decay`` applies to the last delta only.
     """
     if w.ndim > 2:
         fn = functools.partial(
@@ -205,20 +228,32 @@ def tezo_perturb(w, u, v, tau, scale, *, decay=None, pad_rank: bool = True):
 
 
 def tezo_adam_update(
-    w, u, v, tau_m, tau_v, lr, eps=1e-5, *, decay=None, pad_rank: bool = True
+    w, u, v, tau_m, tau_v, lr, eps=1e-5, *, decay=None,
+    tau_r=None, restore_scale=0.0, pad_rank: bool = True,
 ):
+    """Fused TeZO-Adam update; ``tau_r`` + ``restore_scale`` fold the last
+    probe's +ρ·recon(τ_r) restore into the same pass (restore-into-update —
+    see kernels/tezo_adam.py; bitwise identical to the separate restore)."""
     if w.ndim > 2:
         fn = functools.partial(
-            tezo_adam_update, lr=lr, eps=eps, decay=decay, pad_rank=pad_rank
+            tezo_adam_update, lr=lr, eps=eps, decay=decay,
+            restore_scale=restore_scale, pad_rank=pad_rank,
         )
-        return jax.vmap(fn)(w, u, v, tau_m, tau_v)
+        if tau_r is None:
+            return jax.vmap(fn)(w, u, v, tau_m, tau_v)
+        return jax.vmap(
+            lambda wi, ui, vi, tmi, tvi, tri: fn(wi, ui, vi, tmi, tvi, tau_r=tri)
+        )(w, u, v, tau_m, tau_v, tau_r)
     if pad_rank and not _interpret():
-        u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
+        if tau_r is None:
+            u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
+        else:
+            u, v, tau_m, tau_v, tau_r = _pad_rank(u, v, tau_m, tau_v, tau_r)
     m, n = w.shape
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = _adam(
         _pad_w(w, m_pad, n_pad), _pad_rows(u, m_pad), _pad_rows(v, n_pad),
-        tau_m, tau_v, lr, eps, _decay_scalar(decay),
+        tau_m, tau_v, lr, eps, _decay_scalar(decay), tau_r, restore_scale,
         bm=bm, bn=bn, interpret=_interpret(),
     )
     return _crop(out, m, n)
@@ -280,7 +315,9 @@ def noise_perturb(w, seed, scale, *, probe: int = 0, offsets=None):
         return jax.vmap(fn)(w, _batch_seeds(seed, lead, off0))
     m, n = w.shape
     assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
-    assert 0 <= probe < zo_noise.MAX_PROBES, (probe, "probe id must fit 8 bits")
+    probes = probe if isinstance(probe, tuple) else (probe,)
+    for p in probes:
+        assert 0 <= p < zo_noise.MAX_PROBES, (p, "probe id must fit 8 bits")
     bm, bn, m_pad, n_pad = _weight_tiles(m, n)
     out = zo_noise.noise_perturb(
         _pad_w(w, m_pad, n_pad), seed, scale, base=_noise_base(offsets),
@@ -289,28 +326,44 @@ def noise_perturb(w, seed, scale, *, probe: int = 0, offsets=None):
     return _crop(out, m, n)
 
 
+def noise_perturb_pair(
+    w, seed, scale_a, scale_b, *, probe_a: int, probe_b: int, offsets=None
+):
+    """Chained bridge: W + scale_a·z_a + scale_b·z_b in ONE W round-trip.
+
+    The dual-draw kernel generates both probes' z from the counter PRNG in
+    the same tile visit, rounding to the weight dtype between the deltas —
+    bitwise identical to two ``noise_perturb`` passes (same per-probe
+    streams), at half the HBM traffic.
+    """
+    scales = jnp.stack([
+        jnp.asarray(scale_a, jnp.float32), jnp.asarray(scale_b, jnp.float32)
+    ])
+    return noise_perturb(
+        w, seed, scales, probe=(probe_a, probe_b), offsets=offsets
+    )
+
+
 def _noise_update(
-    w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant, offsets=None
+    w, seed, kappas, hyp, m_buf=None, v_buf=None, *, variant,
+    restore_probe=None, offsets=None,
 ):
     if w.ndim > 2:
         lead = w.shape[0]
         off0, rest = _split_offsets(offsets)
         seeds = _batch_seeds(seed, lead, off0)
+        kw = dict(variant=variant, restore_probe=restore_probe, offsets=rest)
         if variant == "sgd":
             return jax.vmap(
-                lambda wi, si: _noise_update(
-                    wi, si, kappas, hyp, variant=variant, offsets=rest
-                )
+                lambda wi, si: _noise_update(wi, si, kappas, hyp, **kw)
             )(w, seeds)
         if variant == "momentum":
             return jax.vmap(
-                lambda wi, si, mi: _noise_update(
-                    wi, si, kappas, hyp, mi, variant=variant, offsets=rest
-                )
+                lambda wi, si, mi: _noise_update(wi, si, kappas, hyp, mi, **kw)
             )(w, seeds, m_buf)
         return jax.vmap(
             lambda wi, si, mi, vi: _noise_update(
-                wi, si, kappas, hyp, mi, vi, variant=variant, offsets=rest
+                wi, si, kappas, hyp, mi, vi, **kw
             )
         )(w, seeds, m_buf, v_buf)
     m, n = w.shape
@@ -323,46 +376,59 @@ def _noise_update(
         None if m_buf is None else pad(m_buf),
         None if v_buf is None else pad(v_buf),
         base=_noise_base(offsets),
-        variant=variant, bm=bm, bn=bn, interpret=_interpret(),
+        variant=variant, restore_probe=restore_probe,
+        bm=bm, bn=bn, interpret=_interpret(),
     )
     return tuple(_crop(o, m, n) for o in out)
 
 
-def _noise_hyp(lr, beta1=0.0, beta2=0.0, eps=0.0, decay=None):
-    """[lr, β₁, β₂, ε, decay] f32 scalar block for the fused update kernels."""
+def _noise_hyp(lr, beta1=0.0, beta2=0.0, eps=0.0, decay=None, restore_scale=0.0):
+    """[lr, β₁, β₂, ε, decay, restore] f32 scalars for the fused update
+    kernels (restore = the +ρ scale of a chained restore-into-update)."""
     return jnp.stack([
         jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
         jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
         jnp.asarray(_decay_scalar(decay), jnp.float32),
+        jnp.asarray(restore_scale, jnp.float32),
     ])
 
 
-def noise_update_sgd(w, seed, kappas, lr, *, decay=None, offsets=None):
+def noise_update_sgd(
+    w, seed, kappas, lr, *, decay=None,
+    restore_probe=None, restore_scale=0.0, offsets=None,
+):
     """W ← decay·W − lr·(mean_i κ_i z_i): probe mean, decoupled weight decay
-    and update fused in one pass."""
-    hyp = _noise_hyp(lr, decay=decay)
-    return _noise_update(w, seed, kappas, hyp, variant="sgd", offsets=offsets)[0]
+    and update fused in one pass; ``restore_probe`` folds the chained
+    +restore_scale·z restore into the same pass."""
+    hyp = _noise_hyp(lr, decay=decay, restore_scale=restore_scale)
+    return _noise_update(
+        w, seed, kappas, hyp, variant="sgd",
+        restore_probe=restore_probe, offsets=offsets,
+    )[0]
 
 
 def noise_update_momentum(
-    w, m_buf, seed, kappas, lr, beta1, *, decay=None, offsets=None
+    w, m_buf, seed, kappas, lr, beta1, *, decay=None,
+    restore_probe=None, restore_scale=0.0, offsets=None,
 ):
     """Fused M ← β₁M + (1−β₁)g; W ← decay·W − lr·M.  Returns (w', m')."""
-    hyp = _noise_hyp(lr, beta1, decay=decay)
+    hyp = _noise_hyp(lr, beta1, decay=decay, restore_scale=restore_scale)
     return _noise_update(
-        w, seed, kappas, hyp, m_buf, variant="momentum", offsets=offsets
+        w, seed, kappas, hyp, m_buf, variant="momentum",
+        restore_probe=restore_probe, offsets=offsets,
     )
 
 
 def noise_update_adam(
     w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps, *,
-    decay=None, offsets=None,
+    decay=None, restore_probe=None, restore_scale=0.0, offsets=None,
 ):
     """Fused dense-Adam: both moment buffers ride the W grid (one HBM
     round-trip each instead of materializing g).  Returns (w', m', v')."""
-    hyp = _noise_hyp(lr, beta1, beta2, eps, decay)
+    hyp = _noise_hyp(lr, beta1, beta2, eps, decay, restore_scale)
     return _noise_update(
-        w, seed, kappas, hyp, m_buf, v_buf, variant="adam", offsets=offsets
+        w, seed, kappas, hyp, m_buf, v_buf, variant="adam",
+        restore_probe=restore_probe, offsets=offsets,
     )
 
 
@@ -377,8 +443,39 @@ def lozo_perturb(w, u, v, scale, *, decay=None):
     return tezo_perturb(w, u, v, tau, scale, decay=decay)
 
 
+def lozo_chain(w, u, v_a, v_b, scale_a, scale_b, *, decay=None):
+    """Two LOZO deltas — scale_a·U·V_aᵀ then scale_b·U·V_bᵀ — in ONE W pass.
+
+    The chained bridge (restore V_i + perturb V_{i+1}) and restore-into-
+    update (restore V_q + apply −lr·U·kvᵀ) both share the window-lazy U, so
+    the pass is the TeZO chain kernel with STACKED fresh factors: u/v widen
+    to 2r and two 0/1 τ rows select each half.  The masked-out half of each
+    dot contributes exact zeros, so the result is bitwise identical to two
+    separate ``lozo_perturb`` passes; ``decay`` applies to the second delta
+    only (the update touch).
+    """
+    r = u.shape[-1]
+    batch = u.shape[:-2]
+    u2 = jnp.concatenate([u, u], axis=-1)
+    v2 = jnp.concatenate([v_a, v_b], axis=-1)
+    sel_a = jnp.concatenate(
+        [jnp.ones((r,), jnp.float32), jnp.zeros((r,), jnp.float32)]
+    )
+    taus = jnp.stack([sel_a, 1.0 - sel_a])                  # [2, 2r]
+    taus = jnp.broadcast_to(taus, batch + (2, 2 * r))
+    scales = jnp.stack([
+        jnp.asarray(scale_a, jnp.float32), jnp.asarray(scale_b, jnp.float32)
+    ])
+    return tezo_perturb(w, u2, v2, taus, scales, decay=decay)
+
+
 def subzo_perturb(w, u, v, sigma, scale, *, decay=None, pad_rank: bool = True):
-    """decay·W + scale·(U·Σ·Vᵀ) for 2-D or leading-batched W."""
+    """decay·W + scale·(U·Σ·Vᵀ) for 2-D or leading-batched W.
+
+    A stacked ``sigma`` [..., k, r, r] with ``scale`` [k] applies the
+    perturbation chain's merged transitions in one pass (see
+    zo_noise.subzo_perturb); decay hits the last delta only.
+    """
     if w.ndim > 2:
         fn = functools.partial(
             subzo_perturb, scale=scale, decay=decay, pad_rank=pad_rank

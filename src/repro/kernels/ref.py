@@ -35,6 +35,24 @@ def tezo_perturb_ref(
     return (decay * w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
+def tezo_chain_ref(
+    w: jax.Array,       # [m, n]
+    u: jax.Array,       # [m, r]
+    v: jax.Array,       # [n, r]
+    taus: jax.Array,    # [k, r] f32
+    scales,             # sequence of k floats
+    decay: float = 1.0,
+) -> jax.Array:
+    """k chained rank-r deltas with the per-pass weight-dtype rounding —
+    literally k ``tezo_perturb_ref`` passes (decay on the last only), which
+    is the bitwise contract of the fused transition-chain kernel."""
+    k = taus.shape[0]
+    for s in range(k):
+        d = decay if s == k - 1 else 1.0
+        w = tezo_perturb_ref(w, u, v, taus[s], scales[s], decay=d)
+    return w
+
+
 def tezo_adam_update_ref(
     w: jax.Array,       # [m, n]
     u: jax.Array,       # [m, r]
@@ -52,6 +70,16 @@ def tezo_adam_update_ref(
     vv = ((uf * uf) * tau_v[None, :]) @ (vf * vf).T
     g = m * jax.lax.rsqrt(vv + eps)
     return (decay * w.astype(jnp.float32) - lr * g).astype(w.dtype)
+
+
+def tezo_adam_restore_update_ref(
+    w, u, v, tau_m, tau_v, lr, eps, decay=1.0, tau_r=None, restore_scale=0.0
+):
+    """Chained restore-into-update: the separate +ρ·recon(τ_r) restore pass
+    followed by the Adam pass — the bitwise contract of the fused kernel."""
+    if tau_r is not None:
+        w = tezo_perturb_ref(w, u, v, tau_r, restore_scale)
+    return tezo_adam_update_ref(w, u, v, tau_m, tau_v, lr, eps, decay)
 
 
 def counter_normal_ref(shape, seed, probe: int = 0, base=(0, 0)) -> jax.Array:
@@ -77,6 +105,21 @@ def noise_perturb_ref(w, seed, scale, probe: int = 0) -> jax.Array:
     return (w.astype(jnp.float32) + scale * z).astype(w.dtype)
 
 
+def noise_perturb_pair_ref(w, seed, scale_a, scale_b, probe_a, probe_b):
+    """Chained dual-draw bridge = two single-draw passes, bitwise (the
+    per-probe counter streams are identical either way)."""
+    w = noise_perturb_ref(w, seed, scale_a, probe_a)
+    return noise_perturb_ref(w, seed, scale_b, probe_b)
+
+
+def noise_restore_ref(w, seed, restore_probe, restore_scale):
+    """The restore-into-update prologue: +restore_scale·z of the last probe
+    with the replaced pass's rounding (None probe = no restore)."""
+    if restore_probe is None:
+        return w
+    return noise_perturb_ref(w, seed, restore_scale, restore_probe)
+
+
 def noise_probe_mean_ref(shape, seed, kappas) -> jax.Array:
     """g = mean_i κ_i z_i — the in-kernel q-probe accumulation, replayed."""
     q = kappas.shape[0]
@@ -86,20 +129,29 @@ def noise_probe_mean_ref(shape, seed, kappas) -> jax.Array:
     return acc / q
 
 
-def noise_update_sgd_ref(w, seed, kappas, lr, decay=1.0) -> jax.Array:
+def noise_update_sgd_ref(
+    w, seed, kappas, lr, decay=1.0, restore_probe=None, restore_scale=0.0
+) -> jax.Array:
+    w = noise_restore_ref(w, seed, restore_probe, restore_scale)
     g = noise_probe_mean_ref(w.shape, seed, kappas)
     return (decay * w.astype(jnp.float32) - lr * g).astype(w.dtype)
 
 
-def noise_update_momentum_ref(w, m_buf, seed, kappas, lr, beta1, decay=1.0):
+def noise_update_momentum_ref(
+    w, m_buf, seed, kappas, lr, beta1, decay=1.0,
+    restore_probe=None, restore_scale=0.0,
+):
+    w = noise_restore_ref(w, seed, restore_probe, restore_scale)
     g = noise_probe_mean_ref(w.shape, seed, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     return (decay * w.astype(jnp.float32) - lr * m_new).astype(w.dtype), m_new
 
 
 def noise_update_adam_ref(
-    w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps, decay=1.0
+    w, m_buf, v_buf, seed, kappas, lr, beta1, beta2, eps, decay=1.0,
+    restore_probe=None, restore_scale=0.0,
 ):
+    w = noise_restore_ref(w, seed, restore_probe, restore_scale)
     g = noise_probe_mean_ref(w.shape, seed, kappas)
     m_new = beta1 * m_buf + (1.0 - beta1) * g
     v_new = beta2 * v_buf + (1.0 - beta2) * g * g
@@ -117,6 +169,16 @@ def subzo_perturb_ref(w, u, v, sigma, scale, decay=1.0) -> jax.Array:
     """decay·W + scale·U·Σ·Vᵀ (SubZO), f32 accumulation."""
     z = u.astype(jnp.float32) @ sigma.astype(jnp.float32) @ v.astype(jnp.float32).T
     return (decay * w.astype(jnp.float32) + scale * z).astype(w.dtype)
+
+
+def subzo_chain_ref(w, u, v, sigmas, scales, decay=1.0) -> jax.Array:
+    """k chained Σ-core deltas = k ``subzo_perturb_ref`` passes (decay on
+    the last only) — the bitwise contract of the stacked-Σ kernel."""
+    k = sigmas.shape[0]
+    for s in range(k):
+        d = decay if s == k - 1 else 1.0
+        w = subzo_perturb_ref(w, u, v, sigmas[s], scales[s], decay=d)
+    return w
 
 
 def flash_attention_ref(

@@ -10,6 +10,15 @@ of traffic.  Fused, each W tile makes one HBM round-trip (2·mn·bytes) and M/V
 tiles exist only in VMEM; both reconstructions are MXU matmuls on the same
 resident u/v slices.
 
+Restore-into-update (``tau_r`` + ``restore_scale``): the perturbation-chain
+schedule (core.zo_step) folds Algorithm 1's final restore pass — W ←
+W + ρ·recon(τ_q) for the last probe — into this same W round-trip.  The
+restore delta is applied first, with a cast to the weight dtype and back to
+f32, so the arithmetic (and therefore the trajectory) is bitwise identical
+to the separate restore pass it replaces; the Adam update then reads the
+restored tile.  ``decay`` (1 − lr·wd) applies to the update only, exactly as
+in the unchained two-pass order of operations.
+
 Tile working set at (bm=256, bn=512, r=128):
   W tile 256 KiB (bf16) + u/v slices 192 KiB + f32 M,V tiles 1 MiB ≈ 1.5 MiB.
 """
@@ -23,7 +32,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
+def _adam_body(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref, tr_ref,
+               barrier=False):
     lr = sc_ref[0]
     eps = sc_ref[1]
     decay = sc_ref[2]
@@ -31,6 +41,23 @@ def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
     v = v_ref[...].astype(jnp.float32)       # [bn, r]
     tm = tm_ref[...].astype(jnp.float32)     # [1, r]
     tv = tv_ref[...].astype(jnp.float32)     # [1, r]
+    wf = w_ref[...].astype(jnp.float32)
+    if tr_ref is not None:
+        # fold the last probe's +ρ·recon(τ_r) restore into this pass,
+        # round-tripped through the VMEM output tile — the same rounding and
+        # optimization barrier the separate restore pass had (bitwise)
+        tr = tr_ref[...].astype(jnp.float32)
+        zr = jax.lax.dot_general(
+            u * tr, v, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (wf + sc_ref[3] * zr).astype(o_ref.dtype)
+        wf = o_ref[...]
+        if barrier:
+            # interpret mode functionalizes the ref round-trip under jit;
+            # pin the pass boundary (see kernels/tezo_perturb.py)
+            wf = jax.lax.optimization_barrier(wf)
+        wf = wf.astype(jnp.float32)
     m = jax.lax.dot_general(
         u * tm, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -39,9 +66,20 @@ def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
         preferred_element_type=jnp.float32,
     )
     g = m * jax.lax.rsqrt(vv + eps)
-    o_ref[...] = (
-        decay * w_ref[...].astype(jnp.float32) - lr * g
-    ).astype(o_ref.dtype)
+    o_ref[...] = (decay * wf - lr * g).astype(o_ref.dtype)
+
+
+def _adam_kernel(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref):
+    _adam_body(sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref, None)
+
+
+def _adam_restore_kernel(
+    sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, tr_ref, o_ref, *, barrier
+):
+    _adam_body(
+        sc_ref, w_ref, u_ref, v_ref, tm_ref, tv_ref, o_ref, tr_ref,
+        barrier=barrier,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "bm", "bn", "interpret"))
@@ -54,6 +92,8 @@ def tezo_adam_update(
     lr: jax.Array | float,
     eps: float = 1e-5,
     decay: jax.Array | float = 1.0,   # 1 − lr·wd (decoupled decay), 1.0 = none
+    tau_r: jax.Array | None = None,   # [r] f32: restore-into-update τ
+    restore_scale: jax.Array | float = 0.0,
     *,
     bm: int = 256,
     bn: int = 512,
@@ -68,20 +108,29 @@ def tezo_adam_update(
         jnp.asarray(lr, jnp.float32),
         jnp.asarray(eps, jnp.float32),
         jnp.asarray(decay, jnp.float32),
+        jnp.asarray(restore_scale, jnp.float32),
     ])
+    tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        tile,
+        pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+        pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+    ]
+    operands = [sc, w, u, v, tau_m.reshape(1, r), tau_v.reshape(1, r)]
+    kernel = _adam_kernel
+    if tau_r is not None:
+        in_specs.append(pl.BlockSpec((1, r), lambda i, j: (0, 0)))
+        operands.append(tau_r.reshape(1, r))
+        kernel = functools.partial(_adam_restore_kernel, barrier=interpret)
     return pl.pallas_call(
-        _adam_kernel,
+        kernel,
         grid=(m // bm, n // bn),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        in_specs=in_specs,
+        out_specs=tile,
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,
-    )(sc, w, u, v, tau_m.reshape(1, r), tau_v.reshape(1, r))
+    )(*operands)

@@ -1,12 +1,26 @@
-"""Pallas TPU kernel: fused TeZO perturbation  W ← W + scale·(u·diag(τ))·vᵀ.
+"""Pallas TPU kernel: fused TeZO perturbation chain
 
-This is the per-step hot loop of Algorithm 1 (three calls per step: +ρ, −2ρ,
-+ρ).  The fusion matters on TPU because the naive XLA lowering materializes
-Z = (u·diag(τ))·vᵀ in HBM (a full parameter-sized buffer, 3× per step);
-here Z never leaves VMEM — each weight tile is loaded HBM→VMEM once, the
-rank-r outer product for that tile is computed by the MXU ([bm,r]×[r,bn]),
-added, and stored back.  HBM traffic drops from ~4·mn·bytes to 2·mn·bytes
-per call (read+write W only; u/v tiles are r/bn-fraction noise).
+    W ← W + scale₀·(u·diag(τ₀))·vᵀ [+ scale₁·(u·diag(τ₁))·vᵀ …]
+
+This is the per-step hot loop of Algorithm 1.  The fusion matters on TPU
+because the naive XLA lowering materializes Z = (u·diag(τ))·vᵀ in HBM (a
+full parameter-sized buffer per pass); here Z never leaves VMEM — each
+weight tile is loaded HBM→VMEM once, the rank-r outer product for that tile
+is computed by the MXU ([bm,r]×[r,bn]), added, and stored back.  HBM traffic
+drops from ~4·mn·bytes to 2·mn·bytes per pass (read+write W only; u/v tiles
+are r/bn-fraction noise).
+
+Chained transitions (τ is [k, r], scale is [k]): the perturbation-chain
+step schedule (see core.zo_step) merges adjacent Algorithm-1 passes — the
+restore of probe i and the perturb of probe i+1, or the final restore and
+the SGD-style update — into ONE W round-trip that applies k rank-r deltas
+while the tile is resident.  Each in-kernel delta ends with a cast to the
+weight dtype and back to f32, reproducing bit-for-bit the rounding the
+replaced HBM round-trip would have performed: the chained trajectory is
+bitwise identical to the unchained one, only the HBM traffic changes.
+``decay`` (the decoupled weight-decay factor 1 − lr·wd) applies to the LAST
+delta only — the update touch of a restore-into-update chain; pure
+perturbation deltas never decay.
 
 Tiling: (bm=256, bn=512) bf16 tiles (256 KiB W-tile) + u/v slices
 (bm·r + bn·r) ≤ ~1.5 MiB VMEM at r=128 — comfortably inside the ~16 MiB
@@ -24,19 +38,35 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref):
-    scale = scale_ref[0]
-    decay = scale_ref[1]
+def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref, *, k, barrier):
     u = u_ref[...].astype(jnp.float32)          # [bm, r]
     v = v_ref[...].astype(jnp.float32)          # [bn, r]
-    tau = tau_ref[...].astype(jnp.float32)      # [1, r]
-    ut = u * tau                                 # broadcast over rows
-    z = jax.lax.dot_general(
-        ut, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                            # [bm, bn]
-    o_ref[...] = (
-        decay * w_ref[...].astype(jnp.float32) + scale * z
-    ).astype(o_ref.dtype)
+    taus = tau_ref[...].astype(jnp.float32)     # [k, r]
+    wf = w_ref[...].astype(jnp.float32)
+    for s in range(k):
+        ut = u * taus[s : s + 1, :]              # broadcast over rows
+        z = jax.lax.dot_general(
+            ut, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                        # [bm, bn]
+        # Bitwise contract with the standalone passes this chain replaces:
+        # per-step decay rides the scalar block (1.0 on all but the final
+        # update delta) rather than a compile-time literal, and each delta
+        # round-trips through the VMEM output tile — the same rounding
+        # barrier the replaced HBM pass had.  Interpret mode additionally
+        # pins each step with optimization_barrier: under jit the ref
+        # store/load is functionalized away and XLA's fusion/FMA choices
+        # vary with the surrounding program by an ulp, so both z and the
+        # stored tile are fenced to compile exactly like a standalone pass
+        # (Mosaic has no lowering for the barrier on this pin and needs
+        # none: its VMEM store is a real boundary).
+        if barrier:
+            z = jax.lax.optimization_barrier(z)
+        d = scale_ref[k + s]
+        o_ref[...] = (d * wf + scale_ref[s] * z).astype(o_ref.dtype)
+        wf = o_ref[...]
+        if barrier and s < k - 1:
+            wf = jax.lax.optimization_barrier(wf)
+        wf = wf.astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -44,8 +74,8 @@ def tezo_perturb(
     w: jax.Array,       # [m, n]
     u: jax.Array,       # [m, r]
     v: jax.Array,       # [n, r]
-    tau: jax.Array,     # [r] f32
-    scale: jax.Array | float,
+    tau: jax.Array,     # [r] f32, or [k, r] for a k-delta chain
+    scale: jax.Array | float,          # scalar, or [k] matching tau
     decay: jax.Array | float = 1.0,   # 1 − lr·wd on update touches, else 1.0
     *,
     bm: int = 256,
@@ -58,21 +88,32 @@ def tezo_perturb(
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
     grid = (m // bm, n // bn)
-    scale_arr = jnp.stack(
-        [jnp.asarray(scale, jnp.float32), jnp.asarray(decay, jnp.float32)]
-    )
+    taus = tau.reshape((-1, r))
+    k = taus.shape[0]
+    scales = jnp.asarray(scale, jnp.float32).reshape(-1)
+    assert scales.shape[0] in (1, k), (scales.shape, k)
+    if scales.shape[0] != k:
+        scales = jnp.broadcast_to(scales, (k,))
+    # scalar block: [scale_0..scale_{k-1}, decay_0..decay_{k-1}] with decay
+    # on the final (update) delta only — k=1 keeps the original [scale,
+    # decay] layout
+    decays = jnp.concatenate([
+        jnp.ones((k - 1,), jnp.float32),
+        jnp.asarray(decay, jnp.float32).reshape(1),
+    ])
+    scale_arr = jnp.concatenate([scales, decays])
     return pl.pallas_call(
-        _perturb_kernel,
+        functools.partial(_perturb_kernel, k=k, barrier=interpret),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,
-    )(scale_arr, w, u, v, tau.reshape(1, r))
+    )(scale_arr, w, u, v, taus)

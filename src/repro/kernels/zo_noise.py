@@ -51,6 +51,23 @@ looped in-kernel over the resident tile) and the optimizer rule:
 
 so MeZO-m/MeZO-Adam's dense moment buffers also make exactly one HBM
 round-trip, and ``q_probes > 1`` stops looping dense buffers in Python.
+
+Chained transitions (core.zo_step's perturbation-chain schedule):
+
+  * ``noise_perturb`` takes a *tuple* of static probe ids with per-probe
+    scales — the dual-draw bridge that applies the restore of probe i and
+    the perturb of probe i+1 in one W round-trip, generating BOTH z's from
+    the counter PRNG in the same tile visit (the PRNG is ~40 VPU ops per 2
+    words; the pass is HBM-bound, so the second draw is free);
+  * the update kernels take ``restore_probe`` (static) + a restore scale in
+    ``hyp[5]`` and add back the last probe's +ρ·z before the optimizer
+    math, in the same pass.
+
+Each fused-in delta casts to the weight dtype and back to f32 exactly where
+the replaced HBM round-trip would have, so the chained trajectory is BITWISE
+identical to the unchained one within the pallas mode: chained and unchained
+draw identical per-probe counter streams — the same (key, probe, global
+coords) → the same z, not merely the same distribution.
 """
 from __future__ import annotations
 
@@ -152,13 +169,23 @@ def _as_i32_seed(seed: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _noise_perturb_kernel(seed_ref, scale_ref, base_ref, w_ref, o_ref, *, probe, bm, bn):
+def _noise_perturb_kernel(
+    seed_ref, scale_ref, base_ref, w_ref, o_ref, *, probes, bm, bn, barrier
+):
     k0, k1 = _seed_words(seed_ref)
     rows, cols = _tile_coords(bm, bn, base_ref)
-    z = counter_normal(k0, k1, rows, cols, probe)
-    o_ref[...] = (
-        w_ref[...].astype(jnp.float32) + scale_ref[0] * z
-    ).astype(o_ref.dtype)
+    wf = w_ref[...].astype(jnp.float32)
+    for idx, probe in enumerate(probes):
+        z = counter_normal(k0, k1, rows, cols, probe)
+        # round-trip through the VMEM output tile between deltas (the
+        # rounding/optimization barrier of the replaced HBM pass — see
+        # tezo_perturb on the interpret-mode optimization_barrier): a
+        # multi-probe chain is bitwise identical to the separate passes
+        o_ref[...] = (wf + scale_ref[idx] * z).astype(o_ref.dtype)
+        wf = o_ref[...]
+        if barrier and idx < len(probes) - 1:
+            wf = jax.lax.optimization_barrier(wf)
+        wf = wf.astype(jnp.float32)
 
 
 def _base_arr(base) -> jax.Array:
@@ -172,10 +199,11 @@ def _base_arr(base) -> jax.Array:
 def noise_perturb(
     w: jax.Array,        # [m, n]
     seed: jax.Array,     # uint32[2] (leaf_seed)
-    scale: jax.Array | float,
+    scale: jax.Array | float,        # scalar, or [k] matching a probe tuple
     *,
     base: jax.Array | None = None,   # int32[2] global (row0, col0) of w[0, 0]
-    probe: int = 0,
+    probe: int | tuple[int, ...] = 0,   # static probe id(s) — a tuple is the
+    #                                     dual-draw chained-bridge variant
     bm: int = 256,
     bn: int = 512,
     interpret: bool = False,
@@ -184,9 +212,16 @@ def noise_perturb(
     bm = min(bm, m)
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
+    probes = probe if isinstance(probe, tuple) else (probe,)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(-1)
+    assert scale_arr.shape[0] in (1, len(probes)), (scale_arr.shape, probes)
+    if scale_arr.shape[0] != len(probes):
+        scale_arr = jnp.broadcast_to(scale_arr, (len(probes),))
     return pl.pallas_call(
-        functools.partial(_noise_perturb_kernel, probe=probe, bm=bm, bn=bn),
+        functools.partial(
+            _noise_perturb_kernel, probes=probes, bm=bm, bn=bn,
+            barrier=interpret,
+        ),
         grid=(m // bm, n // bn),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -206,7 +241,7 @@ def noise_perturb(
 # ---------------------------------------------------------------------------
 
 
-def _noise_update_kernel(*refs, variant, q, bm, bn):
+def _noise_update_kernel(*refs, variant, q, restore_probe, bm, bn, barrier):
     seed_ref, hyp_ref, kap_ref, base_ref = refs[0], refs[1], refs[2], refs[3]
     k0, k1 = _seed_words(seed_ref)
     rows, cols = _tile_coords(bm, bn, base_ref)
@@ -218,43 +253,55 @@ def _noise_update_kernel(*refs, variant, q, bm, bn):
     # decoupled weight decay folded into the same pass: W ← decay·W − lr·…
     # (decay ≡ 1.0 when cfg.weight_decay == 0 — an exact f32 identity)
     decay = hyp_ref[4]
+    w_ref = refs[4]
+    o_w_ref = refs[5 if variant == "sgd" else (6 if variant == "momentum" else 7)]
+    wf = w_ref[...].astype(jnp.float32)
+    if restore_probe is not None:
+        # restore-into-update: add back the last probe's +ρ·z (hyp[5] = ρ)
+        # first, round-tripped through the VMEM output tile — the same
+        # rounding and optimization barrier the separate restore pass had,
+        # so the chained step stays bitwise identical
+        zr = counter_normal(k0, k1, rows, cols, restore_probe)
+        o_w_ref[...] = (wf + hyp_ref[5] * zr).astype(o_w_ref.dtype)
+        wf = o_w_ref[...]
+        if barrier:
+            wf = jax.lax.optimization_barrier(wf)
+        wf = wf.astype(jnp.float32)
     if variant == "sgd":
-        w_ref, o_w = refs[4], refs[5]
-        o_w[...] = (decay * w_ref[...].astype(jnp.float32) - lr * g).astype(o_w.dtype)
+        o_w = refs[5]
+        o_w[...] = (decay * wf - lr * g).astype(o_w.dtype)
     elif variant == "momentum":
-        w_ref, m_ref, o_w, o_m = refs[4], refs[5], refs[6], refs[7]
+        m_ref, o_w, o_m = refs[5], refs[6], refs[7]
         b1 = hyp_ref[1]
         m_new = b1 * m_ref[...] + (1.0 - b1) * g
         o_m[...] = m_new
-        o_w[...] = (
-            decay * w_ref[...].astype(jnp.float32) - lr * m_new
-        ).astype(o_w.dtype)
+        o_w[...] = (decay * wf - lr * m_new).astype(o_w.dtype)
     else:  # adam
-        w_ref, m_ref, v_ref, o_w, o_m, o_v = refs[4:10]
+        m_ref, v_ref, o_w, o_m, o_v = refs[5:10]
         b1, b2, eps = hyp_ref[1], hyp_ref[2], hyp_ref[3]
         m_new = b1 * m_ref[...] + (1.0 - b1) * g
         v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
         o_m[...] = m_new
         o_v[...] = v_new
         upd = m_new * jax.lax.rsqrt(v_new + eps)
-        o_w[...] = (
-            decay * w_ref[...].astype(jnp.float32) - lr * upd
-        ).astype(o_w.dtype)
+        o_w[...] = (decay * wf - lr * upd).astype(o_w.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("variant", "bm", "bn", "interpret")
+    jax.jit, static_argnames=("variant", "restore_probe", "bm", "bn", "interpret")
 )
 def noise_update(
     w: jax.Array,                 # [m, n]
     seed: jax.Array,              # uint32[2]
     kappas: jax.Array,            # [q] f32 — q static via shape
-    hyp: jax.Array,               # [5] f32: lr, beta1, beta2, eps, decay
+    hyp: jax.Array,               # [6] f32: lr, beta1, beta2, eps, decay,
+    #                               restore scale (ρ when restore_probe set)
     m_buf: jax.Array | None = None,   # [m, n] f32 (momentum/adam)
     v_buf: jax.Array | None = None,   # [m, n] f32 (adam)
     *,
     base: jax.Array | None = None,    # int32[2] global (row0, col0) of w[0, 0]
     variant: str = "sgd",
+    restore_probe: int | None = None,  # static: fold +hyp[5]·z_probe restore in
     bm: int = 256,
     bn: int = 512,
     interpret: bool = False,
@@ -264,7 +311,9 @@ def noise_update(
     The state buffers ride the same grid as W (one HBM round-trip each,
     aliased in-place); z for every probe is regenerated on-chip.  hyp[4] is
     the decoupled weight-decay factor (1 − lr·wd, 1.0 for no decay) applied
-    to W in the same fused pass.
+    to W in the same fused pass; with ``restore_probe`` set the kernel first
+    adds back that probe's +hyp[5]·z (the chained restore-into-update — one
+    extra on-chip draw, zero extra HBM traffic).
     """
     m, n = w.shape
     bm = min(bm, m)
@@ -272,6 +321,7 @@ def noise_update(
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
     q = kappas.shape[0]
     assert q < MAX_PROBES, q
+    assert restore_probe is None or restore_probe < MAX_PROBES
 
     tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
@@ -292,7 +342,8 @@ def noise_update(
         aliases[6] = 2
     out = pl.pallas_call(
         functools.partial(
-            _noise_update_kernel, variant=variant, q=q, bm=bm, bn=bn
+            _noise_update_kernel, variant=variant, q=q,
+            restore_probe=restore_probe, bm=bm, bn=bn, barrier=interpret,
         ),
         grid=(m // bm, n // bn),
         in_specs=in_specs,
@@ -309,21 +360,31 @@ def noise_update(
 # ---------------------------------------------------------------------------
 
 
-def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref):
-    scale = scale_ref[0]
-    decay = scale_ref[1]
+def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref, *, k, r, barrier):
     u = u_ref[...].astype(jnp.float32)          # [bm, r]
     v = v_ref[...].astype(jnp.float32)          # [bn, r]
-    s = s_ref[...].astype(jnp.float32)          # [r, r]
-    us = jax.lax.dot_general(
-        u, s, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )                                            # [bm, r]
-    z = jax.lax.dot_general(
-        us, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )                                            # [bm, bn]
-    o_ref[...] = (
-        decay * w_ref[...].astype(jnp.float32) + scale * z
-    ).astype(o_ref.dtype)
+    s_all = s_ref[...].astype(jnp.float32)      # [k·r, r]
+    wf = w_ref[...].astype(jnp.float32)
+    for s in range(k):
+        sig = s_all[s * r : (s + 1) * r, :]      # [r, r]
+        us = jax.lax.dot_general(
+            u, sig, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )                                        # [bm, r]
+        z = jax.lax.dot_general(
+            us, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                        # [bm, bn]
+        # per-step SMEM decay + a VMEM-tile round-trip between deltas, with
+        # the interpret-mode optimization_barrier fences (see tezo_perturb):
+        # the chained pass stays bitwise identical to the standalone passes
+        # it replaces
+        if barrier:
+            z = jax.lax.optimization_barrier(z)
+        d = scale_ref[k + s]
+        o_ref[...] = (d * wf + scale_ref[s] * z).astype(o_ref.dtype)
+        wf = o_ref[...]
+        if barrier and s < k - 1:
+            wf = jax.lax.optimization_barrier(wf)
+        wf = wf.astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
@@ -331,8 +392,8 @@ def subzo_perturb(
     w: jax.Array,       # [m, n]
     u: jax.Array,       # [m, r]
     v: jax.Array,       # [n, r]
-    sigma: jax.Array,   # [r, r] f32
-    scale: jax.Array | float,
+    sigma: jax.Array,   # [r, r] f32, or [k, r, r] for a k-delta chain
+    scale: jax.Array | float,          # scalar, or [k] matching sigma
     decay: jax.Array | float = 1.0,
     *,
     bm: int = 256,
@@ -342,27 +403,40 @@ def subzo_perturb(
     """SubZero's Z = U·Σ·Vᵀ, fused like tezo_perturb: the [bm,r]·[r,r]·[r,bn]
     chain runs on the MXU against the resident W tile, so Z (and U·Σ) never
     reach HBM.  ``decay`` (1 − lr·wd on the update touch, 1.0 otherwise)
-    folds decoupled weight decay into the same pass."""
+    folds decoupled weight decay into the same pass.  A stacked ``sigma``
+    [k, r, r] with per-delta ``scale`` [k] applies the perturbation chain's
+    merged transitions (bridge / restore-into-update) in one W round-trip;
+    decay applies to the last delta only (the update touch)."""
     m, n = w.shape
     r = u.shape[-1]
     bm = min(bm, m)
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
-    scale_arr = jnp.stack(
-        [jnp.asarray(scale, jnp.float32), jnp.asarray(decay, jnp.float32)]
-    )
+    sigmas = sigma.reshape((-1, r, r))
+    k = sigmas.shape[0]
+    scales = jnp.asarray(scale, jnp.float32).reshape(-1)
+    assert scales.shape[0] in (1, k), (scales.shape, k)
+    if scales.shape[0] != k:
+        scales = jnp.broadcast_to(scales, (k,))
+    # [scale_0..scale_{k-1}, decay_0..decay_{k-1}]: decay on the final delta
+    # only, as an SMEM value per step (see _subzo_kernel)
+    scale_arr = jnp.concatenate([
+        scales,
+        jnp.ones((k - 1,), jnp.float32),
+        jnp.asarray(decay, jnp.float32).reshape(1),
+    ])
     return pl.pallas_call(
-        _subzo_kernel,
+        functools.partial(_subzo_kernel, k=k, r=r, barrier=interpret),
         grid=(m // bm, n // bn),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
-            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((k * r, r), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         input_output_aliases={1: 0},
         interpret=interpret,
-    )(scale_arr, w, u, v, sigma)
+    )(scale_arr, w, u, v, sigmas.reshape((k * r, r)))

@@ -35,6 +35,7 @@ from repro.core import (
     build_zo_train_step,
     init_zo_state,
     kernel_execution,
+    zo_pass_count,
 )
 from repro.distributed.sharding import (
     batch_axes,
@@ -178,6 +179,12 @@ def run_cell(
             method=method, kernel_mode=kernel_mode, rank=rank,
             factor_dtype=jnp.bfloat16,
         )
+        # step-schedule provenance: BENCH rows and HLO costings are only
+        # comparable across PRs when the record says how many full-W passes
+        # the lowered step makes (chained default: 2q+1)
+        record["q_probes"] = zo_cfg.q_probes
+        record["restore_mode"] = zo_cfg.restore_mode
+        record["zo_passes"] = zo_pass_count(zo_cfg.q_probes, zo_cfg.restore_mode)
         state_abs = jax.eval_shape(
             lambda p: init_zo_state(p, zo_cfg), model.abstract_params()
         )

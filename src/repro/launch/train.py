@@ -26,7 +26,7 @@ import numpy as np
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
 from repro.core import ZOConfig, build_zo_train_step, init_zo_state
-from repro.core import kernel_execution
+from repro.core import kernel_execution, zo_pass_count
 from repro.core.rank import select_ranks
 from repro.data import DataConfig, Prefetcher, batch_at_step
 from repro.distributed import (
@@ -53,6 +53,7 @@ def train(
     rank: int = 24,
     rank_mode: str = "const",
     q_probes: int = 1,
+    restore_mode: str = "inplace",
     seed: int = 0,
     ckpt_dir: str | None = None,
     ckpt_every: int = 100,
@@ -79,7 +80,8 @@ def train(
 
     zo_cfg = ZOConfig(
         method=method, kernel_mode=kernel_mode, lr=lr, rho=rho, rank=rank,
-        rank_mode=rank_mode, q_probes=q_probes, seed=seed, total_steps=steps,
+        rank_mode=rank_mode, q_probes=q_probes, restore_mode=restore_mode,
+        seed=seed, total_steps=steps,
     )
     # report the lowering that will actually execute (and whether the
     # pallas path is interpret-mode emulation)
@@ -202,6 +204,11 @@ def train(
         "kernel_mode": resolved_kernel,
         "kernel_interpret": kernel_interpret,
         "steps": steps,
+        # step-schedule provenance: the chained default makes 2q+1 full-W
+        # passes per step (see repro.core.zo_step)
+        "q_probes": q_probes,
+        "restore_mode": restore_mode,
+        "zo_passes": zo_pass_count(q_probes, restore_mode),
         "final_eval_loss": final_eval,
         "history": history,
         "wall_s": round(time.time() - t_start, 1),
@@ -233,6 +240,15 @@ def main() -> None:
     ap.add_argument("--rank", type=int, default=24)
     ap.add_argument("--rank-mode", default="const", choices=["const", "spectral"])
     ap.add_argument("--q-probes", type=int, default=1)
+    ap.add_argument(
+        "--restore-mode", default="inplace",
+        choices=["inplace", "unchained", "exact"],
+        help="step schedule: inplace = the chained transitions (2q+1 full-W "
+        "passes — bridge fuses restore_i with perturb_{i+1}, the update "
+        "absorbs the last restore); unchained = literal Algorithm 1 "
+        "(3q+1 passes, numerical studies); exact = branch ±ρ copies off "
+        "the originals (bit-exact restore, 2× transient memory)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)

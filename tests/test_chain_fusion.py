@@ -1,0 +1,368 @@
+"""Perturbation-chain fusion (core.zo_step transitions): 2q+1 full-W passes.
+
+Three contracts lock the chained step schedule:
+
+1. **Bitwise parity**: the chained default (``restore_mode="inplace"`` —
+   first_perturb / flip / bridge / restore_into_update) must produce
+   bit-identical params, optimizer state, and loss metrics to the literal
+   Algorithm-1 schedule (``restore_mode="unchained"``) for every method, at
+   q=1 and q=4, on BOTH lowerings.  The fused bridge / restore kernels
+   reproduce the weight-dtype rounding of each pass they merge, and the
+   MeZO-family kernels regenerate identical per-probe counter streams
+   (dual-draw = same draws, not just the same distribution), so the
+   tolerance here is zero.
+
+2. **Pass count**: a kernel-invocation spy locks the number of full-W
+   kernel passes per step to ``zo_pass_count``: 2q+1 chained (and for the
+   branch-off-originals "exact" mode), 3q+1 unchained — the HBM-traffic
+   claim of the chain, counted instead of asserted in prose.
+
+3. **Leaf/kernel level**: the chain kernels (stacked-τ tezo chain, stacked-Σ
+   subzo chain, dual-draw noise bridge, restore-fused updates) match the
+   composition of the single-pass oracles in kernels/ref.py bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ZOConfig,
+    build_zo_train_step,
+    init_zo_state,
+    zo_pass_count,
+)
+from repro.core.estimator import METHODS
+from repro.kernels import ops, ref
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _params():
+    k = jax.random.PRNGKey(17)
+    return {
+        "w1": jax.random.normal(jax.random.fold_in(k, 0), (16, 24)) * 0.1,
+        "stack": jax.random.normal(jax.random.fold_in(k, 1), (2, 12, 12)) * 0.1,
+        "b": jnp.zeros((12,)),
+    }
+
+
+def _loss_fn(p, batch):
+    h = jnp.tanh(batch["x"] @ p["w1"])[:, :12]
+    if "stack" in p:
+        for layer in range(p["stack"].shape[0]):
+            h = h + 0.1 * jnp.tanh(h @ p["stack"][layer])
+    h = h + p["b"]
+    return jnp.mean((jnp.sum(h, axis=-1) - batch["y"]) ** 2)
+
+
+def _batch():
+    return {
+        "x": jax.random.normal(jax.random.PRNGKey(5), (4, 16)),
+        "y": jnp.ones((4,)),
+    }
+
+
+def _run(method, q_probes, kernel_mode, restore_mode, n_steps=2, params=None,
+         **cfg_kw):
+    cfg_kw.setdefault("lr", 1e-2)
+    cfg_kw.setdefault("lazy_interval", 3)
+    cfg_kw.setdefault("weight_decay", 0.05)   # the decay composes with restore
+    cfg = ZOConfig(
+        method=method, kernel_mode=kernel_mode, rank=4, q_probes=q_probes,
+        seed=3, restore_mode=restore_mode, **cfg_kw,
+    )
+    state = init_zo_state(params if params is not None else _params(), cfg)
+    step = jax.jit(build_zo_train_step(_loss_fn, cfg))
+    batch = _batch()
+    metrics = None
+    for _ in range(n_steps):
+        state, metrics = step(state, batch)
+    return state, metrics
+
+
+def _assert_states_bitwise(s_a, s_b, context=""):
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(s_a.params),
+        jax.tree_util.tree_leaves_with_path(s_b.params),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{context}: params diverged at {pa}",
+        )
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(s_a.mstate),
+        jax.tree_util.tree_leaves_with_path(s_b.mstate),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{context}: mstate diverged at {pa}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# 1. Chained == unchained, bitwise, every method × q × lowering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel_mode", ["pallas", "xla"])
+@pytest.mark.parametrize("q_probes", [1, 4])
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_chained_equals_unchained_bitwise(method, q_probes, kernel_mode):
+    s_c, m_c = _run(method, q_probes, kernel_mode, "inplace")
+    s_u, m_u = _run(method, q_probes, kernel_mode, "unchained")
+    _assert_states_bitwise(s_c, s_u, f"{method} q={q_probes} {kernel_mode}")
+    assert float(m_c["loss"]) == float(m_u["loss"])
+    assert float(m_c["kappa_abs"]) == float(m_u["kappa_abs"])
+    # …and the schedules really differ in pass count
+    assert int(m_c["zo_passes"]) == zo_pass_count(q_probes, "inplace")
+    assert int(m_u["zo_passes"]) == zo_pass_count(q_probes, "unchained")
+
+
+def test_chained_equals_unchained_bitwise_bf16():
+    """bf16 params are where the per-pass rounding bites: the fused bridge /
+    restore must still replay the exact cast sequence of the passes they
+    merge."""
+    k = jax.random.PRNGKey(2)
+    params = {
+        "w1": (jax.random.normal(jax.random.fold_in(k, 0), (16, 24)) * 0.1
+               ).astype(jnp.bfloat16),
+        "stack": (jax.random.normal(jax.random.fold_in(k, 1), (2, 12, 12)) * 0.1
+                  ).astype(jnp.bfloat16),
+        "b": jnp.zeros((12,), jnp.bfloat16),
+    }
+    for method in ("tezo_adam", "mezo"):
+        s_c, _ = _run(method, 4, "pallas", "inplace", params=params)
+        s_u, _ = _run(method, 4, "pallas", "unchained", params=params)
+        _assert_states_bitwise(s_c, s_u, f"{method} bf16")
+
+
+# ---------------------------------------------------------------------------
+# 2. Full-W pass count: the kernel-invocation spy
+# ---------------------------------------------------------------------------
+
+# Every ops entry point that makes one full-parameter HBM pass.  The spy
+# counts OUTERMOST calls only: lozo_perturb/lozo_chain delegate to
+# tezo_perturb and noise_perturb_pair to noise_perturb internally — one pass,
+# not two.
+_PASS_OPS = (
+    "tezo_perturb", "tezo_adam_update",
+    "noise_perturb", "noise_perturb_pair",
+    "noise_update_sgd", "noise_update_momentum", "noise_update_adam",
+    "lozo_perturb", "lozo_chain", "subzo_perturb",
+)
+
+
+class _PassSpy:
+    def __init__(self, monkeypatch):
+        self.count = 0
+        self._depth = 0
+        from repro.core import dispatch
+
+        for name in _PASS_OPS:
+            monkeypatch.setattr(
+                dispatch.ops, name, self._wrap(getattr(ops, name))
+            )
+
+    def _wrap(self, real):
+        def spy(*a, **kw):
+            outer = self._depth == 0
+            self._depth += 1
+            try:
+                out = real(*a, **kw)
+            finally:
+                self._depth -= 1
+            if outer:
+                self.count += 1
+            return out
+
+        return spy
+
+
+# one kernel-eligible leaf (plus a dense-fallback bias, which never touches
+# the kernels) → ops-call count == full-W pass count
+def _single_leaf_params():
+    k = jax.random.PRNGKey(7)
+    return {
+        "w1": jax.random.normal(k, (16, 24)) * 0.1,
+        "b": jnp.zeros((12,)),
+    }
+
+
+@pytest.mark.parametrize("q_probes", [1, 4])
+@pytest.mark.parametrize(
+    "method", ["tezo", "tezo_adam", "mezo", "mezo_adam", "lozo", "subzo"]
+)
+def test_full_w_pass_count(method, q_probes, monkeypatch):
+    """The chained pallas path makes exactly 2q+1 full-W kernel passes per
+    step; the unchained branch 3q+1; the branch-off-originals exact mode
+    2q+1 — matching ``zo_pass_count`` (which benches and launchers record)."""
+    for restore_mode in ("inplace", "unchained", "exact"):
+        spy = _PassSpy(monkeypatch)
+        _run(
+            method, q_probes, "pallas", restore_mode, n_steps=1,
+            params=_single_leaf_params(), weight_decay=0.0,
+        )
+        want = zo_pass_count(q_probes, restore_mode)
+        assert spy.count == want, (method, q_probes, restore_mode, spy.count)
+    # and the xla path never touches the kernels
+    spy = _PassSpy(monkeypatch)
+    _run(
+        method, q_probes, "xla", "inplace", n_steps=1,
+        params=_single_leaf_params(), weight_decay=0.0,
+    )
+    assert spy.count == 0, (method, q_probes, spy.count)
+
+
+# ---------------------------------------------------------------------------
+# 3. Chain kernels vs composed single-pass oracles (leaf level, bitwise)
+# ---------------------------------------------------------------------------
+
+
+def test_tezo_chain_kernel_matches_composed_oracle():
+    """The stacked-τ chain == two single-τ kernel passes: BITWISE for bf16
+    weights (the production dtype — the inter-delta cast is a hard rounding
+    barrier), and ≤1 f32 ulp for f32, where XLA gives no bitwise guarantee
+    between one jitted program and a composition of two (fusion/FMA choices
+    are whole-program).  The end-to-end bitwise lock lives in
+    test_chained_equals_unchained_bitwise, where both schedules run as
+    comparable train-step programs.  The eager composed oracle agrees to
+    the same f32-ulp slack."""
+    key = jax.random.PRNGKey(13)
+    for dtype in (jnp.float32, jnp.bfloat16):
+        w = (jax.random.normal(key, (48, 40)) * 0.1).astype(dtype)
+        u = jax.random.normal(jax.random.fold_in(key, 1), (48, 4))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (40, 4))
+        taus = jax.random.normal(jax.random.fold_in(key, 3), (2, 4))
+        scales = jnp.asarray([1e-3, -2e-3], jnp.float32)
+        got = ops.tezo_perturb(w, u, v, taus, scales, decay=0.999)
+        want = ops.tezo_perturb(
+            ops.tezo_perturb(w, u, v, taus[0], 1e-3),
+            u, v, taus[1], -2e-3, decay=0.999,
+        )
+        want_ref = ref.tezo_chain_ref(w, u, v, taus, [1e-3, -2e-3], decay=0.999)
+        if dtype == jnp.bfloat16:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want_ref))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-7
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want_ref), atol=1e-7
+            )
+
+
+def test_subzo_chain_kernel_matches_composed_oracle():
+    key = jax.random.PRNGKey(19)
+    w = (jax.random.normal(key, (48, 40)) * 0.1).astype(jnp.bfloat16)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (48, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (40, 4))
+    sigmas = jax.random.normal(jax.random.fold_in(key, 3), (2, 4, 4))
+    scales = jnp.asarray([1e-3, -5e-4], jnp.float32)
+    got = ops.subzo_perturb(w, u, v, sigmas, scales, decay=0.99)
+    want = ref.subzo_chain_ref(w, u, v, sigmas, [1e-3, -5e-4], decay=0.99)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lozo_chain_matches_two_perturbs():
+    """The stacked-factor LOZO chain (shared lazy U, two fresh V's selected
+    by 0/1 τ rows) is bitwise two single lozo passes."""
+    key = jax.random.PRNGKey(23)
+    for batch in ((), (2,)):
+        w = (jax.random.normal(key, batch + (32, 24)) * 0.1).astype(jnp.bfloat16)
+        u = jax.random.normal(jax.random.fold_in(key, 1), batch + (32, 4))
+        va = jax.random.normal(jax.random.fold_in(key, 2), batch + (24, 4))
+        vb = jax.random.normal(jax.random.fold_in(key, 3), batch + (24, 4))
+        got = ops.lozo_chain(w, u, va, vb, 1e-3, 1e-3)
+        want = ops.lozo_perturb(ops.lozo_perturb(w, u, va, 1e-3), u, vb, 1e-3)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_noise_dual_draw_matches_two_perturbs():
+    """The dual-draw bridge draws the SAME per-probe counter streams as two
+    single-draw passes — bitwise, not just statistically."""
+    key_t = jax.random.PRNGKey(21)
+    seed = ops.leaf_seed(key_t, "['w']")
+    for dtype in (jnp.float32, jnp.bfloat16):
+        w = (jax.random.normal(jax.random.PRNGKey(3), (64, 128)) * 0.1).astype(dtype)
+        got = ops.noise_perturb_pair(w, seed, 1e-3, 1e-3, probe_a=2, probe_b=3)
+        want = ops.noise_perturb(
+            ops.noise_perturb(w, seed, 1e-3, probe=2), seed, 1e-3, probe=3
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # and the replayed whole-array oracle agrees (≤1 f32 ulp: the eager
+        # oracle skips XLA's in-kernel FMA contraction)
+        want_ref = ref.noise_perturb_pair_ref(w, seed, 1e-3, 1e-3, 2, 3)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want_ref, np.float32),
+            atol=1e-7,
+        )
+
+
+def test_noise_update_restore_matches_composition():
+    """restore-into-update on the dense variants == the separate restore
+    kernel pass followed by the plain update kernel, bitwise — and the
+    replayed-stream oracle agrees to ≤1 f32 ulp."""
+    key_t = jax.random.PRNGKey(29)
+    seed = ops.leaf_seed(key_t, "['w']")
+    w = (jax.random.normal(jax.random.PRNGKey(4), (64, 128)) * 0.1).astype(jnp.bfloat16)
+    m_buf = jnp.zeros((64, 128), jnp.float32) + 0.01
+    v_buf = jnp.zeros((64, 128), jnp.float32) + 0.02
+    kap = jnp.asarray([0.5, -1.0], jnp.float32)
+    lr, rho = 1e-2, 1e-3
+    got = ops.noise_update_sgd(
+        w, seed, kap, lr, decay=0.999, restore_probe=1, restore_scale=rho
+    )
+    w_restored = ops.noise_perturb(w, seed, rho, probe=1)
+    want = ops.noise_update_sgd(w_restored, seed, kap, lr, decay=0.999)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    want_ref = ref.noise_update_sgd_ref(
+        w, seed, kap, lr, decay=0.999, restore_probe=1, restore_scale=rho
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want_ref, np.float32), atol=1e-7
+    )
+    got_w, got_m, got_v = ops.noise_update_adam(
+        w, m_buf, v_buf, seed, kap, lr, 0.9, 0.99, 1e-5,
+        decay=0.999, restore_probe=1, restore_scale=rho,
+    )
+    want_w, want_m, want_v = ops.noise_update_adam(
+        w_restored, m_buf, v_buf, seed, kap, lr, 0.9, 0.99, 1e-5, decay=0.999
+    )
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_tezo_adam_restore_matches_ref():
+    key = jax.random.PRNGKey(31)
+    w = (jax.random.normal(key, (48, 40)) * 0.1).astype(jnp.bfloat16)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (48, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (40, 4))
+    tm = jax.random.normal(jax.random.fold_in(key, 3), (4,))
+    tv = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (4,)))
+    tr = jax.random.normal(jax.random.fold_in(key, 5), (4,))
+    got = ops.tezo_adam_update(
+        w, u, v, tm, tv, 1e-4, decay=0.999, tau_r=tr, restore_scale=1e-3
+    )
+    want = ref.tezo_adam_restore_update_ref(
+        w, u, v, tm, tv, 1e-4, 1e-5, decay=0.999, tau_r=tr, restore_scale=1e-3
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_restore_mode_validated_at_build_time():
+    with pytest.raises(ValueError, match="restore_mode"):
+        build_zo_train_step(
+            _loss_fn, ZOConfig(method="tezo", restore_mode="bogus")
+        )
+    with pytest.raises(ValueError, match="restore_mode"):
+        zo_pass_count(1, "chained")  # the mode is spelled "inplace"

@@ -7,8 +7,10 @@ seeing exactly 1 device (assignment §0).  Two contracts:
      kernel_mode="pallas" (shard_map'd local-shard kernels, interpret mode
      on CPU) matches the plain single-device kernel_mode="xla" step — for a
      TeZO-family method with weight decay (factor state placed by
-     mstate_shardings) — and a MeZO lr=0 sharded step is an identity (the
-     three on-chip-noise passes cancel device-locally).
+     mstate_shardings) at q_probes=2, which routes through the CHAINED
+     transitions (bridge + restore_into_update, the default schedule);
+     chained == unchained bitwise on the mesh; and a MeZO lr=0 sharded
+     step is an identity (the on-chip-noise passes cancel device-locally).
 
   2. Mesh-layout invariance of the zo_noise counter stream: the same
      (key_t, path, probe, global element) draws bitwise-identical z on a
@@ -74,12 +76,17 @@ _PARITY_SCRIPT = textwrap.dedent(
         return st_sh, param_spec_table(st_sh.params)
 
     # ---- TeZO-family parity: pallas(shard_map, 2x4) == xla(single device),
-    # with the weight decay fused into the sharded kernels ----------------
+    # with the weight decay fused into the sharded kernels.  q_probes=2
+    # exercises the CHAINED transitions (bridge + restore_into_update —
+    # the default restore_mode="inplace" schedule) through the shard_map'd
+    # stacked-factor / dual-draw kernels. ---------------------------------
     for method in ("tezo_adam", "subzo"):
         cfg_x = ZOConfig(method=method, kernel_mode="xla", rank=4, lr=1e-2,
-                         seed=3, weight_decay=0.05, lazy_interval=3)
+                         seed=3, weight_decay=0.05, lazy_interval=3,
+                         q_probes=2)
         cfg_p = ZOConfig(method=method, kernel_mode="pallas", rank=4, lr=1e-2,
-                         seed=3, weight_decay=0.05, lazy_interval=3)
+                         seed=3, weight_decay=0.05, lazy_interval=3,
+                         q_probes=2)
         state = init_zo_state(params, cfg_x)
         step_ref = jax.jit(build_zo_train_step(loss_fn, cfg_x))
         s_ref, m_ref = state, None
@@ -115,6 +122,31 @@ _PARITY_SCRIPT = textwrap.dedent(
             float(m_ref["loss"]), float(m_got["loss"]), rtol=2e-4
         )
         print(f"PARITY_{method.upper()}_OK")
+
+    # ---- chained == unchained BITWISE on the mesh: the shard_map'd bridge /
+    # restore-into-update kernels reproduce the separate passes exactly ----
+    for method in ("tezo_adam", "mezo"):
+        outs = {}
+        for restore_mode in ("inplace", "unchained"):
+            cfg_c = ZOConfig(method=method, kernel_mode="pallas", rank=4,
+                             lr=1e-2, seed=3, q_probes=2,
+                             restore_mode=restore_mode)
+            state_c = init_zo_state(params, cfg_c)
+            st_sh, specs = sharded_state(state_c)
+            step_c = jax.jit(
+                build_zo_train_step(loss_fn, cfg_c, mesh=mesh,
+                                    param_specs=specs),
+                in_shardings=(st_sh, None), out_shardings=(st_sh, None),
+            )
+            with mesh:
+                s = jax.device_put(state_c, st_sh)
+                for _ in range(2):
+                    s, _ = step_c(s, batch)
+            outs[restore_mode] = s
+        for a, b in zip(jax.tree.leaves(outs["inplace"].params),
+                        jax.tree.leaves(outs["unchained"].params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print(f"CHAINED_SHARDED_{method.upper()}_OK")
 
     # ---- MeZO lr=0: the sharded pallas step is an identity on params ----
     cfg0 = ZOConfig(method="mezo", kernel_mode="pallas", lr=0.0, seed=3)
@@ -206,6 +238,29 @@ _INVARIANCE_SCRIPT = textwrap.dedent(
     # and distinct slices still draw distinct streams
     assert np.abs(got_s[0] - got_s[1]).max() > 1e-3
     print("STACK_LEAF_INVARIANT_OK")
+
+    # dual-draw chained bridge: mesh-layout-invariant like the single draw
+    # (same global-coordinate counters for BOTH probes in one tile visit)
+    wp = jnp.zeros((1024, 512), jnp.float32)
+    want_p = np.asarray(dispatch.noise_perturb_pair_leaf(
+        wp, key_t, "['w']", 1, 1e-3, 2, 1e-3, use_kernel=True
+    ))
+    for data, model, spec in [(8, 1, P("data", None)), (2, 4, P("data", "model"))]:
+        mesh_p = make_host_mesh(data=data, model=model)
+        sh_p = NamedSharding(mesh_p, spec)
+
+        def fp(w):
+            with dispatch.shard_context(mesh_p, {"['w']": spec}):
+                return dispatch.noise_perturb_pair_leaf(
+                    w, key_t, "['w']", 1, 1e-3, 2, 1e-3, use_kernel=True
+                )
+
+        with mesh_p:
+            got_p = jax.jit(fp, in_shardings=(sh_p,), out_shardings=sh_p)(
+                jax.device_put(wp, sh_p)
+            )
+        np.testing.assert_array_equal(np.asarray(got_p), want_p, err_msg=str(spec))
+    print("PAIR_LEAF_INVARIANT_OK")
 
     # three-pass replay on a sharded leaf: +rho, -2rho, +rho cancels
     wr = jax.random.normal(jax.random.PRNGKey(3), (256, 512)) * 0.1
@@ -371,7 +426,13 @@ def test_sharded_dispatch_parity(tmp_path):
     identity."""
     _run_script(
         tmp_path, "sharded_parity.py", _PARITY_SCRIPT,
-        ("PARITY_TEZO_ADAM_OK", "PARITY_SUBZO_OK", "MEZO_LR0_IDENTITY_OK"),
+        (
+            "PARITY_TEZO_ADAM_OK",
+            "PARITY_SUBZO_OK",
+            "CHAINED_SHARDED_TEZO_ADAM_OK",
+            "CHAINED_SHARDED_MEZO_OK",
+            "MEZO_LR0_IDENTITY_OK",
+        ),
     )
 
 
@@ -402,6 +463,7 @@ def test_noise_stream_mesh_layout_invariance(tmp_path):
             "CLEAN_LEAF_INVARIANT_OK",
             "VOCAB_LEAF_INVARIANT_OK",
             "STACK_LEAF_INVARIANT_OK",
+            "PAIR_LEAF_INVARIANT_OK",
             "THREE_PASS_SHARDED_OK",
         ),
     )
