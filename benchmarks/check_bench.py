@@ -10,7 +10,11 @@ dense path, the sharded leg disappearing, or the forward leg (schema 3:
 prefill rows per model × kernel mode, ``leg: "forward"``) vanishing all
 fail here; a fresh file with no forward-leg rows fails unconditionally, and
 so does a zo-step row without the schema-4 ``zo_passes`` field (the chained
-2q+1 pass schedule must stay self-describing).
+2q+1 pass schedule must stay self-describing).  Schema 5 adds the
+probe-parallel leg: a sharded fresh file must carry at least one zo-step
+row with ``probe_parallel: true`` and its ``per_replica_passes`` field
+(the 2·ceil(q/D)+1 per-replica schedule), so the data-axis probe
+parallelism can't silently drop out of the bench.
 New combinations are allowed (they become binding once committed).
 
 Usage (CI):
@@ -66,6 +70,31 @@ def check(fresh_path: str, baseline_path: str) -> int:
         print(
             f"[check_bench] FAIL: {no_passes} zo-step record(s) in "
             f"{fresh_path} lack the schema-4 'zo_passes' field",
+        )
+        return 1
+    # schema 5: the probe-parallel leg must survive whenever the fresh run
+    # includes the sharded legs at all (a --no-sharded smoke has no mesh
+    # rows and is exempt — the coverage ratchet below still catches the
+    # committed-baseline case)
+    has_mesh_rows = any(
+        r.get("mesh", "1x1") != "1x1" for r in fresh.get("records", [])
+    )
+    pp_rows = [
+        r
+        for r in fresh.get("records", [])
+        if r.get("leg", "zo-step") == "zo-step" and r.get("probe_parallel")
+    ]
+    if has_mesh_rows and not pp_rows:
+        print(
+            f"[check_bench] FAIL: {fresh_path} has sharded rows but no "
+            "probe-parallel zo-step record (schema 5)",
+        )
+        return 1
+    bad_pp = [r for r in pp_rows if "per_replica_passes" not in r]
+    if bad_pp:
+        print(
+            f"[check_bench] FAIL: {len(bad_pp)} probe-parallel record(s) in "
+            f"{fresh_path} lack the schema-5 'per_replica_passes' field",
         )
         return 1
     missing = sorted(record_keys(baseline) - record_keys(fresh))

@@ -32,7 +32,9 @@ def emit_csv(name: str, rows: list[dict]) -> None:
     print(f"# {name}")
     print(",".join(cols))
     for r in rows:
-        print(",".join(str(r[c]) for c in cols))
+        # rows in one block may carry leg-specific extras; missing cells
+        # print empty rather than KeyError
+        print(",".join(str(r.get(c, "")) for c in cols))
     print()
 
 
@@ -88,6 +90,7 @@ def zo_step_bytes_model(
     restore_mode: str = "inplace",
     dtype_bytes: int = 2,      # bf16 weights
     state_bytes: int = 4,      # f32 dense moments
+    probe_lanes: int | None = None,
 ) -> float:
     """Estimated HBM bytes moved by the ZO step's perturb/update touches.
 
@@ -97,14 +100,16 @@ def zo_step_bytes_model(
     W round-trip (read+write = 2·P); unfused, the dense Z is materialized
     and re-read (≈ 4·P).  The update pass additionally round-trips each
     dense moment buffer (MeZO-m/-Adam; TeZO moments are r-vectors, LOZO-m's
-    factored momentum is r·n — both negligible here).
+    factored momentum is r·n — both negligible here).  ``probe_lanes``
+    switches to the probe-parallel schedule's PER-REPLICA passes
+    (2·ceil(q/D)+1 on the busiest lane — the walltime-relevant traffic).
     """
     from repro.core.zo_step import zo_pass_count
 
     P = n_params * dtype_bytes
     S = n_params * state_bytes
     touch = 2.0 * P if kernel_path == "pallas" else 4.0 * P
-    total = zo_pass_count(q_probes, restore_mode) * touch
+    total = zo_pass_count(q_probes, restore_mode, probe_lanes=probe_lanes) * touch
     if method in ("mezo_m",):
         total += 2.0 * S
     elif method in ("mezo_adam",):

@@ -34,11 +34,15 @@ Besides the stdout CSV, ``run()`` writes ``results/BENCH_kernels.json`` —
 per-(leg, model, method, kernel-mode, mesh) walltime plus an analytic
 bytes-moved estimate — so the perf trajectory is machine-trackable across
 PRs (``benchmarks/check_bench.py`` gates CI on record coverage, including
-the forward-leg records).  Schema 4: every zo-step row records its step
-schedule (``q_probes``, ``restore_mode``, ``zo_passes`` — 2q+1 full-W
-passes on the chained default; see ``repro.core.zo_step.zo_pass_count``)
-and the bytes-moved model is pass-count-aware; ``check_bench`` fails a
-fresh file whose zo-step rows lack ``zo_passes``.
+the forward-leg records).  Schema 5: every zo-step row records its step
+schedule (``q_probes``, ``restore_mode``, ``probe_parallel``, ``zo_passes``
+— 2q+1 full-W passes on the chained default; see
+``repro.core.zo_step.zo_pass_count``) and the bytes-moved model is
+pass-count-aware; a probe-parallel leg (``mesh: "2x4-host-pp"``, q=2 probes
+split over the D=2 data lanes) additionally records ``per_replica_passes``
+(2·ceil(q/D)+1 = 3 — the walltime-relevant per-replica traffic).
+``check_bench`` fails a fresh file whose zo-step rows lack ``zo_passes``
+or that has no probe-parallel row.
 """
 from __future__ import annotations
 
@@ -82,6 +86,12 @@ BENCH_JSON = Path("results") / "BENCH_kernels.json"
 # The sharded leg's mesh: (data, model) over 8 host-platform devices.
 SHARDED_MESH = (2, 4)
 SHARDED_MESH_LABEL = "2x4-host"
+# The probe-parallel leg: same mesh, but the data axis holds PROBE replicas
+# (cfg.probe_parallel) — q=2 probes over D=2 lanes, 2·ceil(q/D)+1 = 3
+# per-replica passes instead of the sequential 5.
+PP_MESH_LABEL = "2x4-host-pp"
+PP_BENCH_METHODS = ("tezo_adam", "mezo")
+PP_Q = 2
 _CHILD_MARKER = "BENCH_SHARDED_JSON:"
 
 
@@ -191,6 +201,7 @@ def _single_device_rows(widths, iters: int) -> list[dict]:
                         # on the field's presence)
                         "q_probes": zo_cfg.q_probes,
                         "restore_mode": zo_cfg.restore_mode,
+                        "probe_parallel": False,
                         "zo_passes": zo_pass_count(
                             zo_cfg.q_probes, zo_cfg.restore_mode
                         ),
@@ -276,6 +287,7 @@ def sharded_leg_rows(iters: int) -> list[dict]:
                     "vs_mezo": round(sec / base, 3) if base else 1.0,
                     "q_probes": zo_cfg.q_probes,
                     "restore_mode": zo_cfg.restore_mode,
+                    "probe_parallel": False,
                     "zo_passes": zo_pass_count(
                         zo_cfg.q_probes, zo_cfg.restore_mode
                     ),
@@ -284,6 +296,85 @@ def sharded_leg_rows(iters: int) -> list[dict]:
                             n_params, method, resolved,
                             q_probes=zo_cfg.q_probes,
                             restore_mode=zo_cfg.restore_mode,
+                        ) / 2 ** 20,
+                        1,
+                    ),
+                }
+            )
+            jax.clear_caches()
+    return rows
+
+
+def probe_parallel_rows(iters: int) -> list[dict]:
+    """The probe-parallel leg (same subprocess contract as
+    ``sharded_leg_rows``): ``cfg.probe_parallel`` on the 2×4 host mesh, so
+    the D=2 data lanes each evaluate a disjoint slice of the q=2 probes and
+    the busiest replica makes 2·ceil(q/D)+1 = 3 full-W passes instead of the
+    sequential 2q+1 = 5.  State and batch are REPLICATED (the data axis
+    holds probe replicas, not batch shards; ``param_specs={}``).  Rows are
+    labeled ``mesh: "2x4-host-pp"`` and carry the schema-5 fields
+    ``probe_parallel`` / ``per_replica_passes``; ``zo_passes`` records the
+    per-replica count (the walltime-relevant number on this leg)."""
+    jax.config.update("jax_threefry_partitionable", True)
+    from repro.distributed import replicated_tree
+    from repro.launch.mesh import make_host_mesh
+
+    lanes = SHARDED_MESH[0]
+    mesh = make_host_mesh(data=lanes, model=SHARDED_MESH[1])
+    shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
+    cfg = get_smoke_config("opt-125m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = tree_num_params(params)
+    batch = model.make_inputs(jax.random.PRNGKey(1), shape)
+    b_sh = replicated_tree(mesh, jax.eval_shape(lambda: batch))
+    rows = []
+    for method in PP_BENCH_METHODS:
+        for kernel_mode in ("xla", "pallas"):
+            zo_cfg = ZOConfig(
+                method=method, kernel_mode=kernel_mode, rank=16,
+                lr=1e-5, lazy_interval=50, q_probes=PP_Q,
+                probe_parallel=True,
+            )
+            state = init_zo_state(params, zo_cfg)
+            st_sh = replicated_tree(mesh, jax.eval_shape(lambda: state))
+            step = jax.jit(
+                build_zo_train_step(
+                    model.loss_fn, zo_cfg, mesh=mesh, param_specs={},
+                ),
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+            )
+            with mesh:
+                state_d = jax.device_put(state, st_sh)
+                batch_d = jax.device_put(batch, b_sh)
+                sec = time_fn(
+                    lambda s=state_d, b=batch_d: step(s, b)[1]["loss"],
+                    iters=iters,
+                )
+            resolved, _ = kernel_execution(method, kernel_mode)
+            per_replica = zo_pass_count(
+                PP_Q, zo_cfg.restore_mode, probe_lanes=lanes
+            )
+            rows.append(
+                {
+                    "leg": "zo-step",
+                    "model": f"{cfg.name}-x1",
+                    "method": method,
+                    "kernel": _kernel_label(method, kernel_mode),
+                    "mesh": PP_MESH_LABEL,
+                    "ms_per_iter": round(sec * 1e3, 2),
+                    "q_probes": PP_Q,
+                    "restore_mode": zo_cfg.restore_mode,
+                    "probe_parallel": True,
+                    "probe_lanes": lanes,
+                    "per_replica_passes": per_replica,
+                    "zo_passes": per_replica,
+                    "bytes_moved_est_mb": round(
+                        zo_step_bytes_model(
+                            n_params, method, resolved, q_probes=PP_Q,
+                            restore_mode=zo_cfg.restore_mode,
+                            probe_lanes=lanes,
                         ) / 2 ** 20,
                         1,
                     ),
@@ -370,8 +461,18 @@ def run(
     rows += forward_leg_rows(iters)
     if sharded:
         rows += _sharded_leg_subprocess(iters)
-    # the two legs carry different columns — emit as separate CSV blocks
-    emit_csv("table8_walltime", [r for r in rows if r["leg"] == "zo-step"])
+    # the legs carry different columns — emit as separate CSV blocks
+    # (probe-parallel zo-step rows have per_replica_passes instead of
+    # vs_mezo, so they get their own block too)
+    emit_csv(
+        "table8_walltime",
+        [r for r in rows
+         if r["leg"] == "zo-step" and not r.get("probe_parallel")],
+    )
+    emit_csv(
+        "table8_walltime_probe_parallel",
+        [r for r in rows if r["leg"] == "zo-step" and r.get("probe_parallel")],
+    )
     emit_csv(
         "table8_walltime_forward", [r for r in rows if r["leg"] == "forward"]
     )
@@ -380,9 +481,11 @@ def run(
     out.write_text(
         json.dumps(
             {
-                # schema 4: zo-step rows carry q_probes / restore_mode /
-                # zo_passes (the chained 2q+1 full-W pass schedule)
-                "schema": 4,
+                # schema 5: zo-step rows carry q_probes / restore_mode /
+                # probe_parallel / zo_passes (the chained 2q+1 full-W pass
+                # schedule, or the per-replica 2·ceil(q/D)+1 on the
+                # probe-parallel leg, which also records per_replica_passes)
+                "schema": 5,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter
@@ -414,7 +517,11 @@ def main() -> None:
     )
     args = ap.parse_args()
     if args.sharded_child:
-        rows = sharded_leg_rows(args.iters) + sharded_forward_rows(args.iters)
+        rows = (
+            sharded_leg_rows(args.iters)
+            + probe_parallel_rows(args.iters)
+            + sharded_forward_rows(args.iters)
+        )
         print(_CHILD_MARKER + json.dumps(rows), flush=True)
         return
     widths = tuple(int(w) for w in str(args.widths).split(","))

@@ -3,6 +3,7 @@
 # ZO methods (TeZO family + MeZO/LOZO/SubZO baselines), rank.py the Eq.(7)
 # layer-wise rank selection, zo_step.py the Algorithm-1 train step,
 # dispatch.py the per-leaf Pallas-kernel vs XLA routing (ZOConfig.kernel_mode).
+from repro.core.adaptive import AdaptiveQ
 from repro.core.cpd import (
     CPDFactor,
     dense_noise,

@@ -104,7 +104,7 @@ from repro.core.cpd import (
     reconstruct,
     reconstruct_squared,
 )
-from repro.kernels import ops
+from repro.kernels import fence, ops
 from repro.kernels.zo_noise import MAX_ROWS
 
 KERNEL_MODES = ("auto", "pallas", "xla")
@@ -126,11 +126,27 @@ def add_scaled(w: jax.Array, z: jax.Array, scale, decay=None) -> jax.Array:
     Pallas kernels implement the same f32-accumulate-then-cast contract
     in-kernel.  ``decay`` is the decoupled weight-decay factor 1 − lr·wd on
     update touches (None ≡ 1.0 — skipped, an exact identity).
+
+    Each call runs as its own fence branch (kernels/fence.py): the XLA-path
+    delta is the exact accumulation the fused kernels replace, so its
+    rounding must not depend on how the surrounding schedule groups deltas —
+    the chained/unchained and probe-parallel/sequential contracts compare
+    XLA trajectories too.
     """
     wf = w.astype(jnp.float32)
-    if decay is not None:
-        wf = wf * decay
-    return (wf + scale * z.astype(jnp.float32)).astype(w.dtype)
+    zf = z.astype(jnp.float32)
+    zero = fence.data_zero(wf)
+    sc = jnp.asarray(scale, jnp.float32) + zero
+    d = None if decay is None else jnp.asarray(decay, jnp.float32) + zero
+
+    def compute(wf=wf, zf=zf, sc=sc, d=d, zero=zero):
+        acc = wf if d is None else wf * d
+        # + zero keeps the branch from FMA-contracting acc + sc·z: per-op
+        # rounding, same as the eager arithmetic the tolerance-parity tests
+        # compare the kernels against
+        return (acc + (sc * zf + zero)).astype(w.dtype)
+
+    return fence.fenced(zero, compute, lambda wf=wf: wf.astype(w.dtype))
 
 
 def resolve_kernel_mode(mode: str) -> str:
@@ -378,6 +394,43 @@ def perturb_pair_leaf(
     return add_scaled(w, reconstruct(factor, tau_b), scale_b)
 
 
+def _chain_restores(restore_x, restore_scale):
+    """Normalize a restore operand to (values list, scales list) — a
+    list/tuple is a multi-delta restore chain (the probe-parallel
+    trajectory restore), anything else a one-delta chain (the sequential
+    restore-into-update)."""
+    if isinstance(restore_x, (list, tuple)):
+        return list(restore_x), list(restore_scale)
+    return [restore_x], [restore_scale]
+
+
+def perturb_chain_leaf(
+    w: jax.Array,
+    factor: CPDFactor,
+    taus,
+    scales,
+    *,
+    use_kernel: bool,
+    path: str = "",
+) -> jax.Array:
+    """Arbitrary-k transition chain for one TeZO leaf: scalesᵢ·recon(τᵢ)
+    applied in chain order — the probe-parallel catch-up (replay probes
+    0..s−1's ±ρ triples, then open probe s) in ONE fused pass.
+
+    Kernel path: the stacked-τ chain kernel rounds to the weight dtype
+    between deltas, bitwise identical to k single ``perturb_leaf`` passes.
+    XLA path: the same k dense adds.
+    """
+    if use_kernel and kernel_eligible(factor, w):
+        scale_arr = jnp.stack([_scalar_f32(s) for s in scales])
+        return _tezo_kernel_call(
+            w, factor, jnp.stack(list(taus), axis=-2), scale_arr, None, path
+        )
+    for tau, s in zip(taus, scales):
+        w = add_scaled(w, reconstruct(factor, tau), s)
+    return w
+
+
 def sgd_update_leaf(
     w: jax.Array,
     factor: CPDFactor,
@@ -402,17 +455,32 @@ def sgd_update_leaf(
     prepend the last probe's +ρ·recon(τ_q) restore to the same pass: the
     kernel path runs the two-delta τ chain (restore, then decayed update —
     bitwise identical to the separate restore pass), the XLA path composes
-    the same two dense adds.
+    the same two dense adds.  A list/tuple ``restore_tau`` (with matching
+    scales) is a multi-delta restore chain — the probe-parallel trajectory
+    restore — applied delta by delta before the update in the same pass.
     """
     if use_kernel and kernel_eligible(factor, w):
         if restore_tau is not None:
-            scales = jnp.stack([_scalar_f32(restore_scale), -_scalar_f32(lr)])
-            return _tezo_kernel_call(
-                w, factor, _stack_taus(restore_tau, ktau), scales, decay, path
-            )
+            if isinstance(restore_tau, (list, tuple)):
+                scales = jnp.stack(
+                    [_scalar_f32(s) for s in restore_scale]
+                    + [-_scalar_f32(lr)]
+                )
+                taus = jnp.concatenate(
+                    [jnp.stack(list(restore_tau), axis=-2),
+                     ktau[..., None, :]],
+                    axis=-2,
+                )
+            else:
+                scales = jnp.stack(
+                    [_scalar_f32(restore_scale), -_scalar_f32(lr)]
+                )
+                taus = _stack_taus(restore_tau, ktau)
+            return _tezo_kernel_call(w, factor, taus, scales, decay, path)
         return _tezo_kernel_call(w, factor, ktau, -lr, decay, path)
     if restore_tau is not None:
-        w = add_scaled(w, reconstruct(factor, restore_tau), restore_scale)
+        for rt, rs in zip(*_chain_restores(restore_tau, restore_scale)):
+            w = add_scaled(w, reconstruct(factor, rt), rs)
     return add_scaled(w, reconstruct(factor, ktau), -lr, decay=decay)
 
 
@@ -442,7 +510,13 @@ def adam_update_leaf(
     if use_kernel and kernel_eligible(factor, w):
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
-        rs_a = _scalar_f32(restore_scale)
+        if isinstance(restore_tau, (list, tuple)):
+            # multi-delta restore chain (probe-parallel trajectory restore):
+            # stack to [..., k, r] — the kernel applies the rows in order
+            rs_a = jnp.stack([_scalar_f32(s) for s in restore_scale])
+            restore_tau = jnp.stack(list(restore_tau), axis=-2)
+        else:
+            rs_a = _scalar_f32(restore_scale)
         if mesh is None:
             return ops.tezo_adam_update(
                 w, factor.u, factor.v, tau_m, tau_v, lr_a, eps, decay=decay,
@@ -475,7 +549,8 @@ def adam_update_leaf(
             lr_a, decay_a, rs_a,
         )
     if restore_tau is not None:
-        w = add_scaled(w, reconstruct(factor, restore_tau), restore_scale)
+        for rt, rs in zip(*_chain_restores(restore_tau, restore_scale)):
+            w = add_scaled(w, reconstruct(factor, rt), rs)
     m_full = reconstruct(factor, tau_m).astype(jnp.float32)
     v_full = reconstruct_squared(factor, tau_v).astype(jnp.float32)
     return add_scaled(w, m_full * jax.lax.rsqrt(v_full + eps), -lr, decay=decay)
@@ -493,10 +568,10 @@ def _noise_probe_mean(w, key_t, path: str, kappas) -> jax.Array:
     of ``cpd.dense_noise``), matching the perturb pass exactly.
     """
     q = kappas.shape[0]
-    acc = jnp.zeros(w.shape, jnp.float32)
-    for i in range(q):
-        acc = acc + kappas[i] * dense_noise(w, key_t, path, i).astype(jnp.float32)
-    return acc / q
+    zs = [
+        dense_noise(w, key_t, path, i).astype(jnp.float32) for i in range(q)
+    ]
+    return fence.kappa_fold(kappas, zs)
 
 
 def _decayed(w: jax.Array, decay) -> jax.Array:
@@ -572,14 +647,58 @@ def noise_perturb_pair_leaf(
     return add_scaled(w, dense_noise(w, key_t, path, probe_b), scale_b)
 
 
+def noise_perturb_chain_leaf(
+    w: jax.Array, key_t, path: str, probes, scales, *, use_kernel: bool
+) -> jax.Array:
+    """Arbitrary-k transition chain for one dense-noise leaf: scalesᵢ·z_pᵢ
+    applied in chain order — the probe-parallel catch-up chain.  Kernel
+    path: the multi-draw kernel generates every probe's z in the same tile
+    visit (one W round-trip), bitwise identical to k ``noise_perturb_leaf``
+    passes; global-coordinate seeding keeps it mesh-layout-invariant.  XLA
+    path: the same k dense adds."""
+    probes_t = tuple(probes)
+    if use_kernel and noise_kernel_eligible(w):
+        seed = ops.leaf_seed(key_t, path)
+        mesh, spec = _leaf_mesh_spec(path, w.ndim)
+        scale_arr = jnp.stack([_scalar_f32(s) for s in scales])
+        if mesh is None:
+            return ops.noise_perturb(w, seed, scale_arr, probe=probes_t)
+
+        def local_fn(w_l, seed_l, s_l):
+            offs = _global_offsets(mesh, spec, w_l.shape)
+            return ops.noise_perturb(
+                w_l, seed_l, s_l, probe=probes_t, offsets=offs
+            )
+
+        return _shard_call(
+            local_fn, mesh, (spec, P(), P()), spec, w, seed, scale_arr
+        )
+    for p, s in zip(probes_t, scales):
+        w = add_scaled(w, dense_noise(w, key_t, path, p), s)
+    return w
+
+
 def _noise_restored(w, key_t, path: str, restore_probe, restore_scale):
-    """XLA-path restore-into-update prologue: the +ρ·z add of the last
-    probe, identical to the separate restore pass it replaces."""
+    """XLA-path restore-into-update prologue: the +ρ·z add(s) of the
+    restore probe (or, for a tuple, the whole restore chain in order),
+    identical to the separate restore pass(es) replaced."""
     if restore_probe is None:
         return w
-    return add_scaled(
-        w, dense_noise(w, key_t, path, restore_probe), restore_scale
-    )
+    for p, s in zip(*_chain_restores(restore_probe, restore_scale)):
+        w = add_scaled(w, dense_noise(w, key_t, path, p), s)
+    return w
+
+
+def _restore_statics(restore_probe, restore_scale):
+    """(jit-static probe operand, f32 scale operand) for the fused noise
+    updates: a list/tuple restore chain normalizes to (tuple, [k] array),
+    a single restore to (int, scalar) — the kernels index hyp[5+i] per
+    chain delta."""
+    if isinstance(restore_probe, (list, tuple)):
+        return tuple(restore_probe), jnp.stack(
+            [_scalar_f32(s) for s in restore_scale]
+        )
+    return restore_probe, _scalar_f32(restore_scale)
 
 
 def noise_sgd_update_leaf(
@@ -595,7 +714,7 @@ def noise_sgd_update_leaf(
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
-        rs_a = _scalar_f32(restore_scale)
+        restore_probe, rs_a = _restore_statics(restore_probe, restore_scale)
         if mesh is None:
             return ops.noise_update_sgd(
                 w, seed, kappas, lr_a, decay=decay,
@@ -633,7 +752,7 @@ def noise_momentum_update_leaf(
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
-        rs_a = _scalar_f32(restore_scale)
+        restore_probe, rs_a = _restore_statics(restore_probe, restore_scale)
         if mesh is None:
             return ops.noise_update_momentum(
                 w, m_buf, seed, kappas, lr_a, beta1, decay=decay,
@@ -671,7 +790,7 @@ def noise_adam_update_leaf(
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
-        rs_a = _scalar_f32(restore_scale)
+        restore_probe, rs_a = _restore_statics(restore_probe, restore_scale)
         if mesh is None:
             return ops.noise_update_adam(
                 w, m_buf, v_buf, seed, kappas, lr_a, beta1, beta2, eps,
@@ -749,6 +868,43 @@ def _lozo_chain_call(w, u, v_a, v_b, scale_a, scale_b, decay, path: str):
     )
 
 
+def _lozo_chain_k_call(w, u, vs, scales, decay, path: str):
+    """k LOZO deltas (shared lazy U, k fresh V factors) in one fused pass —
+    the arbitrary-k twin of ``_lozo_chain_call`` for the probe-parallel
+    catch-up and trajectory-restore chains."""
+    mesh, spec = _leaf_mesh_spec(path, w.ndim)
+    scale_ops = [_scalar_f32(s) for s in scales]
+    if mesh is None:
+        return ops.lozo_chain_k(w, u, list(vs), scale_ops, decay=decay)
+    decay_a = _decay_f32(decay)
+    u_s, v_s, _ = _factor_specs(spec)
+    k = len(vs)
+
+    def local_fn(w_l, u_l, *rest):
+        return ops.lozo_chain_k(
+            w_l, u_l, list(rest[:k]), list(rest[k : 2 * k]), decay=rest[-1]
+        )
+
+    return _shard_call(
+        local_fn, mesh,
+        (spec, u_s) + (v_s,) * k + (P(),) * (k + 1), spec,
+        w, u, *vs, *scale_ops, decay_a,
+    )
+
+
+def lozo_perturb_chain_leaf(
+    w: jax.Array, u, vs, scales, *, use_kernel: bool, path: str = ""
+) -> jax.Array:
+    """Arbitrary-k transition chain for one LOZO leaf: scalesᵢ·U·Vᵢᵀ in
+    chain order (the probe-parallel catch-up), one fused pass on the kernel
+    path — bitwise identical to k ``lozo_perturb_leaf`` passes."""
+    if use_kernel and w.ndim >= 2:
+        return _lozo_chain_k_call(w, u, vs, scales, None, path)
+    for v_i, s in zip(vs, scales):
+        w = add_scaled(w, jnp.einsum("...mr,...nr->...mn", u, v_i), s)
+    return w
+
+
 def lozo_perturb_pair_leaf(
     w: jax.Array, u, v_a, v_b, scale_a, scale_b, *, use_kernel: bool,
     path: str = "",
@@ -771,15 +927,23 @@ def lozo_update_leaf(
     [n, r] factor, so the update is one fused rank-r pass.
 
     ``restore_v`` + ``restore_scale`` fold the chained +ρ·U·V_qᵀ restore of
-    the last probe into the same pass (the V-factor twin of the τ-chain)."""
+    the last probe into the same pass (the V-factor twin of the τ-chain);
+    a list/tuple ``restore_v`` is the multi-delta probe-parallel trajectory
+    restore, applied in order before the update delta."""
     if restore_v is not None:
         if use_kernel and w.ndim >= 2:
+            if isinstance(restore_v, (list, tuple)):
+                return _lozo_chain_k_call(
+                    w, u, list(restore_v) + [kv],
+                    list(restore_scale) + [-_scalar_f32(lr)], decay, path,
+                )
             return _lozo_chain_call(
                 w, u, restore_v, kv, restore_scale, -lr, decay, path
             )
-        w = add_scaled(
-            w, jnp.einsum("...mr,...nr->...mn", u, restore_v), restore_scale
-        )
+        for rv, rs in zip(*_chain_restores(restore_v, restore_scale)):
+            w = add_scaled(
+                w, jnp.einsum("...mr,...nr->...mn", u, rv), rs
+            )
         return add_scaled(
             w, jnp.einsum("...mr,...nr->...mn", u, kv), -lr, decay=decay
         )
@@ -841,6 +1005,26 @@ def subzo_perturb_pair_leaf(
     )
 
 
+def subzo_perturb_chain_leaf(
+    w: jax.Array, u, v, sigmas, scales, *, use_kernel: bool, path: str = ""
+) -> jax.Array:
+    """Arbitrary-k transition chain for one SubZO leaf: scalesᵢ·U·Σᵢ·Vᵀ in
+    chain order (U, V window-lazy, shared — the probe-parallel catch-up),
+    one fused pass on the kernel path; bitwise identical to k
+    ``subzo_perturb_leaf`` passes."""
+    if use_kernel and w.ndim >= 2:
+        scale_arr = jnp.stack([_scalar_f32(s) for s in scales])
+        return subzo_perturb_leaf(
+            w, u, v, jnp.stack(list(sigmas), axis=-3), scale_arr,
+            use_kernel=True, path=path,
+        )
+    for sig, s in zip(sigmas, scales):
+        w = add_scaled(
+            w, jnp.einsum("...mr,...rk,...nk->...mn", u, sig, v), s
+        )
+    return w
+
+
 def subzo_update_leaf(
     w: jax.Array, u, v, sbar, lr, *, use_kernel: bool, decay=None,
     path: str = "", restore_sigma=None, restore_scale=0.0,
@@ -850,18 +1034,32 @@ def subzo_update_leaf(
 
     ``restore_sigma`` + ``restore_scale`` fold the chained +ρ·U·Σ_q·Vᵀ
     restore into the same pass (a two-core Σ chain; decay hits the update
-    delta only)."""
+    delta only); a list/tuple ``restore_sigma`` is the multi-delta
+    probe-parallel trajectory restore, applied in order."""
     if restore_sigma is not None:
         if use_kernel and w.ndim >= 2:
-            scales = jnp.stack([_scalar_f32(restore_scale), -_scalar_f32(lr)])
+            if isinstance(restore_sigma, (list, tuple)):
+                scales = jnp.stack(
+                    [_scalar_f32(s) for s in restore_scale]
+                    + [-_scalar_f32(lr)]
+                )
+                sig_chain = jnp.stack(
+                    list(restore_sigma) + [sbar], axis=-3
+                )
+            else:
+                scales = jnp.stack(
+                    [_scalar_f32(restore_scale), -_scalar_f32(lr)]
+                )
+                sig_chain = _stack_sigmas(restore_sigma, sbar)
             return subzo_perturb_leaf(
-                w, u, v, _stack_sigmas(restore_sigma, sbar), scales,
+                w, u, v, sig_chain, scales,
                 use_kernel=True, decay=decay, path=path,
             )
-        w = add_scaled(
-            w, jnp.einsum("...mr,...rk,...nk->...mn", u, restore_sigma, v),
-            restore_scale,
-        )
+        for rs_sig, rs_sc in zip(*_chain_restores(restore_sigma, restore_scale)):
+            w = add_scaled(
+                w, jnp.einsum("...mr,...rk,...nk->...mn", u, rs_sig, v),
+                rs_sc,
+            )
         return add_scaled(
             w, jnp.einsum("...mr,...rk,...nk->...mn", u, sbar, v), -lr,
             decay=decay,

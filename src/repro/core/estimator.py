@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.kernels import fence
 from repro.core.cpd import (
     CPDFactor,
     init_factors,
@@ -93,6 +94,15 @@ class ZOConfig:
     restore_mode: str = "inplace"  # inplace (chained, 2q+1 passes, 1× mem) |
     #                                unchained (literal Alg.1, 3q+1 passes) |
     #                                exact (branch off originals, 2× mem)
+    probe_parallel: bool = False   # shard the q probes over the mesh's data
+    #                                axis — D replicas each run a disjoint
+    #                                probe block concurrently and psum q
+    #                                scalar loss pairs (core.zo_step);
+    #                                requires restore_mode == "inplace" and a
+    #                                mesh with a "data" axis
+    adaptive_q: bool = False       # AdaZeta-style host-level q growth gated
+    #                                on the κ-variance estimate (core.adaptive)
+    q_max: int = 16                # adaptive-q growth cap
     factor_dtype: Any = jnp.float32
     lr_schedule: str = "const"     # const | cosine | linear_warmup_cosine
     warmup_steps: int = 0
@@ -175,10 +185,25 @@ class ZOMethod:
         p = self.perturb(params, mstate, key_t, probe_a, scale_a, cfg, step)
         return self.perturb(p, mstate, key_t, probe_b, scale_b, cfg, step)
 
+    def perturb_chain(self, params: Any, mstate: dict, key_t: jax.Array,
+                      probes: tuple, scales: tuple, cfg: ZOConfig,
+                      step: jax.Array) -> Any:
+        """Arbitrary-k transition chain: apply scalesᵢ·Z_{probesᵢ} in order —
+        the probe-parallel catch-up (a replica starting its block at probe s
+        replays probes 0..s−1's ±ρ triples and opens probe s in one pass).
+        Default = k chained single-probe passes (correct fallback; family
+        overrides fuse the chain into one HBM round-trip per leaf)."""
+        for p, s in zip(probes, scales):
+            params = self.perturb(params, mstate, key_t, p, s, cfg, step)
+        return params
+
     def update(self, params: Any, mstate: dict, key_t: jax.Array,
                kappas: jax.Array, lr: jax.Array, cfg: ZOConfig,
-               step: jax.Array, restore_probe: Optional[int] = None,
-               restore_scale: float = 0.0) -> tuple[Any, dict]:
+               step: jax.Array, restore_probe=None,
+               restore_scale=0.0) -> tuple[Any, dict]:
+        """``restore_probe`` may be a single probe id (the sequential chained
+        restore-into-update) or a tuple restore chain with matching
+        ``restore_scale`` sequence (the probe-parallel trajectory restore)."""
         raise NotImplementedError
 
 
@@ -239,17 +264,37 @@ class TeZO(ZOMethod):
 
         return map_with_path(f, params)
 
+    def perturb_chain(self, params, mstate, key_t, probes, scales, cfg, step):
+        factors = mstate["factors"]
+        use_kernel = dispatch.use_pallas(cfg)
+        probes, scales = tuple(probes), tuple(scales)
+
+        def f(path, w):
+            if path in factors:
+                taus = [
+                    sample_tau(factors[path], key_t, path, p) for p in probes
+                ]
+                return dispatch.perturb_chain_leaf(
+                    w, factors[path], taus, scales,
+                    use_kernel=use_kernel, path=path,
+                )
+            return dispatch.noise_perturb_chain_leaf(
+                w, key_t, path, probes, scales, use_kernel=use_kernel
+            )
+
+        return map_with_path(f, params)
+
     def _probe_mean_ktau(self, factor: CPDFactor, path: str, key_t, kappas):
         """mean_i κ_i τ_i — an r-vector; the whole gradient signal of a leaf."""
         q = kappas.shape[0]
-        acc = kappas[0] * sample_tau(factor, key_t, path, 0)
-        for i in range(1, q):
-            acc = acc + kappas[i] * sample_tau(factor, key_t, path, i)
-        return acc / q
+        taus = [sample_tau(factor, key_t, path, i) for i in range(q)]
+        return fence.kappa_fold(kappas, taus)
 
     def _restore_tau(self, factor, path, key_t, restore_probe):
         if restore_probe is None:
             return None
+        if isinstance(restore_probe, tuple):
+            return [sample_tau(factor, key_t, path, p) for p in restore_probe]
         return sample_tau(factor, key_t, path, restore_probe)
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step,
@@ -361,12 +406,8 @@ class TeZOAdam(TeZOMomentum):
 
     def _probe_mean_k2tau2(self, factor, path, key_t, kappas):
         q = kappas.shape[0]
-        t0 = sample_tau(factor, key_t, path, 0)
-        acc = (kappas[0] ** 2) * (t0 * t0)
-        for i in range(1, q):
-            ti = sample_tau(factor, key_t, path, i)
-            acc = acc + (kappas[i] ** 2) * (ti * ti)
-        return acc / q
+        taus = [sample_tau(factor, key_t, path, i) for i in range(q)]
+        return fence.kappa_fold(kappas, taus, square=True)
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step,
                restore_probe=None, restore_scale=0.0):
@@ -441,6 +482,17 @@ class MeZO(ZOMethod):
             return dispatch.noise_perturb_pair_leaf(
                 w, key_t, path, probe_a, scale_a, probe_b, scale_b,
                 use_kernel=use_kernel,
+            )
+
+        return map_with_path(f, params)
+
+    def perturb_chain(self, params, mstate, key_t, probes, scales, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+        probes, scales = tuple(probes), tuple(scales)
+
+        def f(path, w):
+            return dispatch.noise_perturb_chain_leaf(
+                w, key_t, path, probes, scales, use_kernel=use_kernel
             )
 
         return map_with_path(f, params)
@@ -600,19 +652,36 @@ class LOZO(ZOMethod):
 
         return map_with_path(f, params)
 
+    def perturb_chain(self, params, mstate, key_t, probes, scales, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+        probes, scales = tuple(probes), tuple(scales)
+
+        def f(path, w):
+            if is_lowrank_leaf(path, w):
+                u, r = self._lazy_u(path, w, mstate, key_t, cfg, step)
+                vs = [_lozo_v(w, key_t, path, p, r) for p in probes]
+                return dispatch.lozo_perturb_chain_leaf(
+                    w, u, vs, scales, use_kernel=use_kernel, path=path
+                )
+            return dispatch.noise_perturb_chain_leaf(
+                w, key_t, path, probes, scales, use_kernel=use_kernel
+            )
+
+        return map_with_path(f, params)
+
     def _probe_mean_kv(self, path, w, key_t, kappas, r):
         """mean_i κ_i V_i — [n, r]: U is window-lazy (probe-independent), so
         the probe mean collapses onto the fresh factor before any dense
         reconstruction."""
         q = kappas.shape[0]
-        acc = kappas[0] * _lozo_v(w, key_t, path, 0, r)
-        for i in range(1, q):
-            acc = acc + kappas[i] * _lozo_v(w, key_t, path, i, r)
-        return acc / q
+        vs = [_lozo_v(w, key_t, path, i, r) for i in range(q)]
+        return fence.kappa_fold(kappas, vs)
 
     def _restore_v(self, path, w, key_t, restore_probe, r):
         if restore_probe is None:
             return None
+        if isinstance(restore_probe, tuple):
+            return [_lozo_v(w, key_t, path, p, r) for p in restore_probe]
         return _lozo_v(w, key_t, path, restore_probe, r)
 
     def update(self, params, mstate, key_t, kappas, lr, cfg, step,
@@ -762,10 +831,8 @@ class SubZO(ZOMethod):
         """mean_i κ_i Σ_i — the whole probe ensemble collapsed onto the tiny
         [r, r] core (U, V are window-lazy, probe-independent)."""
         q = kappas.shape[0]
-        acc = kappas[0] * self._sigma(path, key_t, 0, r, batch)
-        for i in range(1, q):
-            acc = acc + kappas[i] * self._sigma(path, key_t, i, r, batch)
-        return acc / q
+        sigmas = [self._sigma(path, key_t, i, r, batch) for i in range(q)]
+        return fence.kappa_fold(kappas, sigmas)
 
     def perturb(self, params, mstate, key_t, probe, scale, cfg, step):
         use_kernel = dispatch.use_pallas(cfg)
@@ -804,6 +871,33 @@ class SubZO(ZOMethod):
 
         return map_with_path(f, params)
 
+    def perturb_chain(self, params, mstate, key_t, probes, scales, cfg, step):
+        use_kernel = dispatch.use_pallas(cfg)
+        probes, scales = tuple(probes), tuple(scales)
+
+        def f(path, w):
+            if path in mstate["U"]:
+                u, v = mstate["U"][path], mstate["V"][path]
+                r, batch = u.shape[-1], u.shape[:-2]
+                sigs = [self._sigma(path, key_t, p, r, batch) for p in probes]
+                return dispatch.subzo_perturb_chain_leaf(
+                    w, u, v, sigs, scales, use_kernel=use_kernel, path=path
+                )
+            return dispatch.noise_perturb_chain_leaf(
+                w, key_t, path, probes, scales, use_kernel=use_kernel
+            )
+
+        return map_with_path(f, params)
+
+    def _restore_sigma(self, path, key_t, restore_probe, r, batch):
+        if restore_probe is None:
+            return None
+        if isinstance(restore_probe, tuple):
+            return [
+                self._sigma(path, key_t, p, r, batch) for p in restore_probe
+            ]
+        return self._sigma(path, key_t, restore_probe, r, batch)
+
     def update(self, params, mstate, key_t, kappas, lr, cfg, step,
                restore_probe=None, restore_scale=0.0):
         use_kernel = dispatch.use_pallas(cfg)
@@ -814,9 +908,8 @@ class SubZO(ZOMethod):
                 u, v = mstate["U"][path], mstate["V"][path]
                 r, batch = u.shape[-1], u.shape[:-2]
                 sbar = self._probe_mean_sigma(path, key_t, kappas, r, batch)
-                restore_sigma = (
-                    None if restore_probe is None
-                    else self._sigma(path, key_t, restore_probe, r, batch)
+                restore_sigma = self._restore_sigma(
+                    path, key_t, restore_probe, r, batch
                 )
                 return dispatch.subzo_update_leaf(
                     w, u, v, sbar, lr, use_kernel=use_kernel, decay=decay,

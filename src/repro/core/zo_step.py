@@ -45,6 +45,32 @@ visit — bitwise the same draws, not merely the same distribution).
 benchmarks' bytes-moved model, the dry-run record, and the kernel-invocation
 spy test all consume it.
 
+**Probe-parallel schedule** (``cfg.probe_parallel``, requires
+``restore_mode == "inplace"`` and a mesh with a "data" axis): the D
+replicas on the data axis each evaluate a disjoint *contiguous block* of
+the q probes concurrently instead of walking all q sequentially.  A probe's
+only contribution to the update is the scalar pair (f₊, f₋) — and Z is
+reconstructible from (leaf key, probe, global coordinates) under the PRNG
+contract — so lane d starting its block at probe s first replays probes
+0..s−1's ±ρ triples as ONE fused catch-up chain (``ZOMethod.
+perturb_chain``: 3s+1 deltas, one HBM pass), then runs its block's
+bridge/flip transitions exactly like the sequential chain.  The step
+``psum``s a probe-indexed [q, 2] loss matrix over the data axis (each entry
+written by exactly one lane, so the fixed probe-indexed reduction order is
+exact — zeros add bitwise-neutrally), rebuilds κ in probe order, and runs
+ONE fused update pass on the *original* params whose restore operand
+replays the whole 3q-delta trajectory ((i,+ρ),(i,−2ρ),(i,+ρ) for i=0..q−1).
+Because every delta round-trips through the weight dtype exactly as its own
+pass would, regrouping the same delta sequence into different passes is
+bitwise-invariant — the probe-parallel step matches the sequential chained
+step bit for bit (locked by tests/test_sharded_dispatch.py).
+
+Per-replica pass count: ``zo_pass_count(q, "inplace", probe_lanes=D)`` =
+``2·ceil(q/D) + 1`` (catch-up/first-perturb + per-probe flip and bridge +
+the shared trajectory-restore update) vs ``2q + 1`` sequential — on D=q
+replicas that is 3 passes per replica plus one scalar all-reduce of 2q
+floats.
+
 q-SPSA: with cfg.q_probes = q > 1 the step runs q independent ±probes and the
 optimizer consumes the κ vector — for TeZO this collapses to the r-vector
 mean_i κᵢτᵢ per leaf, i.e. ensemble variance reduction at zero memory.
@@ -87,18 +113,38 @@ from repro.core.estimator import ZOConfig, get_method
 RESTORE_MODES = ("inplace", "unchained", "exact")
 
 
-def zo_pass_count(q_probes: int, restore_mode: str = "inplace") -> int:
+def zo_pass_count(
+    q_probes: int, restore_mode: str = "inplace",
+    probe_lanes: Optional[int] = None,
+) -> int:
     """Full-parameter HBM passes per ZO step (perturb/flip/bridge/update).
 
     The single source of truth the benchmarks' bytes-moved model, the
     dry-run/train records, and the kernel-invocation spy test share:
     chained "inplace" and branching "exact" make ``2q + 1`` passes,
     the literal Algorithm-1 "unchained" schedule ``3q + 1``.
+
+    With ``probe_lanes`` = D (the probe-parallel schedule: q probes sharded
+    over D data-axis replicas) the count is the *per-replica* passes of the
+    busiest lane — ``2·ceil(q/D) + 1``: the catch-up chain (or first
+    perturb) is one pass, each of the lane's ≤ ceil(q/D) probes costs a
+    flip plus (after the first) a bridge, and the trajectory-restore update
+    is one shared pass.  Probe-parallel composes only with the "inplace"
+    chained schedule.
     """
     if restore_mode not in RESTORE_MODES:
         raise ValueError(
             f"unknown restore_mode {restore_mode!r}; expected one of {RESTORE_MODES}"
         )
+    if probe_lanes is not None:
+        if restore_mode != "inplace":
+            raise ValueError(
+                "probe-parallel pass counting requires restore_mode='inplace' "
+                f"(got {restore_mode!r})"
+            )
+        if probe_lanes < 1:
+            raise ValueError(f"probe_lanes must be >= 1, got {probe_lanes}")
+        return 2 * -(-q_probes // probe_lanes) + 1
     if restore_mode == "unchained":
         return 3 * q_probes + 1
     return 2 * q_probes + 1
@@ -152,6 +198,10 @@ def build_zo_train_step(
     method = get_method(cfg.method)
     resolve_kernel_mode(cfg.kernel_mode)  # fail fast on unknown modes
     zo_pass_count(cfg.q_probes, cfg.restore_mode)  # …and unknown schedules
+    if cfg.probe_parallel:
+        return _build_probe_parallel_step(
+            loss_fn, cfg, method, mesh=mesh, param_specs=param_specs
+        )
 
     def step_fn(state: ZOTrainState, batch: Any) -> tuple[ZOTrainState, dict]:
         with dispatch.shard_context(mesh, param_specs):
@@ -220,11 +270,180 @@ def build_zo_train_step(
         metrics = {
             "loss": (f_plus_acc + f_minus_acc) / (2.0 * q),
             "kappa_abs": jnp.mean(jnp.abs(kappa_vec)),
+            # κ dispersion across the probe ensemble — the adaptive-q
+            # controller's signal (core.adaptive); cheap (q scalars)
+            "kappa_var": jnp.var(kappa_vec),
             "lr": lr,
             # static per config, surfaced so step records are self-describing
             "zo_passes": jnp.asarray(
                 zo_pass_count(cfg.q_probes, cfg.restore_mode), jnp.int32
             ),
+        }
+        return new_state, metrics
+
+    return step_fn
+
+
+def _build_probe_parallel_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    cfg: ZOConfig,
+    method,
+    *,
+    mesh=None,
+    param_specs: Optional[Mapping[str, Any]] = None,
+) -> Callable[[ZOTrainState, Any], tuple[ZOTrainState, dict]]:
+    """The probe-parallel transition schedule (see module docstring).
+
+    Probe phase: one full-manual shard_map over the whole mesh — every
+    device holds the full replicated (params, batch, mstate) view, takes the
+    branch of its data-axis lane (static probe block via ``lax.switch``),
+    and contributes its block's (f₊, f₋) rows to a probe-indexed [q, 2]
+    matrix that one ``psum`` over the data axis completes.  The dispatch
+    shard context is cleared inside the manual region (the leaf ops run
+    their plain unsharded lowerings on the full view — a nested shard_map
+    cannot partition further).  Update phase: back under the outer shard
+    context, one fused shard-aware update pass on the ORIGINAL params whose
+    restore operand replays the whole 3q-delta trajectory.
+    """
+    if cfg.restore_mode != "inplace":
+        raise ValueError(
+            "probe_parallel requires restore_mode='inplace' (the chained "
+            f"schedule); got restore_mode={cfg.restore_mode!r}"
+        )
+    if mesh is None or "data" not in mesh.axis_names:
+        raise ValueError(
+            "probe_parallel requires a mesh with a 'data' axis (got "
+            f"{None if mesh is None else mesh.axis_names})"
+        )
+    from repro.distributed.collectives import probe_assignment
+    from repro.distributed.context import compat_shard_map
+    from jax.sharding import PartitionSpec as P
+
+    lanes = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    starts, counts = probe_assignment(cfg.q_probes, lanes)
+    per_replica_passes = zo_pass_count(
+        cfg.q_probes, cfg.restore_mode, probe_lanes=lanes
+    )
+    q = cfg.q_probes
+    rho = cfg.rho
+
+    def step_fn(state: ZOTrainState, batch: Any) -> tuple[ZOTrainState, dict]:
+        with dispatch.shard_context(mesh, param_specs):
+            key_t = jax.random.fold_in(state.base_key, state.step)
+            mstate = method.begin_step(state.mstate, key_t, state.step, cfg)
+            lr = cfg.schedule(state.step)
+
+            def lane_body(params_r, batch_r, mstate_r, key_r, step_r):
+                # the manual region: full replicated views, plain unsharded
+                # leaf-op lowerings (shard context cleared for the duration)
+                with dispatch.shard_context(None, None):
+                    lane = jax.lax.axis_index("data")
+
+                    def branch(d):
+                        start, count = starts[d], counts[d]
+
+                        def run(_):
+                            out = jnp.zeros((q, 2), jnp.float32)
+                            if count == 0:
+                                # more lanes than probes: idle contributor
+                                return out
+                            if start == 0:
+                                p = method.perturb(
+                                    params_r, mstate_r, key_r, 0, +rho,
+                                    cfg, step_r,
+                                )
+                            else:
+                                # catch-up: replay probes 0..start−1's ±ρ
+                                # triples and open probe `start`, one pass
+                                chain_p = tuple(
+                                    j for i in range(start) for j in (i, i, i)
+                                ) + (start,)
+                                chain_s = tuple(
+                                    s for _ in range(start)
+                                    for s in (+rho, -2.0 * rho, +rho)
+                                ) + (+rho,)
+                                p = method.perturb_chain(
+                                    params_r, mstate_r, key_r,
+                                    chain_p, chain_s, cfg, step_r,
+                                )
+                            for j in range(count):
+                                probe = start + j
+                                if j > 0:
+                                    p = method.perturb_pair(
+                                        p, mstate_r, key_r,
+                                        probe - 1, +rho, probe, +rho,
+                                        cfg, step_r,
+                                    )
+                                f_plus = loss_fn(p, batch_r)
+                                p = method.perturb(
+                                    p, mstate_r, key_r, probe, -2.0 * rho,
+                                    cfg, step_r,
+                                )
+                                f_minus = loss_fn(p, batch_r)
+                                out = out.at[probe, 0].set(
+                                    f_plus.astype(jnp.float32)
+                                )
+                                out = out.at[probe, 1].set(
+                                    f_minus.astype(jnp.float32)
+                                )
+                            return out
+
+                        return run
+
+                    contrib = jax.lax.switch(
+                        lane, [branch(d) for d in range(lanes)], 0
+                    )
+                    # each [probe, ±] entry has exactly one nonzero writer
+                    # (disjoint blocks), so this fixed probe-indexed psum is
+                    # exact — the other lanes contribute bitwise-neutral 0s
+                    return jax.lax.psum(contrib, "data")
+
+            f_mat = compat_shard_map(
+                lane_body, mesh,
+                in_specs=(P(), P(), P(), P(), P()),
+                out_specs=P(),
+            )(state.params, batch, mstate, key_t, state.step)
+
+            # κ and the loss accumulators rebuilt in probe-index order with
+            # the sequential schedule's exact op sequence (left folds from
+            # f32 zero) — bitwise-identical metrics
+            kappas = []
+            f_plus_acc = jnp.zeros((), jnp.float32)
+            f_minus_acc = jnp.zeros((), jnp.float32)
+            for i in range(q):
+                f_plus, f_minus = f_mat[i, 0], f_mat[i, 1]
+                kappas.append((f_plus - f_minus) / (2.0 * rho))
+                f_plus_acc = f_plus_acc + f_plus
+                f_minus_acc = f_minus_acc + f_minus
+            kappa_vec = jnp.stack(kappas).astype(jnp.float32)
+
+            # ONE fused update pass on the ORIGINAL params: the restore
+            # operand replays the full 3q-delta trajectory, each delta
+            # rounding through the weight dtype exactly as its own pass
+            # would — bitwise identical to the sequential chained update
+            restore_probes = tuple(i for i in range(q) for _ in range(3))
+            restore_scales = tuple(
+                s for _ in range(q) for s in (+rho, -2.0 * rho, +rho)
+            )
+            params, mstate = method.update(
+                state.params, mstate, key_t, kappa_vec, lr, cfg, state.step,
+                restore_probe=restore_probes, restore_scale=restore_scales,
+            )
+
+        new_state = ZOTrainState(
+            params=params,
+            mstate=mstate,
+            step=state.step + 1,
+            base_key=state.base_key,
+        )
+        metrics = {
+            "loss": (f_plus_acc + f_minus_acc) / (2.0 * float(q)),
+            "kappa_abs": jnp.mean(jnp.abs(kappa_vec)),
+            "kappa_var": jnp.var(kappa_vec),
+            "lr": lr,
+            # per-replica passes of the busiest lane (the walltime model) —
+            # NOT the sequential 2q+1; plus one scalar all-reduce of 2q f32
+            "zo_passes": jnp.asarray(per_replica_passes, jnp.int32),
         }
         return new_state, metrics
 

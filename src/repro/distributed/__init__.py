@@ -5,6 +5,7 @@ from repro.distributed.sharding import (
     mstate_shardings,
     param_shardings,
     param_spec_table,
+    replicated_tree,
     spec_for_axes,
     zo_state_shardings,
 )

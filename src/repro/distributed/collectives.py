@@ -34,6 +34,24 @@ from repro.core.estimator import ZOConfig, get_method
 from repro.core.zo_step import ZOTrainState
 
 
+def probe_assignment(
+    q_probes: int, lanes: int
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Contiguous-block probe-to-lane assignment for the probe-parallel
+    schedule (core.zo_step): lane d evaluates probes
+    [starts[d], starts[d] + counts[d]).  The first ``q_probes % lanes``
+    lanes take one extra probe; surplus lanes get zero.  This rule is part
+    of the standing probe-parallel contract (ROADMAP) — the catch-up chain
+    and the fixed κ reduction order both key off it.
+    """
+    if q_probes < 1 or lanes < 1:
+        raise ValueError((q_probes, lanes))
+    base, extra = divmod(q_probes, lanes)
+    counts = tuple(base + (1 if d < extra else 0) for d in range(lanes))
+    starts = tuple(sum(counts[:d]) for d in range(lanes))
+    return starts, counts
+
+
 def apply_kappa_weights(kappas: jax.Array, weights: jax.Array) -> jax.Array:
     """Masked-mean reweighting: scaled so that the downstream (1/n)Σ of the
     method's multi-probe update equals Σ wᵢκᵢ / Σ wᵢ."""

@@ -104,6 +104,18 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def replicated_tree(mesh: Mesh, abs_tree: Any) -> Any:
+    """Fully-replicated shardings for an arbitrary pytree.
+
+    The probe-parallel train wiring: every data-axis lane evaluates its
+    probe block on the full (params, batch, mstate) view, so the whole
+    ZOTrainState — and the batch — are placed replicated instead of
+    through the logical-axes tables.
+    """
+    rep = replicated(mesh)
+    return jax.tree.map(lambda _: rep, abs_tree)
+
+
 def param_spec_table(shardings: Any) -> dict[str, P]:
     """{leaf path → PartitionSpec} from a NamedSharding tree.
 
@@ -197,7 +209,9 @@ def _fit_batch_axes(mesh: Mesh, dim: int, axes: tuple | None = None):
     sizes = mesh_axis_sizes(mesh)
     out = []
     prod = 1
-    for ax in (axes or batch_axes(mesh)):
+    # NB `axes is None` check, not truthiness: an explicit empty tuple means
+    # "replicate the batch" (probe-parallel wiring), not "use the defaults"
+    for ax in (batch_axes(mesh) if axes is None else axes):
         if dim % (prod * sizes[ax]) == 0:
             out.append(ax)
             prod *= sizes[ax]

@@ -1,0 +1,89 @@
+"""Interpret-mode determinism fence for the bitwise chaining contracts.
+
+The chained-schedule contracts (chained == unchained, probe-parallel ==
+sequential; see core.zo_step) require every perturbation delta to produce
+the same bits no matter how the surrounding program groups the deltas or
+what consumes the result.  Compiled Mosaic kernels get this for free —
+each delta's VMEM store is a real materialization boundary.  Interpret
+mode (the CPU CI path for every bitwise test) does not: the kernel body
+inlines into the caller's jit, and XLA:CPU re-derives fusion splits, FMA
+contraction and constant sinking from the *whole* program, so the same
+delta can round differently by an ulp between two schedules.
+
+``jax.lax.optimization_barrier`` is NOT a fix — XLA:CPU expands it away
+before fusion, verifiably leaving the optimized HLO unchanged.  What does
+hold is a branch computation: ``lax.cond`` branches compile as standalone
+HLO computations, codegenned once, context-free, with the result
+materialized for every consumer.  Three rules make two schedules' branch
+bodies isomorphic (and therefore bit-identical):
+
+* the predicate must be data-dependent (``x*0 == 0`` on a traced array —
+  unfoldable, since x could be NaN), or the conditional is folded away;
+* each delta needs its *own* predicate (derived from its evolving input),
+  or XLA merges adjacent same-predicate conditionals back into one body
+  and the grouping asymmetry returns;
+* every float scalar entering the branch must be laundered through the
+  same ``+ x*0`` term: a schedule that happens to make a scalar a
+  compile-time constant (e.g. the stacked scale vector of a chained
+  call) otherwise gets algebraic simplification inside its branch
+  (1.0·w → w) that a schedule passing it at runtime does not, and the
+  two bodies pick different FMA contractions.
+
+When the predicate is false — only possible if the fence seed element is
+NaN, i.e. the weights are already poisoned — the fallback returns its
+input unchanged, which is as meaningful as anything downstream of NaN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def data_zero(x: jax.Array) -> jax.Array:
+    """A traced scalar 0 of x's dtype that XLA cannot constant-fold.
+
+    ``x.reshape(-1)[0] * 0`` survives simplification because x may be NaN;
+    it seeds both the fence predicate and scalar laundering (``s + zero``).
+    """
+    return x.reshape(-1)[0] * 0
+
+
+def fenced(zero: jax.Array, compute, fallback):
+    """Run ``compute`` inside its own branch computation.
+
+    ``zero`` must come from :func:`data_zero` on the value the delta reads,
+    so the predicate is unfoldable and unique to this delta.  ``compute``
+    and ``fallback`` are nullary closures with matching output pytrees;
+    keep ``fallback`` structurally distinct from ``compute`` (an identity
+    cast is fine) so branch deduplication cannot merge them.
+    """
+    return jax.lax.cond(zero == 0, compute, fallback)
+
+
+def kappa_fold(kappas: jax.Array, terms, *, square: bool = False) -> jax.Array:
+    """mean_i κ_i·term_i (or κ_i²·term_i² with ``square``) as one fence branch.
+
+    The estimator-level probe-mean folds are the one piece of the gradient
+    math that lives *outside* the update kernels, directly in the step
+    program — so the sequential and probe-parallel schedules each fuse and
+    FMA-contract them in their own surrounding context, and the same κ/τ
+    inputs can fold to bits an ulp apart.  Running the fold as a branch
+    computation pins its codegen the same way the kernel fences do; the
+    ``terms`` enter as branch operands (materialized), the κ scalars are
+    laundered per the module rules.
+    """
+    zero = data_zero(kappas)
+
+    def compute():
+        acc = None
+        for i, t in enumerate(terms):
+            k = kappas[i] + zero
+            d = (k * k) * (t * t) if square else k * t
+            # + zero blocks acc+d from contracting to an FMA inside the
+            # branch: per-op rounding, matching the eager/interpret
+            # arithmetic of the kernels this fold feeds
+            d = d + zero
+            acc = d if acc is None else acc + d
+        return acc / len(terms)
+
+    return fenced(zero, compute, lambda: jnp.zeros_like(terms[0]))

@@ -106,6 +106,28 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def _map_leading(fn, *arrays):
+    """vmap ``fn`` over the leading axis — by unrolled loop in interpret mode.
+
+    The interpret-mode kernels pin their per-delta rounding with
+    ``lax.cond`` fence branches (see kernels/fence.py).  Under vmap the
+    fence predicate is batched, and jax lowers a batched cond to
+    execute-both-branches + select — inlining the delta back into the
+    surrounding program and losing exactly the codegen isolation the fence
+    exists for.  Stacked leaves therefore unroll in interpret mode (small,
+    CPU, tests) and keep the batched vmap lowering for Mosaic, where the
+    kernel's VMEM store is a real boundary and vmap just maps the grid.
+    """
+    if not _interpret():
+        return jax.vmap(fn)(*arrays)
+    outs = [fn(*(a[i] for a in arrays)) for i in range(arrays[0].shape[0])]
+    if isinstance(outs[0], tuple):
+        return tuple(
+            jnp.stack([o[j] for o in outs]) for j in range(len(outs[0]))
+        )
+    return jnp.stack(outs)
+
+
 def _pad_rank(u, v, *taus, multiple: int = 128):
     r = u.shape[-1]
     r_pad = _round_up(r, multiple)
@@ -215,7 +237,7 @@ def tezo_perturb(w, u, v, tau, scale, *, decay=None, pad_rank: bool = True):
         fn = functools.partial(
             tezo_perturb, scale=scale, decay=decay, pad_rank=pad_rank
         )
-        return jax.vmap(fn)(w, u, v, tau)
+        return _map_leading(fn, w, u, v, tau)
     if pad_rank and not _interpret():
         u, v, tau = _pad_rank(u, v, tau)
     m, n = w.shape
@@ -240,10 +262,11 @@ def tezo_adam_update(
             restore_scale=restore_scale, pad_rank=pad_rank,
         )
         if tau_r is None:
-            return jax.vmap(fn)(w, u, v, tau_m, tau_v)
-        return jax.vmap(
-            lambda wi, ui, vi, tmi, tvi, tri: fn(wi, ui, vi, tmi, tvi, tau_r=tri)
-        )(w, u, v, tau_m, tau_v, tau_r)
+            return _map_leading(fn, w, u, v, tau_m, tau_v)
+        return _map_leading(
+            lambda wi, ui, vi, tmi, tvi, tri: fn(wi, ui, vi, tmi, tvi, tau_r=tri),
+            w, u, v, tau_m, tau_v, tau_r,
+        )
     if pad_rank and not _interpret():
         if tau_r is None:
             u, v, tau_m, tau_v = _pad_rank(u, v, tau_m, tau_v)
@@ -312,7 +335,7 @@ def noise_perturb(w, seed, scale, *, probe: int = 0, offsets=None):
         lead = w.shape[0]
         off0, rest = _split_offsets(offsets)
         fn = functools.partial(noise_perturb, scale=scale, probe=probe, offsets=rest)
-        return jax.vmap(fn)(w, _batch_seeds(seed, lead, off0))
+        return _map_leading(fn, w, _batch_seeds(seed, lead, off0))
     m, n = w.shape
     assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
     probes = probe if isinstance(probe, tuple) else (probe,)
@@ -354,18 +377,21 @@ def _noise_update(
         seeds = _batch_seeds(seed, lead, off0)
         kw = dict(variant=variant, restore_probe=restore_probe, offsets=rest)
         if variant == "sgd":
-            return jax.vmap(
-                lambda wi, si: _noise_update(wi, si, kappas, hyp, **kw)
-            )(w, seeds)
+            return _map_leading(
+                lambda wi, si: _noise_update(wi, si, kappas, hyp, **kw),
+                w, seeds,
+            )
         if variant == "momentum":
-            return jax.vmap(
-                lambda wi, si, mi: _noise_update(wi, si, kappas, hyp, mi, **kw)
-            )(w, seeds, m_buf)
-        return jax.vmap(
+            return _map_leading(
+                lambda wi, si, mi: _noise_update(wi, si, kappas, hyp, mi, **kw),
+                w, seeds, m_buf,
+            )
+        return _map_leading(
             lambda wi, si, mi, vi: _noise_update(
                 wi, si, kappas, hyp, mi, vi, **kw
-            )
-        )(w, seeds, m_buf, v_buf)
+            ),
+            w, seeds, m_buf, v_buf,
+        )
     m, n = w.shape
     assert m < zo_noise.MAX_ROWS, (m, "row index must fit 24 bits")
     assert kappas.shape[0] < zo_noise.MAX_PROBES
@@ -383,13 +409,22 @@ def _noise_update(
 
 
 def _noise_hyp(lr, beta1=0.0, beta2=0.0, eps=0.0, decay=None, restore_scale=0.0):
-    """[lr, β₁, β₂, ε, decay, restore] f32 scalars for the fused update
-    kernels (restore = the +ρ scale of a chained restore-into-update)."""
-    return jnp.stack([
-        jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
-        jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
-        jnp.asarray(_decay_scalar(decay), jnp.float32),
-        jnp.asarray(restore_scale, jnp.float32),
+    """[lr, β₁, β₂, ε, decay, restore…] f32 scalars for the fused update
+    kernels (restore = the scale(s) of a chained restore-into-update — a
+    single +ρ for the sequential chain, the [3q]-delta trajectory restore
+    for a probe-parallel step)."""
+    rs = jnp.asarray(
+        restore_scale if not isinstance(restore_scale, (list, tuple))
+        else jnp.stack([jnp.asarray(s, jnp.float32) for s in restore_scale]),
+        jnp.float32,
+    ).reshape(-1)
+    return jnp.concatenate([
+        jnp.stack([
+            jnp.asarray(lr, jnp.float32), jnp.asarray(beta1, jnp.float32),
+            jnp.asarray(beta2, jnp.float32), jnp.asarray(eps, jnp.float32),
+            jnp.asarray(_decay_scalar(decay), jnp.float32),
+        ]),
+        rs,
     ])
 
 
@@ -454,19 +489,27 @@ def lozo_chain(w, u, v_a, v_b, scale_a, scale_b, *, decay=None):
     separate ``lozo_perturb`` passes; ``decay`` applies to the second delta
     only (the update touch).
     """
+    return lozo_chain_k(w, u, (v_a, v_b), (scale_a, scale_b), decay=decay)
+
+
+def lozo_chain_k(w, u, vs, scales, *, decay=None):
+    """k LOZO deltas — scaleᵢ·U·Vᵢᵀ in chain order — in ONE W round-trip.
+
+    The k-ary generalization of ``lozo_chain`` (the probe-parallel step's
+    catch-up chains and trajectory restores need arbitrary k): u/v widen to
+    k·r and the τ rows are eye(k) repeated over the rank axis, so row i
+    selects exactly the i-th V block — each delta bitwise identical to its
+    own ``lozo_perturb`` pass; ``decay`` applies to the last delta only.
+    """
+    k = len(vs)
     r = u.shape[-1]
     batch = u.shape[:-2]
-    u2 = jnp.concatenate([u, u], axis=-1)
-    v2 = jnp.concatenate([v_a, v_b], axis=-1)
-    sel_a = jnp.concatenate(
-        [jnp.ones((r,), jnp.float32), jnp.zeros((r,), jnp.float32)]
-    )
-    taus = jnp.stack([sel_a, 1.0 - sel_a])                  # [2, 2r]
-    taus = jnp.broadcast_to(taus, batch + (2, 2 * r))
-    scales = jnp.stack([
-        jnp.asarray(scale_a, jnp.float32), jnp.asarray(scale_b, jnp.float32)
-    ])
-    return tezo_perturb(w, u2, v2, taus, scales, decay=decay)
+    uk = jnp.concatenate([u] * k, axis=-1) if k > 1 else u
+    vk = jnp.concatenate(list(vs), axis=-1) if k > 1 else vs[0]
+    taus = jnp.repeat(jnp.eye(k, dtype=jnp.float32), r, axis=1)   # [k, k·r]
+    taus = jnp.broadcast_to(taus, batch + (k, k * r))
+    scale_arr = jnp.stack([jnp.asarray(s, jnp.float32) for s in scales])
+    return tezo_perturb(w, uk, vk, taus, scale_arr, decay=decay)
 
 
 def subzo_perturb(w, u, v, sigma, scale, *, decay=None, pad_rank: bool = True):
@@ -480,7 +523,7 @@ def subzo_perturb(w, u, v, sigma, scale, *, decay=None, pad_rank: bool = True):
         fn = functools.partial(
             subzo_perturb, scale=scale, decay=decay, pad_rank=pad_rank
         )
-        return jax.vmap(fn)(w, u, v, sigma)
+        return _map_leading(fn, w, u, v, sigma)
     if pad_rank and not _interpret():
         u, v = _pad_rank(u, v)[:2]
         sigma = _pad_sigma(sigma)

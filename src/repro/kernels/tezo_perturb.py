@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import fence
+
 
 def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref, *, k, barrier):
     u = u_ref[...].astype(jnp.float32)          # [bm, r]
@@ -44,29 +46,39 @@ def _perturb_kernel(scale_ref, w_ref, u_ref, v_ref, tau_ref, o_ref, *, k, barrie
     taus = tau_ref[...].astype(jnp.float32)     # [k, r]
     wf = w_ref[...].astype(jnp.float32)
     for s in range(k):
-        ut = u * taus[s : s + 1, :]              # broadcast over rows
-        z = jax.lax.dot_general(
-            ut, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )                                        # [bm, bn]
         # Bitwise contract with the standalone passes this chain replaces:
         # per-step decay rides the scalar block (1.0 on all but the final
         # update delta) rather than a compile-time literal, and each delta
         # round-trips through the VMEM output tile — the same rounding
-        # barrier the replaced HBM pass had.  Interpret mode additionally
-        # pins each step with optimization_barrier: under jit the ref
-        # store/load is functionalized away and XLA's fusion/FMA choices
-        # vary with the surrounding program by an ulp, so both z and the
-        # stored tile are fenced to compile exactly like a standalone pass
-        # (Mosaic has no lowering for the barrier on this pin and needs
-        # none: its VMEM store is a real boundary).
+        # barrier the replaced HBM pass had.  Interpret mode has no such
+        # boundary (the ref store/load functionalizes away under jit), so
+        # each delta runs inside its own fence branch with laundered
+        # scalars — see kernels/fence.py for why this, and not
+        # optimization_barrier, pins the rounding against the surrounding
+        # schedule.  Mosaic needs none of it: its VMEM store is real.
         if barrier:
-            z = jax.lax.optimization_barrier(z)
-        d = scale_ref[k + s]
-        o_ref[...] = (d * wf + scale_ref[s] * z).astype(o_ref.dtype)
-        wf = o_ref[...]
-        if barrier and s < k - 1:
-            wf = jax.lax.optimization_barrier(wf)
-        wf = wf.astype(jnp.float32)
+            zero = fence.data_zero(wf)
+            d = scale_ref[k + s] + zero
+            sc = scale_ref[s] + zero
+            tau_s = taus[s : s + 1, :] + zero
+
+            def delta(wf=wf, d=d, sc=sc, tau_s=tau_s):
+                z = jax.lax.dot_general(
+                    u * tau_s, v, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )                                # [bm, bn]
+                return (d * wf + sc * z).astype(o_ref.dtype)
+
+            val = fence.fenced(zero, delta, lambda wf=wf: wf.astype(o_ref.dtype))
+        else:
+            ut = u * taus[s : s + 1, :]          # broadcast over rows
+            z = jax.lax.dot_general(
+                ut, v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                    # [bm, bn]
+            val = (scale_ref[k + s] * wf + scale_ref[s] * z).astype(o_ref.dtype)
+        o_ref[...] = val
+        wf = o_ref[...].astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))

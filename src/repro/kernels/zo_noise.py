@@ -79,6 +79,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import fence
 from repro.utils.tree import _path_hash
 
 # Threefry-2x32 rotation schedule (Random123), alternated every 4 rounds.
@@ -176,16 +177,26 @@ def _noise_perturb_kernel(
     rows, cols = _tile_coords(bm, bn, base_ref)
     wf = w_ref[...].astype(jnp.float32)
     for idx, probe in enumerate(probes):
-        z = counter_normal(k0, k1, rows, cols, probe)
         # round-trip through the VMEM output tile between deltas (the
-        # rounding/optimization barrier of the replaced HBM pass — see
-        # tezo_perturb on the interpret-mode optimization_barrier): a
-        # multi-probe chain is bitwise identical to the separate passes
-        o_ref[...] = (wf + scale_ref[idx] * z).astype(o_ref.dtype)
-        wf = o_ref[...]
-        if barrier and idx < len(probes) - 1:
-            wf = jax.lax.optimization_barrier(wf)
-        wf = wf.astype(jnp.float32)
+        # rounding boundary of the replaced HBM pass): a multi-probe chain
+        # is bitwise identical to the separate passes.  Interpret mode has
+        # no real store boundary, so each delta — z generation included —
+        # runs inside its own fence branch (kernels/fence.py) and compiles
+        # identically no matter how the schedule groups or consumes it.
+        if barrier:
+            zero = fence.data_zero(wf)
+            sc = scale_ref[idx] + zero
+
+            def delta(wf=wf, sc=sc, probe=probe):
+                z = counter_normal(k0, k1, rows, cols, probe)
+                return (wf + sc * z).astype(o_ref.dtype)
+
+            val = fence.fenced(zero, delta, lambda wf=wf: wf.astype(o_ref.dtype))
+        else:
+            z = counter_normal(k0, k1, rows, cols, probe)
+            val = (wf + scale_ref[idx] * z).astype(o_ref.dtype)
+        o_ref[...] = val
+        wf = o_ref[...].astype(jnp.float32)
 
 
 def _base_arr(base) -> jax.Array:
@@ -245,46 +256,93 @@ def _noise_update_kernel(*refs, variant, q, restore_probe, bm, bn, barrier):
     seed_ref, hyp_ref, kap_ref, base_ref = refs[0], refs[1], refs[2], refs[3]
     k0, k1 = _seed_words(seed_ref)
     rows, cols = _tile_coords(bm, bn, base_ref)
-    g = kap_ref[0] * counter_normal(k0, k1, rows, cols, 0)
-    for p in range(1, q):
-        g = g + kap_ref[p] * counter_normal(k0, k1, rows, cols, p)
-    g = g * jnp.float32(1.0 / q)
-    lr = hyp_ref[0]
-    # decoupled weight decay folded into the same pass: W ← decay·W − lr·…
-    # (decay ≡ 1.0 when cfg.weight_decay == 0 — an exact f32 identity)
-    decay = hyp_ref[4]
     w_ref = refs[4]
     o_w_ref = refs[5 if variant == "sgd" else (6 if variant == "momentum" else 7)]
     wf = w_ref[...].astype(jnp.float32)
     if restore_probe is not None:
-        # restore-into-update: add back the last probe's +ρ·z (hyp[5] = ρ)
-        # first, round-tripped through the VMEM output tile — the same
-        # rounding and optimization barrier the separate restore pass had,
-        # so the chained step stays bitwise identical
-        zr = counter_normal(k0, k1, rows, cols, restore_probe)
-        o_w_ref[...] = (wf + hyp_ref[5] * zr).astype(o_w_ref.dtype)
-        wf = o_w_ref[...]
-        if barrier:
-            wf = jax.lax.optimization_barrier(wf)
-        wf = wf.astype(jnp.float32)
-    if variant == "sgd":
-        o_w = refs[5]
-        o_w[...] = (decay * wf - lr * g).astype(o_w.dtype)
-    elif variant == "momentum":
-        m_ref, o_w, o_m = refs[5], refs[6], refs[7]
-        b1 = hyp_ref[1]
-        m_new = b1 * m_ref[...] + (1.0 - b1) * g
-        o_m[...] = m_new
-        o_w[...] = (decay * wf - lr * m_new).astype(o_w.dtype)
-    else:  # adam
-        m_ref, v_ref, o_w, o_m, o_v = refs[5:10]
-        b1, b2, eps = hyp_ref[1], hyp_ref[2], hyp_ref[3]
+        # restore-into-update: replay the restore delta(s) — +hyp[5+i]·z_pᵢ
+        # for each probe in the (static) chain — each round-tripped through
+        # the VMEM output tile, the same rounding the separate restore
+        # passes had, so the chained step stays bitwise identical.  In
+        # interpret mode each delta runs in its own fence branch, exactly
+        # like _noise_perturb_kernel's, so the replay matches the perturb
+        # passes it undoes bit for bit (kernels/fence.py).  A probe-parallel
+        # step hands the full 3q-delta trajectory-restore chain here; the
+        # sequential chained step hands the single trailing (+ρ, q−1) delta.
+        rps = restore_probe if isinstance(restore_probe, tuple) else (restore_probe,)
+        for idx, rp in enumerate(rps):
+            if barrier:
+                zero = fence.data_zero(wf)
+                rsc = hyp_ref[5 + idx] + zero
+
+                def rdelta(wf=wf, rsc=rsc, rp=rp):
+                    zr = counter_normal(k0, k1, rows, cols, rp)
+                    return (wf + rsc * zr).astype(o_w_ref.dtype)
+
+                val = fence.fenced(
+                    zero, rdelta, lambda wf=wf: wf.astype(o_w_ref.dtype)
+                )
+            else:
+                zr = counter_normal(k0, k1, rows, cols, rp)
+                val = (wf + hyp_ref[5 + idx] * zr).astype(o_w_ref.dtype)
+            o_w_ref[...] = val
+            wf = o_w_ref[...].astype(jnp.float32)
+
+    def optimizer(wf=wf, zero=None):
+        # probe mean + the optimizer rule; laundered hyperparameters under
+        # the fence so sequential and probe-parallel steps compile this
+        # tail identically (the kappa vectors they feed in arrive by
+        # different data paths — accumulated vs psum'd — and must not
+        # perturb the codegen of the shared math)
+        launder = zero if zero is not None else jnp.float32(0)
+        g = (kap_ref[0] + launder) * counter_normal(k0, k1, rows, cols, 0)
+        for p in range(1, q):
+            g = g + (kap_ref[p] + launder) * counter_normal(k0, k1, rows, cols, p)
+        g = g * (jnp.float32(1.0 / q) + launder)
+        lr = hyp_ref[0] + launder
+        # decoupled weight decay folded into the same pass: W ← decay·W − lr·…
+        # (decay ≡ 1.0 when cfg.weight_decay == 0 — an exact f32 identity)
+        decay = hyp_ref[4] + launder
+        if variant == "sgd":
+            return ((decay * wf - lr * g).astype(o_w_ref.dtype),)
+        if variant == "momentum":
+            m_ref = refs[5]
+            b1 = hyp_ref[1] + launder
+            m_new = b1 * m_ref[...] + (1.0 - b1) * g
+            return ((decay * wf - lr * m_new).astype(o_w_ref.dtype), m_new)
+        m_ref, v_ref = refs[5], refs[6]
+        b1, b2 = hyp_ref[1] + launder, hyp_ref[2] + launder
+        eps = hyp_ref[3] + launder
         m_new = b1 * m_ref[...] + (1.0 - b1) * g
         v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
-        o_m[...] = m_new
-        o_v[...] = v_new
         upd = m_new * jax.lax.rsqrt(v_new + eps)
-        o_w[...] = (decay * wf - lr * upd).astype(o_w.dtype)
+        return ((decay * wf - lr * upd).astype(o_w_ref.dtype), m_new, v_new)
+
+    if barrier:
+        zero = fence.data_zero(wf)
+
+        def fallback(wf=wf):
+            outs = [wf.astype(o_w_ref.dtype)]
+            if variant in ("momentum", "adam"):
+                outs.append(refs[5][...].astype(jnp.float32))
+            if variant == "adam":
+                outs.append(refs[6][...].astype(jnp.float32))
+            return tuple(outs)
+
+        outs = fence.fenced(
+            zero, lambda wf=wf, zero=zero: optimizer(wf, zero), fallback
+        )
+    else:
+        outs = optimizer()
+    if variant == "sgd":
+        refs[5][...] = outs[0]
+    elif variant == "momentum":
+        refs[6][...] = outs[0]
+        refs[7][...] = outs[1]
+    else:
+        refs[7][...] = outs[0]
+        refs[8][...] = outs[1]
+        refs[9][...] = outs[2]
 
 
 @functools.partial(
@@ -294,14 +352,16 @@ def noise_update(
     w: jax.Array,                 # [m, n]
     seed: jax.Array,              # uint32[2]
     kappas: jax.Array,            # [q] f32 — q static via shape
-    hyp: jax.Array,               # [6] f32: lr, beta1, beta2, eps, decay,
-    #                               restore scale (ρ when restore_probe set)
+    hyp: jax.Array,               # [5+k] f32: lr, beta1, beta2, eps, decay,
+    #                               restore scale(s) (ρ…, matching the
+    #                               restore_probe chain; k=1 when scalar)
     m_buf: jax.Array | None = None,   # [m, n] f32 (momentum/adam)
     v_buf: jax.Array | None = None,   # [m, n] f32 (adam)
     *,
     base: jax.Array | None = None,    # int32[2] global (row0, col0) of w[0, 0]
     variant: str = "sgd",
-    restore_probe: int | None = None,  # static: fold +hyp[5]·z_probe restore in
+    restore_probe: int | tuple[int, ...] | None = None,  # static: fold the
+    #   +hyp[5+i]·z_probeᵢ restore delta(s) in (tuple = restore chain)
     bm: int = 256,
     bn: int = 512,
     interpret: bool = False,
@@ -321,7 +381,9 @@ def noise_update(
     assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
     q = kappas.shape[0]
     assert q < MAX_PROBES, q
-    assert restore_probe is None or restore_probe < MAX_PROBES
+    if restore_probe is not None:
+        rps = restore_probe if isinstance(restore_probe, tuple) else (restore_probe,)
+        assert all(rp < MAX_PROBES for rp in rps), rps
 
     tile = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
@@ -366,25 +428,42 @@ def _subzo_kernel(scale_ref, w_ref, u_ref, v_ref, s_ref, o_ref, *, k, r, barrier
     s_all = s_ref[...].astype(jnp.float32)      # [k·r, r]
     wf = w_ref[...].astype(jnp.float32)
     for s in range(k):
-        sig = s_all[s * r : (s + 1) * r, :]      # [r, r]
-        us = jax.lax.dot_general(
-            u, sig, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )                                        # [bm, r]
-        z = jax.lax.dot_general(
-            us, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )                                        # [bm, bn]
-        # per-step SMEM decay + a VMEM-tile round-trip between deltas, with
-        # the interpret-mode optimization_barrier fences (see tezo_perturb):
+        # per-step SMEM decay + a VMEM-tile round-trip between deltas; in
+        # interpret mode each delta runs in its own fence branch with
+        # laundered scalars (kernels/fence.py, same shape as tezo_perturb):
         # the chained pass stays bitwise identical to the standalone passes
-        # it replaces
+        # it replaces under any grouping
         if barrier:
-            z = jax.lax.optimization_barrier(z)
-        d = scale_ref[k + s]
-        o_ref[...] = (d * wf + scale_ref[s] * z).astype(o_ref.dtype)
-        wf = o_ref[...]
-        if barrier and s < k - 1:
-            wf = jax.lax.optimization_barrier(wf)
-        wf = wf.astype(jnp.float32)
+            zero = fence.data_zero(wf)
+            d = scale_ref[k + s] + zero
+            sc = scale_ref[s] + zero
+            sig = s_all[s * r : (s + 1) * r, :] + zero
+
+            def delta(wf=wf, d=d, sc=sc, sig=sig):
+                us = jax.lax.dot_general(
+                    u, sig, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )                                # [bm, r]
+                z = jax.lax.dot_general(
+                    us, v, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )                                # [bm, bn]
+                return (d * wf + sc * z).astype(o_ref.dtype)
+
+            val = fence.fenced(zero, delta, lambda wf=wf: wf.astype(o_ref.dtype))
+        else:
+            sig = s_all[s * r : (s + 1) * r, :]  # [r, r]
+            us = jax.lax.dot_general(
+                u, sig, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                    # [bm, r]
+            z = jax.lax.dot_general(
+                us, v, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                    # [bm, bn]
+            val = (scale_ref[k + s] * wf + scale_ref[s] * z).astype(o_ref.dtype)
+        o_ref[...] = val
+        wf = o_ref[...].astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))

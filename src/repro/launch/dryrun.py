@@ -184,6 +184,9 @@ def run_cell(
         # the lowered step makes (chained default: 2q+1)
         record["q_probes"] = zo_cfg.q_probes
         record["restore_mode"] = zo_cfg.restore_mode
+        # dryrun costs the sequential schedule; probe-parallel provenance is
+        # recorded so schema-5 consumers can tell the two apart
+        record["probe_parallel"] = zo_cfg.probe_parallel
         record["zo_passes"] = zo_pass_count(zo_cfg.q_probes, zo_cfg.restore_mode)
         state_abs = jax.eval_shape(
             lambda p: init_zo_state(p, zo_cfg), model.abstract_params()

@@ -7,7 +7,8 @@ on host devices with a simple two-queue scheduler:
   * requests accumulate into a prefill batch (padded to the bucket size),
   * one fused prefill builds the KV/recurrent cache,
   * the decode loop emits one token per step for the whole batch until every
-    sequence hit EOS or max_new_tokens.
+    sequence hit EOS or max_new_tokens; rows that hit EOS are frozen — their
+    output is masked to EOS/pad and throughput counts only live tokens.
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m --smoke \
         --batch 4 --prompt-len 32 --max-new 16
@@ -55,22 +56,33 @@ class BatchedServer:
         key = jax.random.PRNGKey(seed)
         out = []
         done = np.zeros(B, bool)
+        live = np.zeros(B, np.int64)
+        # Finished rows are frozen: their emitted token is pinned to eos_id
+        # (pad 0 when no EOS is configured) instead of whatever the model
+        # keeps sampling past EOS, and that pinned token — not the raw
+        # sample — is what feeds the next decode step, so a done row's cache
+        # advances on a stable input while the rest of the batch drains.
+        fill = eos_id if eos_id >= 0 else 0
         tok = self._sample(logits, temperature, key)
         t1 = time.time()
         for i in range(max_new_tokens):
-            out.append(np.asarray(tok))
-            done |= np.asarray(tok) == eos_id
-            if done.all():
+            emitted = np.where(done, fill, np.asarray(tok)).astype(np.int32)
+            out.append(emitted)
+            live += ~done          # the EOS token itself still counts live
+            done |= emitted == eos_id
+            if done.all() or i == max_new_tokens - 1:
                 break
-            logits, cache = self._decode(self.params, cache, tok)
+            logits, cache = self._decode(self.params, cache, jnp.asarray(emitted))
             key = jax.random.fold_in(key, i)
             tok = self._sample(logits, temperature, key)
         decode_s = time.time() - t1
         tokens = np.stack(out, axis=1)
+        live_total = int(live.sum())
         stats = {
             "prefill_s": round(prefill_s, 4),
             "decode_s": round(decode_s, 4),
-            "decode_tok_per_s": round(tokens.size / max(decode_s, 1e-9), 1),
+            "live_tokens": live_total,
+            "decode_tok_per_s": round(live_total / max(decode_s, 1e-9), 1),
         }
         return tokens, stats
 

@@ -15,6 +15,7 @@ multi-device integration tests; default is single-device.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from pathlib import Path
@@ -25,7 +26,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
-from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+from repro.core import AdaptiveQ, ZOConfig, build_zo_train_step, init_zo_state
 from repro.core import kernel_execution, zo_pass_count
 from repro.core.rank import select_ranks
 from repro.data import DataConfig, Prefetcher, batch_at_step
@@ -34,6 +35,7 @@ from repro.distributed import (
     batch_shardings,
     build_ensemble_zo_train_step,
     param_spec_table,
+    replicated_tree,
     zo_state_shardings,
 )
 from repro.models import build_model
@@ -54,6 +56,9 @@ def train(
     rank_mode: str = "const",
     q_probes: int = 1,
     restore_mode: str = "inplace",
+    probe_parallel: bool = False,
+    adaptive_q: bool = False,
+    q_max: int = 16,
     seed: int = 0,
     ckpt_dir: str | None = None,
     ckpt_every: int = 100,
@@ -81,7 +86,17 @@ def train(
     zo_cfg = ZOConfig(
         method=method, kernel_mode=kernel_mode, lr=lr, rho=rho, rank=rank,
         rank_mode=rank_mode, q_probes=q_probes, restore_mode=restore_mode,
+        probe_parallel=probe_parallel, adaptive_q=adaptive_q, q_max=q_max,
         seed=seed, total_steps=steps,
+    )
+    if probe_parallel and (mesh is None or "data" not in mesh.axis_names):
+        raise ValueError(
+            "--probe-parallel requires --mesh with a data axis (the q probes "
+            "shard over the mesh's data-axis replicas)"
+        )
+    probe_lanes = (
+        dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+        if probe_parallel else None
     )
     # report the lowering that will actually execute (and whether the
     # pallas path is interpret-mode emulation)
@@ -122,11 +137,21 @@ def train(
         # single-device reference — the counter-PRNG kernel leaves are
         # mesh-invariant by construction (see core.dispatch).
         jax.config.update("jax_threefry_partitionable", True)
-        state_sh = zo_state_shardings(
-            mesh, model.logical_axes(), jax.eval_shape(lambda: state)
-        )
+        if probe_parallel:
+            # probe-parallel lanes evaluate their probe block on the full
+            # replicated (params, batch, mstate) view — the data axis holds
+            # probe replicas, not batch shards (core.zo_step)
+            state_sh = replicated_tree(mesh, jax.eval_shape(lambda: state))
+        else:
+            state_sh = zo_state_shardings(
+                mesh, model.logical_axes(), jax.eval_shape(lambda: state)
+            )
 
     if ensemble > 1:
+        if probe_parallel:
+            raise ValueError("--probe-parallel does not compose with --ensemble")
+        if adaptive_q:
+            raise ValueError("--adaptive-q does not compose with --ensemble")
         sim = StragglerSim(ensemble, straggler_prob, seed=seed + 99)
         step_fn = build_ensemble_zo_train_step(
             model.loss_fn, zo_cfg, ensemble,
@@ -136,10 +161,19 @@ def train(
         # mesh + the per-leaf spec table turn on shard-aware kernel dispatch:
         # each leaf's fused perturb/update runs under shard_map on its local
         # shard instead of GSPMD all-gathering around the pallas_call.
-        step_fn = build_zo_train_step(
-            model.loss_fn, zo_cfg, mesh=mesh,
-            param_specs=param_spec_table(state_sh.params) if state_sh else None,
-        )
+        # Probe-parallel passes an empty spec table: every leaf is
+        # replicated and the leaf ops run their plain lowerings.
+        def build_step(cfg_b):
+            if cfg_b.probe_parallel:
+                return build_zo_train_step(
+                    model.loss_fn, cfg_b, mesh=mesh, param_specs={}
+                )
+            return build_zo_train_step(
+                model.loss_fn, cfg_b, mesh=mesh,
+                param_specs=param_spec_table(state_sh.params) if state_sh else None,
+            )
+
+        step_fn = build_step(zo_cfg)
 
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     start_step = 0
@@ -153,38 +187,74 @@ def train(
         batch_abs = jax.eval_shape(
             lambda: {k: jnp.asarray(v) for k, v in batch_at_step(data, 0).items()}
         )
-        step_fn = jax.jit(
-            step_fn,
-            in_shardings=(state_sh, batch_shardings(mesh, batch_abs)),
-            out_shardings=(state_sh, None),
-            donate_argnums=(0,),
+        batch_sh = (
+            replicated_tree(mesh, batch_abs) if probe_parallel
+            else batch_shardings(mesh, batch_abs)
         )
+
+        def jit_step(fn):
+            return jax.jit(
+                fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+
         state = jax.device_put(state, state_sh)
     else:
-        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        def jit_step(fn):
+            return jax.jit(fn, donate_argnums=(0,))
+
+    step_fn = jit_step(step_fn)
 
     eval_fn = jax.jit(model.loss_fn)
     eval_batch = {k: jnp.asarray(v) for k, v in batch_at_step(data, 999_999_999).items()}
 
+    controller = (
+        AdaptiveQ(q=zo_cfg.q_probes, q_max=zo_cfg.q_max)
+        if zo_cfg.adaptive_q else None
+    )
     prefetch = Prefetcher(data, start_step=start_step)
     history: list[dict] = []
-    losses_window: list[float] = []
+    # the window holds UNFETCHED device arrays: a float() per step would
+    # block on the device stream every iteration (the async dispatch pipeline
+    # drains to one step deep); everything materializes in one device_get at
+    # the log boundary instead
+    losses_window: list[jax.Array] = []
     t_start = time.time()
     try:
         for step_idx, host_batch in prefetch:
             if step_idx >= steps:
                 break
             batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
-            state, metrics = step_fn(state, batch)
-            losses_window.append(float(metrics["loss"]))
+            # ENFORCED no-host-sync invariant: any implicit device→host
+            # materialization in the steady-state segment (a float() on a
+            # metric, an np.asarray on the loss) raises here instead of
+            # silently serializing dispatch; fetches belong in the
+            # log-boundary block below (explicit device_get stays legal)
+            with jax.transfer_guard_device_to_host("disallow"):
+                state, metrics = step_fn(state, batch)
+                losses_window.append(metrics["loss"])
             if (step_idx + 1) % log_every == 0:
+                window = np.asarray(jax.device_get(losses_window), np.float32)
                 rec = {
                     "step": step_idx + 1,
-                    "loss": float(np.mean(losses_window)),
+                    "loss": float(np.mean(window)),
                     "kappa_abs": float(metrics["kappa_abs"]),
                     "wall_s": round(time.time() - t_start, 1),
                 }
                 losses_window.clear()
+                if controller is not None:
+                    new_q = controller.observe(
+                        float(metrics["kappa_var"]), rec["kappa_abs"]
+                    )
+                    if new_q is not None:
+                        # grow the probe ensemble (AdaZeta schedule): the
+                        # step is static in q, so growth = rebuild + re-jit
+                        # here at the log boundary
+                        zo_cfg = dataclasses.replace(zo_cfg, q_probes=new_q)
+                        step_fn = jit_step(build_step(zo_cfg))
+                        rec["q_probes"] = new_q
                 if (step_idx + 1) % eval_every == 0:
                     rec["eval_loss"] = float(eval_fn(state.params, eval_batch))
                 history.append(rec)
@@ -205,10 +275,16 @@ def train(
         "kernel_interpret": kernel_interpret,
         "steps": steps,
         # step-schedule provenance: the chained default makes 2q+1 full-W
-        # passes per step (see repro.core.zo_step)
-        "q_probes": q_probes,
+        # passes per step; probe-parallel records the busiest lane's
+        # 2·ceil(q/D)+1 per-replica passes (see repro.core.zo_step).
+        # q_probes is the FINAL ensemble size (adaptive-q may have grown it).
+        "q_probes": zo_cfg.q_probes,
         "restore_mode": restore_mode,
-        "zo_passes": zo_pass_count(q_probes, restore_mode),
+        "probe_parallel": probe_parallel,
+        "probe_lanes": probe_lanes,
+        "zo_passes": zo_pass_count(
+            zo_cfg.q_probes, restore_mode, probe_lanes=probe_lanes
+        ),
         "final_eval_loss": final_eval,
         "history": history,
         "wall_s": round(time.time() - t_start, 1),
@@ -249,6 +325,21 @@ def main() -> None:
         "(3q+1 passes, numerical studies); exact = branch ±ρ copies off "
         "the originals (bit-exact restore, 2× transient memory)",
     )
+    ap.add_argument(
+        "--probe-parallel", action="store_true",
+        help="shard the q probes over the mesh's data axis: D replicas each "
+        "run a disjoint probe block concurrently (2·ceil(q/D)+1 per-replica "
+        "passes instead of 2q+1) and one psum of 2q scalars completes the "
+        "step — bitwise identical to the sequential chained schedule; "
+        "requires --mesh with a data axis and restore-mode inplace",
+    )
+    ap.add_argument(
+        "--adaptive-q", action="store_true",
+        help="AdaZeta-style probe growth: double q_probes (up to --q-max) "
+        "when the κ-variance EMA says the estimator is noise-dominated; "
+        "host-level, re-jits the step at log boundaries",
+    )
+    ap.add_argument("--q-max", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)

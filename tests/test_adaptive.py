@@ -1,0 +1,76 @@
+"""AdaZeta-style adaptive probe-count controller (core.adaptive) and its
+train-loop wiring: q grows geometrically when the EMA'd relative κ
+dispersion stays hot, caps at q_max, and the launcher re-jits the step with
+the grown ensemble at a log boundary without disturbing the run."""
+import numpy as np
+
+from repro.core.adaptive import AdaptiveQ
+from repro.launch.train import train
+
+
+def test_grows_only_after_patience_consecutive_hot_windows():
+    c = AdaptiveQ(q=2, q_max=16)
+    assert c.observe(5.0, 1.0) is None      # hot window 1 of 2
+    assert c.observe(5.0, 1.0) == 4         # patience met -> q doubles
+    assert c.q == 4
+
+
+def test_growth_caps_at_q_max():
+    c = AdaptiveQ(q=2, q_max=6)
+    grown = [c.observe(5.0, 1.0) for _ in range(10)]
+    seen = [g for g in grown if g is not None]
+    assert seen == [4, 6]                   # doubles, then clips to the cap
+    assert c.q == 6
+    # at the cap the controller goes quiet
+    assert all(c.observe(5.0, 1.0) is None for _ in range(4))
+
+
+def test_quiet_signal_never_grows():
+    c = AdaptiveQ(q=2, q_max=16)
+    assert all(c.observe(0.1, 1.0) is None for _ in range(20))
+    assert c.q == 2
+
+
+def test_cold_window_resets_patience():
+    c = AdaptiveQ(q=2, q_max=16)
+    # alternating hot/cold keeps the EMA hovering around the threshold but
+    # never yields `patience` consecutive hot windows
+    for kv in (0.1, 5.0, 0.1, 5.0):
+        assert c.observe(kv, 1.0) is None
+    assert c.q == 2
+
+
+def test_relative_dispersion_is_scale_free():
+    big = AdaptiveQ(q=2, q_max=16)
+    small = AdaptiveQ(q=2, q_max=16)
+    for _ in range(4):
+        a = big.observe(5.0e6, 1.0e3)       # κ ~ 1e3, var/|κ|² = 5
+        b = small.observe(5.0e-6, 1.0e-3)   # κ ~ 1e-3, same relative noise
+        assert a == b
+    assert big.q == small.q == 8            # two growth events in 4 windows
+
+
+def test_hot_loop_never_syncs_per_step():
+    """Dispatch-latency smoke check: the steady-state loop segment runs
+    under jax.transfer_guard_device_to_host("disallow"), so a reintroduced
+    per-step host sync (e.g. float(metrics["loss"]) every iteration) raises
+    instead of silently serializing dispatch.  Both window shapes must
+    complete: a boundary every step, and no boundary until the end."""
+    for log_every in (1, 100):
+        res = train(
+            arch="opt-125m", smoke=True, method="mezo", kernel_mode="xla",
+            steps=3, seq_len=32, global_batch=4, lr=1e-5, seed=0,
+            log_every=log_every, verbose=False,
+        )
+        assert np.isfinite(res["final_eval_loss"])
+
+
+def test_train_loop_adaptive_q_reports_final_q():
+    res = train(
+        arch="opt-125m", smoke=True, method="tezo", kernel_mode="xla",
+        steps=4, seq_len=32, global_batch=4, lr=1e-5, rank=8, seed=1,
+        q_probes=1, adaptive_q=True, q_max=2, log_every=2, verbose=False,
+    )
+    assert np.isfinite(res["final_eval_loss"])
+    assert res["q_probes"] in (1, 2)        # grown at most to the cap
+    assert res["zo_passes"] == 2 * res["q_probes"] + 1

@@ -1,0 +1,126 @@
+"""BatchedServer decode-loop semantics: post-EOS masking, frozen rows,
+live-token accounting, and deterministic greedy decode.
+
+These lock the serving bugfix: a sequence that hits EOS must never emit a
+model-sampled token again (its row is masked to EOS and its *masked* token —
+not the raw sample — feeds the next decode step), and the reported
+throughput counts only live tokens, not frozen padding.
+
+The model is stubbed: a scripted [B, T] token matrix drives argmax via
+one-hot logits, so every expected emission is known exactly without
+building a real network.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.serve import BatchedServer
+
+EOS = 7
+VOCAB = 16
+
+
+class _ScriptedServer:
+    """BatchedServer with _prefill/_decode replaced by a token script."""
+
+    def __new__(cls, script: np.ndarray):
+        srv = BatchedServer.__new__(BatchedServer)
+        srv.params = {}
+        script = np.asarray(script, np.int32)
+        fed: list[np.ndarray] = []
+
+        def logits_at(step):
+            return jnp.asarray(
+                np.eye(VOCAB, dtype=np.float32)[script[:, step]] * 10.0
+            )
+
+        def prefill(params, batch):
+            return logits_at(0), 0
+
+        def decode(params, cache, tok):
+            fed.append(np.asarray(tok))
+            step = cache + 1
+            return logits_at(step), step
+
+        srv._prefill = prefill
+        srv._decode = decode
+        srv.fed = fed
+        return srv
+
+
+def _mixed_script():
+    # row 0 hits EOS at step 1, row 1 at step 3, row 2 never
+    return np.array([
+        [3, EOS, 5, 5, 5, 5],
+        [4, 4, 4, EOS, 9, 9],
+        [5, 6, 5, 6, 5, 6],
+    ])
+
+
+def test_no_tokens_after_eos():
+    srv = _ScriptedServer(_mixed_script())
+    prompts = np.zeros((3, 4), np.int32)
+    tokens, _ = srv.generate(prompts, max_new_tokens=6, eos_id=EOS)
+    assert tokens.shape == (3, 6)
+    for row in tokens:
+        hits = np.flatnonzero(row == EOS)
+        if hits.size:
+            assert (row[hits[0]:] == EOS).all(), row
+
+
+def test_mixed_length_batch_freezes_done_rows():
+    srv = _ScriptedServer(_mixed_script())
+    tokens, _ = srv.generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS
+    )
+    np.testing.assert_array_equal(tokens[0], [3, EOS, EOS, EOS, EOS, EOS])
+    np.testing.assert_array_equal(tokens[1], [4, 4, 4, EOS, EOS, EOS])
+    np.testing.assert_array_equal(tokens[2], [5, 6, 5, 6, 5, 6])
+    # the decode loop must be fed the masked emission, not the raw sample
+    for step, fed in enumerate(srv.fed):
+        np.testing.assert_array_equal(fed, tokens[:, step])
+
+
+def test_early_stop_when_all_rows_done():
+    script = np.array([
+        [3, EOS, 5, 5, 5, 5],
+        [EOS, 4, 4, 4, 9, 9],
+        [5, 6, EOS, 6, 5, 6],
+    ])
+    srv = _ScriptedServer(script)
+    tokens, _ = srv.generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS
+    )
+    assert tokens.shape == (3, 3)           # stops once every row is done
+    np.testing.assert_array_equal(tokens[1], [EOS, EOS, EOS])
+
+
+def test_live_token_stats():
+    srv = _ScriptedServer(_mixed_script())
+    tokens, stats = srv.generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS
+    )
+    # rows contribute 2 + 4 + 6 live tokens (the EOS token itself is live)
+    assert stats["live_tokens"] == 12
+    assert stats["live_tokens"] < tokens.size
+    assert stats["decode_tok_per_s"] > 0
+
+
+def test_no_eos_configured_runs_full_budget():
+    srv = _ScriptedServer(_mixed_script())
+    tokens, stats = srv.generate(np.zeros((3, 4), np.int32), max_new_tokens=6)
+    assert tokens.shape == (3, 6)
+    assert stats["live_tokens"] == tokens.size
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_generate_deterministic_for_fixed_seed(temperature):
+    a, _ = _ScriptedServer(_mixed_script()).generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS,
+        temperature=temperature, seed=11,
+    )
+    b, _ = _ScriptedServer(_mixed_script()).generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS,
+        temperature=temperature, seed=11,
+    )
+    np.testing.assert_array_equal(a, b)

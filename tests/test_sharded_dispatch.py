@@ -1,7 +1,7 @@
 """Shard-aware fused-kernel dispatch (core.dispatch shard_context).
 
 Run in subprocesses with 8 fake host devices so the rest of the suite keeps
-seeing exactly 1 device (assignment §0).  Two contracts:
+seeing exactly 1 device (assignment §0).  Three contracts:
 
   1. Parity: a jitted ZO step on a 2×4 (data, model) mesh under
      kernel_mode="pallas" (shard_map'd local-shard kernels, interpret mode
@@ -18,6 +18,12 @@ seeing exactly 1 device (assignment §0).  Two contracts:
      including an awkward-dim leaf (vocab-sized 50257 rows, pad-and-mask
      local tiling) and a leading-batch-sharded stack (per-slice seed
      derivation offset by the global slice index).
+
+  3. Probe-parallel parity: ``cfg.probe_parallel`` (q probes sharded over
+     the mesh's data axis, one psum of 2q scalars, one trajectory-restore
+     update) is BITWISE identical to the sequential chained schedule for
+     every registered method on both lowerings, including the uneven
+     q=3-on-2-lanes split (see test_probe_parallel_parity).
 
 Both subprocesses enable ``jax_threefry_partitionable`` (as the sharded
 launchers do): the *dense-fallback* leaves draw from ``jax.random``, whose
@@ -404,7 +410,93 @@ _FORWARD_SCRIPT = textwrap.dedent(
 )
 
 
-def _run_script(tmp_path, name, script, markers):
+_PP_PARITY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_threefry_partitionable", True)
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import ZOConfig, build_zo_train_step, init_zo_state
+    from repro.core.zo_step import zo_pass_count
+    from repro.launch.mesh import make_host_mesh
+    from repro.kernels import ops
+
+    ops.set_interpret(True)
+    mesh = make_host_mesh(data=2, model=4)
+
+    params = {
+        "w1": jax.random.normal(jax.random.PRNGKey(0), (32, 64)) * 0.1,
+        "stack": jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16)) * 0.1,
+        "b": jnp.zeros((16,)),
+    }
+
+    def loss_fn(p, batch):
+        h = jnp.tanh(batch["x"] @ p["w1"])[:, :16]
+        for layer in range(p["stack"].shape[0]):
+            h = h + 0.1 * jnp.tanh(h @ p["stack"][layer])
+        h = h + p["b"]
+        return jnp.mean((jnp.sum(h, axis=-1) - batch["y"]) ** 2)
+
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(5), (4, 32)),
+             "y": jnp.ones((4,))}
+
+    METHOD = __METHOD__
+    for q in __QS__:
+        for km in ("pallas", "xla"):
+            common = dict(method=METHOD, kernel_mode=km, rank=4, lr=1e-2,
+                          seed=3, weight_decay=0.05, lazy_interval=3,
+                          q_probes=q)
+            cfg_s = ZOConfig(**common)
+            s_ref = init_zo_state(params, cfg_s)
+            step_ref = jax.jit(build_zo_train_step(loss_fn, cfg_s))
+            m_ref = None
+            for _ in range(2):
+                s_ref, m_ref = step_ref(s_ref, batch)
+
+            # q=3 on the 2-lane data axis is the uneven split: lane 0 runs
+            # probes {0, 1}, lane 1 catches up through probe 1's triple and
+            # runs probe 2 alone
+            cfg_p = ZOConfig(**common, probe_parallel=True)
+            s_got = init_zo_state(params, cfg_p)
+            step_pp = jax.jit(
+                build_zo_train_step(loss_fn, cfg_p, mesh=mesh, param_specs={})
+            )
+            m_got = None
+            with mesh:
+                for _ in range(2):
+                    s_got, m_got = step_pp(s_got, batch)
+
+            for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(
+                    (s_ref.params, s_ref.mstate)
+                ),
+                jax.tree_util.tree_leaves_with_path(
+                    (s_got.params, s_got.mstate)
+                ),
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{METHOD} q={q} {km} at {jax.tree_util.keystr(pa)}",
+                )
+            np.testing.assert_array_equal(
+                np.asarray(m_ref["loss"]), np.asarray(m_got["loss"])
+            )
+            np.testing.assert_array_equal(
+                np.asarray(m_ref["kappa_abs"]), np.asarray(m_got["kappa_abs"])
+            )
+            assert int(m_got["zo_passes"]) == zo_pass_count(
+                q, "inplace", probe_lanes=2
+            ), (int(m_got["zo_passes"]), q)
+            print(f"PP_{METHOD}_q{q}_{km}_OK")
+    print(f"PP_{METHOD}_ALL_OK")
+    """
+)
+
+
+def _run_script(tmp_path, name, script, markers, timeout=900):
     path = tmp_path / name
     path.write_text(script)
     env = dict(os.environ)
@@ -412,7 +504,7 @@ def _run_script(tmp_path, name, script, markers):
     env["PYTHONPATH"] = str(repo / "src")
     proc = subprocess.run(
         [sys.executable, str(path)], env=env, capture_output=True, text=True,
-        timeout=900,
+        timeout=timeout,
     )
     assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
     for marker in markers:
@@ -449,6 +541,37 @@ def test_sharded_forward_dispatch_parity(tmp_path):
             "SCAN_LEAF_SHARDED_OK",
             "MODEL_FORWARD_SHARDED_OK",
         ),
+    )
+
+
+PP_METHODS = (
+    "tezo", "tezo_m", "tezo_adam",
+    "mezo", "mezo_m", "mezo_adam",
+    "lozo", "lozo_m", "subzo",
+)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", PP_METHODS)
+def test_probe_parallel_parity(tmp_path, method):
+    """Probe-parallel (cfg.probe_parallel, q probes sharded over the 2-lane
+    data axis of the 2×4 mesh) == the sequential chained schedule BITWISE —
+    params, method state, and loss/κ metrics — for q∈{2,4} on both
+    lowerings, two steps (state carry included).  tezo_adam additionally
+    runs q=3: the uneven split where lane 1 opens with a catch-up chain and
+    holds fewer probes than lane 0.  The recorded zo_passes metric must be
+    the per-replica 2·ceil(q/D)+1, not the sequential 2q+1."""
+    qs = (2, 3, 4) if method == "tezo_adam" else (2, 4)
+    script = (
+        _PP_PARITY_SCRIPT
+        .replace("__METHOD__", repr(method))
+        .replace("__QS__", repr(qs))
+    )
+    markers = tuple(
+        f"PP_{method}_q{q}_{km}_OK" for q in qs for km in ("pallas", "xla")
+    ) + (f"PP_{method}_ALL_OK",)
+    _run_script(
+        tmp_path, f"pp_parity_{method}.py", script, markers, timeout=1800
     )
 
 
