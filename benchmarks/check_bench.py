@@ -14,7 +14,11 @@ so does a zo-step row without the schema-4 ``zo_passes`` field (the chained
 probe-parallel leg: a sharded fresh file must carry at least one zo-step
 row with ``probe_parallel: true`` and its ``per_replica_passes`` field
 (the 2·ceil(q/D)+1 per-replica schedule), so the data-axis probe
-parallelism can't silently drop out of the bench.
+parallelism can't silently drop out of the bench.  Schema 6 adds the
+serving leg: a fresh file must carry ``leg: "serve"`` rows (the
+continuous-batching engine under Poisson arrival), each with ``tok_per_s``,
+``ttft_p50_ms``, ``ttft_p99_ms`` and ``max_concurrent_decodes`` — the
+serving stack can't silently fall out of the bench either.
 New combinations are allowed (they become binding once committed).
 
 Usage (CI):
@@ -95,6 +99,23 @@ def check(fresh_path: str, baseline_path: str) -> int:
         print(
             f"[check_bench] FAIL: {len(bad_pp)} probe-parallel record(s) in "
             f"{fresh_path} lack the schema-5 'per_replica_passes' field",
+        )
+        return 1
+    # schema 6: the serving leg must be present in every fresh file, and
+    # its rows must stay self-describing (throughput + TTFT percentiles +
+    # the concurrency the numbers were measured at)
+    serve_rows = [r for r in fresh.get("records", []) if r.get("leg") == "serve"]
+    if not serve_rows:
+        print(f"[check_bench] FAIL: {fresh_path} has no serve-leg records")
+        return 1
+    _SERVE_FIELDS = (
+        "tok_per_s", "ttft_p50_ms", "ttft_p99_ms", "max_concurrent_decodes"
+    )
+    bad_serve = [r for r in serve_rows if any(f not in r for f in _SERVE_FIELDS)]
+    if bad_serve:
+        print(
+            f"[check_bench] FAIL: {len(bad_serve)} serve record(s) in "
+            f"{fresh_path} lack schema-6 fields {_SERVE_FIELDS}",
         )
         return 1
     missing = sorted(record_keys(baseline) - record_keys(fresh))

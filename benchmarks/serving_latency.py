@@ -1,0 +1,153 @@
+"""Serving latency bench: the continuous-batching ServeEngine under a
+Poisson arrival process.
+
+A seeded exponential inter-arrival trace (deterministic per seed) drives
+``ServeEngine.serve`` on the wall clock, with prompt lengths drawn across
+every prefill bucket, and reports the serving numbers the paper-style
+tables quote for an inference stack: sustained tokens/s, time-to-first-token
+p50/p99 (queueing included — arrivals can outpace the ``max_concurrent_
+decodes`` slots), and per-output-token latency p50/p99 from each request's
+emission timestamps.
+
+Rows ride ``results/BENCH_kernels.json`` as ``leg: "serve"`` (schema 6, see
+``table8_walltime.run``), one per kernel mode: off-TPU the paged decode-
+attention kernel dispatches to its XLA twin (``executed: "xla-region"``), so
+CPU rows are plumbing/latency-structure coverage the same way the forward
+leg's are; kernel speed is the on-TPU follow-on.  ``check_bench`` fails a
+fresh record file whose serve rows are missing or lack the throughput/TTFT
+fields.
+
+Standalone:
+    PYTHONPATH=src python -m benchmarks.serving_latency --requests 16 \
+        --rate 8 --max-concurrent 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import emit_csv
+from repro.configs import get_smoke_config
+from repro.core.dispatch import forward_execution
+from repro.kernels.ops import is_interpret
+from repro.launch.serve import Request, ServeEngine
+
+SERVE_ARCH = "opt-125m"
+
+
+def _serve_kernel_label(kernel_mode: str) -> tuple[str, str]:
+    """(kernel label, executed detail) — same convention as the forward
+    leg's ``table8_walltime._forward_label``: the label keys the coverage
+    ratchet, ``executed`` records the actual lowering of the paged
+    decode-attention call."""
+    path, kernel = forward_execution(kernel_mode)
+    if path != "pallas":
+        return "xla", "xla"
+    if not kernel:
+        return "pallas", "xla-region"
+    return "pallas", "interpret" if is_interpret() else "mosaic"
+
+
+def poisson_trace(
+    n_requests: int,
+    rate_hz: float,
+    vocab_size: int,
+    buckets: list[int],
+    max_new: int,
+    seed: int = 0,
+) -> list[Request]:
+    """A deterministic Poisson workload: exponential inter-arrival gaps at
+    ``rate_hz``, prompt lengths spread across every prefill bucket."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    reqs = []
+    for i, t in enumerate(arrivals):
+        bkt = buckets[i % len(buckets)]
+        n = int(rng.integers(max(1, bkt // 2), bkt + 1))
+        reqs.append(
+            Request(
+                id=f"p{i}",
+                tokens=rng.integers(2, vocab_size, size=n).astype(np.int32),
+                max_new=max_new,
+                arrival=float(t),
+                seed=i,
+            )
+        )
+    return reqs
+
+
+def serve_leg_rows(
+    n_requests: int = 12,
+    rate_hz: float = 20.0,
+    max_concurrent: int = 4,
+    max_prompt_len: int = 16,
+    max_new: int = 8,
+    page_size: int = 8,
+    kernel_modes=("xla", "pallas"),
+) -> list[dict]:
+    rows = []
+    for kernel_mode in kernel_modes:
+        cfg = get_smoke_config(SERVE_ARCH).reduced(kernel_mode=kernel_mode)
+        eng = ServeEngine(
+            cfg,
+            max_concurrent_decodes=max_concurrent,
+            max_prompt_len=max_prompt_len,
+            max_new_tokens=max_new,
+            page_size=page_size,
+        )
+        eng.warmup()
+        reqs = poisson_trace(n_requests, rate_hz, cfg.vocab_size, eng.buckets, max_new)
+        results, stats = eng.serve(reqs)
+        assert stats["compile_count"] == eng.compile_count  # no-recompile
+        # per-output-token latency: gaps between a request's emission stamps
+        tpot = np.concatenate(
+            [np.diff(r["times"]) for r in results.values() if len(r["times"]) > 1]
+        )
+        label, executed = _serve_kernel_label(kernel_mode)
+        rows.append(
+            {
+                "leg": "serve",
+                "model": cfg.name,
+                "method": f"serve:{cfg.name}",
+                "kernel": label,
+                "executed": executed,
+                "mesh": "1x1",
+                "tok_per_s": stats["tok_per_s"],
+                "ttft_p50_ms": stats["ttft_p50_ms"],
+                "ttft_p99_ms": stats["ttft_p99_ms"],
+                "tpot_p50_ms": round(1e3 * float(np.percentile(tpot, 50)), 3),
+                "tpot_p99_ms": round(1e3 * float(np.percentile(tpot, 99)), 3),
+                "requests": stats["requests"],
+                "emitted_tokens": stats["emitted_tokens"],
+                "decode_steps": stats["decode_steps"],
+                "arrival_rate_hz": rate_hz,
+                "max_concurrent_decodes": stats["max_concurrent_decodes"],
+                "page_size": stats["page_size"],
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--max-concurrent", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    args = ap.parse_args()
+    rows = serve_leg_rows(
+        n_requests=args.requests,
+        rate_hz=args.rate,
+        max_concurrent=args.max_concurrent,
+        max_new=args.max_new,
+        page_size=args.page_size,
+    )
+    emit_csv("serving_latency", rows)
+    print(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,15 @@ split over the D=2 data lanes) additionally records ``per_replica_passes``
 (2·ceil(q/D)+1 = 3 — the walltime-relevant per-replica traffic).
 ``check_bench`` fails a fresh file whose zo-step rows lack ``zo_passes``
 or that has no probe-parallel row.
+
+Serve leg (schema 6): the continuous-batching ``ServeEngine`` runs a seeded
+Poisson arrival trace per kernel mode (``benchmarks.serving_latency``) and
+records ``leg: "serve"`` rows — sustained ``tok_per_s``, TTFT p50/p99,
+per-output-token latency p50/p99, ``max_concurrent_decodes`` — next to the
+walltime rows.  Off-TPU the paged decode-attention kernel executes its
+marker-region XLA twin, so CPU serve rows are latency-structure/plumbing
+coverage like the forward leg's.  ``check_bench`` fails a fresh file with
+no serve rows or serve rows missing the throughput/TTFT fields.
 """
 from __future__ import annotations
 
@@ -61,6 +70,7 @@ from benchmarks.common import (
     time_fn,
     zo_step_bytes_model,
 )
+from benchmarks.serving_latency import serve_leg_rows
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core import KERNEL_METHODS, ZOConfig, build_zo_train_step, init_zo_state
@@ -459,6 +469,7 @@ def run(
 ) -> list[dict]:
     rows = _single_device_rows(widths, iters)
     rows += forward_leg_rows(iters)
+    rows += serve_leg_rows()
     if sharded:
         rows += _sharded_leg_subprocess(iters)
     # the legs carry different columns — emit as separate CSV blocks
@@ -476,6 +487,9 @@ def run(
     emit_csv(
         "table8_walltime_forward", [r for r in rows if r["leg"] == "forward"]
     )
+    emit_csv(
+        "table8_walltime_serve", [r for r in rows if r["leg"] == "serve"]
+    )
     out = Path(out_json)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(
@@ -484,8 +498,11 @@ def run(
                 # schema 5: zo-step rows carry q_probes / restore_mode /
                 # probe_parallel / zo_passes (the chained 2q+1 full-W pass
                 # schedule, or the per-replica 2·ceil(q/D)+1 on the
-                # probe-parallel leg, which also records per_replica_passes)
-                "schema": 5,
+                # probe-parallel leg, which also records per_replica_passes).
+                # schema 6: serve-leg rows (continuous-batching engine under
+                # Poisson arrival — tok_per_s, TTFT/TPOT percentiles,
+                # max_concurrent_decodes)
+                "schema": 6,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter

@@ -1200,6 +1200,42 @@ def attention_fwd(
     return layers.full_attention(q, k, v, window=window, q_offset=q_offset)
 
 
+def decode_attention_fwd(
+    q: jax.Array,             # [S, H, dh] one query token per decode slot
+    k_pages: jax.Array,       # [n_pages, page_size, KV, dh] shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, pages_per_slot] int32 physical page ids
+    lengths: jax.Array,       # [S] int32 valid kv length per slot
+    *,
+    mode: str = "auto",
+) -> jax.Array:
+    """Paged (block-table) KV-cache decode attention for one step.
+
+    The serving-engine sibling of :func:`attention_fwd`: models call this
+    via ``layers.paged_decode_attention`` and never branch on an impl knob
+    themselves.  Pallas path runs the block-table kernel
+    (kernels/decode_attention — Mosaic on TPU, the interpreter when a test
+    forced it); off-TPU auto-detection takes the gather-then-dense XLA twin
+    inside the PALLAS_FLASH_REGION marker, matching the prefill kernel's
+    costing convention.  No shard_map wrap: the decode batch dim is the
+    engine's slot axis, not a mesh data axis — single-host serving runs
+    unsharded (multi-host serving is the ROADMAP follow-on).
+    """
+    from repro.models import layers  # lazy: layers imports this module
+
+    path, kernel = forward_execution(mode)
+    if path == "pallas" and kernel:
+        return ops.paged_decode_attention(q, k_pages, v_pages, block_tables, lengths)
+    if path == "pallas":
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return layers.paged_decode_attention_ref(
+                q, k_pages, v_pages, block_tables, lengths
+            )
+    return layers.paged_decode_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths
+    )
+
+
 def selective_scan_fwd(
     x: jax.Array,      # [B, S, D]
     dt: jax.Array,     # [B, S, D] (softplus'd)

@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: paged (block-table) KV-cache decode attention.
+
+The serving engine keeps every slot's KV cache as fixed-size pages in one
+shared pool (``k_pages/v_pages [n_pages, page_size, KV, dh]``) addressed
+through a per-slot block table (``[n_slots, pages_per_slot] int32`` of
+physical page ids).  Insert/evict is then a page-table edit on the host —
+no cache copy ever moves — and one decode step attends each slot's single
+new query against only its own pages.
+
+Grid = (n_slots, KV_heads, pages_per_slot) with the page index innermost
+("arbitrary" ⇒ sequential on TPU): the block table and per-slot lengths ride
+scalar prefetch (``PrefetchScalarGridSpec``) so the k/v BlockSpec index maps
+chase ``block_table[slot, page]`` — the pool gather IS the DMA schedule, no
+contiguous cache is ever materialized.  Online-softmax (m, l, acc) scratch
+accumulates across a slot's pages exactly like the prefill flash kernel
+accumulates across kv blocks; pages at or beyond ``lengths[slot]`` are
+skipped whole via ``@pl.when`` and the partial tail page is masked by
+position.  A slot with length 0 (free slot) contributes nothing and writes
+a zero output tile.
+
+VMEM working set per (slot, kv-head) is tiny — G×dh query + page_size×dh
+k/v + G×page_size f32 scores — decode is bandwidth-bound on the pool reads,
+which is the point of paging: only live pages are ever streamed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    bt_ref,  # scalar prefetch: [S, P] int32 block table
+    len_ref,  # scalar prefetch: [S] int32 valid kv length per slot
+    q_ref,  # [1, 1, G, dh]
+    k_ref,  # [1, page_size, 1, dh] — the page picked by the index map
+    v_ref,
+    o_ref,  # [1, 1, G, dh]
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    page_size: int,
+    n_pages: int,
+    scale: float,
+):
+    s = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s]
+    base = ip * page_size
+
+    @pl.when(base < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # [G, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [page_size, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sc = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # [G, page_size]
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        sc = jnp.where(kpos < length, sc, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("head_scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,  # [S, KV, G, dh] one query token per slot
+    k_pages: jax.Array,  # [n_pages, page_size, KV, dh]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, pages_per_slot] int32 physical page ids
+    lengths: jax.Array,  # [S] int32 valid kv positions (kpos < length attends)
+    *,
+    head_scale: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [S, KV, G, dh].  ``head_scale`` (0 ≡ dh**-0.5) pins the
+    softmax scale to the unpadded head dim when dh carries lane padding.
+    Block-table entries must be valid pool indices even for dead slots
+    (the engine points them at the reserved null page)."""
+    S, KV, G, dh = q.shape
+    n_pool, page_size = k_pages.shape[0], k_pages.shape[1]
+    P = block_tables.shape[1]
+    scale = head_scale if head_scale else dh**-0.5
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        page_size=page_size,
+        n_pages=P,
+        scale=scale,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda s, h, ip, bt, lens: (s, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, dh),
+                lambda s, h, ip, bt, lens: (bt[s, ip], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, dh),
+                lambda s, h, ip, bt, lens: (bt[s, ip], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda s, h, ip, bt, lens: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, G, dh), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)

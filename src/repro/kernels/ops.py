@@ -583,6 +583,40 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0, bq=512, bk=51
     return out
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Paged (block-table) KV decode attention with pad-and-mask tiling.
+
+    ``q [S, H, dh]`` (one token per slot), ``k_pages/v_pages
+    [n_pages, page_size, KV, dh]``, ``block_tables [S, P] int32``,
+    ``lengths [S] int32``; returns ``[S, H, dh]``.  An awkward head dim
+    pads to the sublane multiple with the softmax scale pinned to the true
+    dh; an awkward GQA group width pads to the sublane multiple too (the
+    zero query rows produce sliced-off output rows).  ``page_size`` is an
+    engine knob and is expected to be sublane-aligned already (the default
+    serving page is 16).
+    """
+    from repro.kernels.decode_attention import paged_decode_attention as _paged
+
+    S, H, dh = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    g_pad = _round_up(G, 8)
+    dh_pad = _round_up(dh, _SUBLANE)
+    qg = q.reshape(S, KV, G, dh)
+    qg = _pad_axis(_pad_axis(qg, 2, g_pad), 3, dh_pad)
+    out = _paged(
+        qg,
+        _pad_axis(k_pages, 3, dh_pad),
+        _pad_axis(v_pages, 3, dh_pad),
+        block_tables,
+        lengths,
+        head_scale=dh**-0.5,
+        interpret=_interpret(),
+    )
+    out = out[:, :, :G, :dh]
+    return out.reshape(S, H, dh)
+
+
 def selective_scan(x, dt, a, b, c, h0, *, bd=128, bs=2048):
     """Mamba-1 selective scan; VMEM-resident state on TPU (see
     kernels/selective_scan.py), interpret-mode oracle path on CPU.

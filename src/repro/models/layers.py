@@ -179,6 +179,41 @@ def decode_attention(
     return out.reshape(B, 1, H, dh)
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,            # [S, H, dh] one query token per slot
+    k_pages: jax.Array,      # [n_pages, page_size, KV, dh]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, P] int32 physical page ids
+    lengths: jax.Array,       # [S] int32; kpos < length attends
+) -> jax.Array:
+    """XLA twin of the paged decode kernel: gather each slot's pages into a
+    contiguous per-slot cache in position order, then run the exact dense
+    ``decode_attention`` math.  Because the gather reproduces the values a
+    dense ring cache would hold (and the masked tail is exact-zero after
+    softmax), a slot's output here is bitwise the dense decode path's for
+    the same capacity — the property the serving engine's solo-vs-batched
+    identity tests lean on."""
+    S, H, dh = q.shape
+    page_size, KV = k_pages.shape[1], k_pages.shape[2]
+    k = k_pages[block_tables].reshape(S, -1, KV, dh)  # [S, P*page_size, KV, dh]
+    v = v_pages[block_tables].reshape(S, -1, KV, dh)
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
+    return decode_attention(q[:, None], k, v, valid)[:, 0]
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *, mode="auto"):
+    """Paged-KV decode-attention entry point: lowering selected solely by the
+    jit-static ``kernel_mode`` through ``repro.core.dispatch
+    .decode_attention_fwd`` (same single-authority contract as ``attention``
+    above) — the block-table Pallas kernel on the pallas path, the
+    gather-then-dense XLA twin otherwise."""
+    from repro.core import dispatch
+
+    return dispatch.decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, mode=mode
+    )
+
+
 def attention(
     q, k, v, *, window=0, q_offset=0, mode="auto", batch_axes=(),
     chunk_q=1024, chunk_k=1024, chunked_min_seq=8192,

@@ -67,6 +67,27 @@ class LM:
     def init_cache(self, batch_size: int, max_len: int, abstract: bool = False):
         return self.impl.init_cache(batch_size, max_len, abstract)
 
+    # ---- paged serving (continuous-batching engine) ----------------------
+    @property
+    def supports_paged_decode(self) -> bool:
+        """Attention-family models serve through the paged engine; the
+        recurrent families (ssm / hybrid) keep the dense decode path."""
+        return hasattr(self.impl, "decode_step_paged")
+
+    def init_paged_cache(self, n_pages: int, page_size: int, abstract: bool = False):
+        return self.impl.init_paged_cache(n_pages, page_size, abstract)
+
+    def prefill_paged(self, params: Any, tokens: jax.Array, true_len: jax.Array):
+        return self.impl.prefill_paged(params, tokens, true_len)
+
+    def insert_pages(self, cache: Any, k_new, v_new, page_ids: jax.Array):
+        return self.impl.insert_pages(cache, k_new, v_new, page_ids)
+
+    def decode_step_paged(self, params, cache, block_tables, lengths, tokens):
+        return self.impl.decode_step_paged(
+            params, cache, block_tables, lengths, tokens
+        )
+
     # ---- inputs ----------------------------------------------------------
     def _batch_layout(self, shape: ShapeConfig) -> dict:
         """Sequence budget split between stub prefix embeds and tokens."""

@@ -396,3 +396,117 @@ class TransformerLM:
         x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
         logits = x[:, 0, :] @ params["lm_head"]
         return logits, {"k": k_new, "v": v_new, "pos": pos + 1}
+
+    # ------------------------------------------------------------------
+    # paged serving: block-table KV pages for the continuous-batching engine
+    # ------------------------------------------------------------------
+    def init_paged_cache(self, n_pages: int, page_size: int, abstract: bool = False):
+        """Shared KV page pool [L, n_pages, page_size, KV, dh].  Page 0 is
+        reserved as the null page: free slots' decode writes are routed
+        there so a stale block-table row can never corrupt a live page."""
+        c = self.cfg
+        shape = (c.n_layers, n_pages, page_size, c.n_kv_heads, c.head_dim)
+        dt = jnp.dtype(c.decode_cache_dtype)
+        if abstract:
+            return {
+                "k": jax.ShapeDtypeStruct(shape, dt),
+                "v": jax.ShapeDtypeStruct(shape, dt),
+            }
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def prefill_paged(self, params, tokens, true_len):
+        """Prefill one bucket-padded prompt ([1, Sb] int32, padding AFTER the
+        prompt) and return the per-layer KV for page insertion.
+
+        ``true_len`` is a traced [] int32, so every prompt length in a
+        bucket reuses one compiled executable; logits are taken at position
+        true_len - 1 (the real last prompt token — the pad tail's hidden
+        states are causally downstream and never read).
+        Returns (logits [1, V], k_all, v_all [L, Sb, KV, dh])."""
+        x, kvs = self.hidden_states(params, {"tokens": tokens}, collect_kv=True)
+        k_all, v_all = kvs  # [L, 1, Sb, KV, dh]
+        D = x.shape[-1]
+        x_last = jax.lax.dynamic_slice(
+            x, (0, true_len - 1, 0), (1, 1, D)
+        )[:, 0, :]
+        logits = x_last @ params["lm_head"]
+        return logits, k_all[:, 0], v_all[:, 0]
+
+    def insert_pages(self, cache, k_new, v_new, page_ids):
+        """Scatter a prefilled prompt's KV ([L, Sb, KV, dh]) into the pool at
+        the given physical pages ([Sb/page_size] int32) — the insert half of
+        the page-table-edit contract; no existing page moves."""
+        L, Sb, KV, dh = k_new.shape
+        ps = cache["k"].shape[2]
+        n = Sb // ps
+        dt = cache["k"].dtype
+        kn = k_new.reshape(L, n, ps, KV, dh).astype(dt)
+        vn = v_new.reshape(L, n, ps, KV, dh).astype(dt)
+        return {
+            "k": cache["k"].at[:, page_ids].set(kn),
+            "v": cache["v"].at[:, page_ids].set(vn),
+        }
+
+    def decode_step_paged(self, params, cache, block_tables, lengths, tokens):
+        """One decode token per slot against the paged KV pool.
+
+        ``tokens/lengths [S] int32`` — length is the count of kv positions
+        already in the slot's pages, i.e. the new token's position; free
+        slots carry length 0 and their write lands on the reserved null
+        page 0.  Block tables are host scheduler state and pass through
+        unchanged.  Every per-slot op here is row-independent (embedding
+        row gather, per-row matmuls/norms, per-slot page gather in the
+        attention twin), which is what makes a request's token stream
+        bitwise-invariant to what the other slots are doing — the engine's
+        solo-vs-batched identity contract.  Requires window == 0 (paged
+        pools don't ring) and no MoE (capacity routing couples rows).
+        Returns (logits [S, V], cache)."""
+        c = self.cfg
+        assert c.window == 0, "paged decode requires full-causal attention"
+        S = tokens.shape[0]
+        ps = cache["k"].shape[2]
+        P = block_tables.shape[1]
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # [S, 1, D]
+        sin, cos = layers.rope_angles(
+            lengths[:, None], c.head_dim, c.rope_theta
+        )  # [S, 1, dh/2]
+        active = lengths > 0
+        lp = jnp.clip(lengths // ps, 0, P - 1)
+        phys = jnp.where(active, block_tables[jnp.arange(S), lp], 0)
+        off = lengths % ps
+        attn_len = jnp.where(active, lengths + 1, 0)
+
+        def body(x, xs):
+            p, k_l, v_l = xs
+            dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+            h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+            q = h @ p["wq"]
+            k = h @ p["wk"]
+            v = h @ p["wv"]
+            if c.qkv_bias:
+                q = q + p["bq"].astype(q.dtype)
+                k = k + p["bk"].astype(k.dtype)
+                v = v + p["bv"].astype(v.dtype)
+            q = q.reshape(S, 1, H, dh)
+            k = k.reshape(S, 1, KV, dh)
+            v = v.reshape(S, 1, KV, dh)
+            if c.qk_norm:
+                q = layers.rms_norm(q, p["q_norm"], c.norm_eps)
+                k = layers.rms_norm(k, p["k_norm"], c.norm_eps)
+            q = layers.apply_rope(q, sin, cos)
+            k = layers.apply_rope(k, sin, cos)
+            k_l = k_l.at[phys, off].set(k[:, 0].astype(k_l.dtype))
+            v_l = v_l.at[phys, off].set(v[:, 0].astype(v_l.dtype))
+            o = layers.paged_decode_attention(
+                q[:, 0], k_l, v_l, block_tables, attn_len, mode=c.kernel_mode
+            )
+            x = x + o.reshape(S, 1, H * dh) @ p["wo"]
+            x = x + self._ffn(p, x)
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = x[:, 0, :] @ params["lm_head"]
+        return logits, {"k": k_new, "v": v_new}

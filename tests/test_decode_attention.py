@@ -1,0 +1,138 @@
+"""Paged decode-attention kernel (PR 8): the block-table Pallas kernel vs
+its XLA twin, the twin vs the dense decode path, and the dispatch routing.
+
+The kernel reads each slot's KV through a physical page table, so every
+sweep here runs with *shuffled* page assignments — an identity table would
+hide block-table indexing bugs entirely.  The twin (gather pages → dense
+``decode_attention``) is the serving engine's off-TPU production path, so
+twin-vs-dense is asserted bitwise, not to tolerance: the continuous-batching
+bitwise contract (solo == mixed) rests on it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.kernels import ops
+from repro.models import layers
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture
+def force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+def _paged_case(key, S, H, KV, dh, page_size, pages_per_slot, lengths):
+    """Random q/pages plus a shuffled (non-identity) block table; page 0 is
+    the reserved null page and stays out of every slot's row."""
+    n_pages = S * pages_per_slot + 1
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (S, H, dh), jnp.float32) * 0.3
+    k_pages = jax.random.normal(kk, (n_pages, page_size, KV, dh), jnp.float32) * 0.3
+    v_pages = jax.random.normal(kv, (n_pages, page_size, KV, dh), jnp.float32) * 0.3
+    perm = np.asarray(jax.random.permutation(kp, n_pages - 1)) + 1
+    block_tables = jnp.asarray(perm.reshape(S, pages_per_slot), jnp.int32)
+    return q, k_pages, v_pages, block_tables, jnp.asarray(lengths, jnp.int32)
+
+
+PAGED_CASES = [
+    # S, H, KV, dh, page_size, pages_per_slot, lengths
+    (3, 4, 4, 32, 8, 3, [5, 17, 24]),        # MHA; mid-page / multi-page / full
+    (2, 8, 2, 32, 16, 2, [1, 32]),           # GQA G=4; min length / capacity
+    (4, 4, 1, 64, 8, 2, [8, 16, 3, 9]),      # MQA; exact page boundaries
+    (2, 4, 2, 40, 8, 2, [7, 13]),            # awkward head dim (pad-and-mask)
+]
+
+
+@pytest.mark.parametrize("S,H,KV,dh,ps,pps,lengths", PAGED_CASES)
+def test_paged_kernel_vs_twin(force_interpret, S, H, KV, dh, ps, pps, lengths):
+    """ops.paged_decode_attention (real kernel, interpret) == the gather-
+    then-dense twin, over shuffled tables, GQA/MQA, page-boundary lengths
+    and non-tile head dims."""
+    q, kp, vp, bt, lens = _paged_case(
+        jax.random.PRNGKey(S * 100 + dh), S, H, KV, dh, ps, pps, lengths
+    )
+    got = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    want = layers.paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(want),
+        atol=2e-5,
+        err_msg=f"S={S} KV={KV} dh={dh} ps={ps} lengths={lengths}",
+    )
+
+
+def test_paged_kernel_bf16(force_interpret):
+    """bf16 pages (the serving cache dtype): kernel == twin at bf16 slack."""
+    q, kp, vp, bt, lens = _paged_case(jax.random.PRNGKey(7), 2, 4, 2, 32, 8, 2, [5, 12])
+    kp, vp = kp.astype(jnp.bfloat16), vp.astype(jnp.bfloat16)
+    qh = q.astype(jnp.bfloat16)
+    got = ops.paged_decode_attention(qh, kp, vp, bt, lens)
+    assert got.dtype == jnp.bfloat16
+    want = layers.paged_decode_attention_ref(qh, kp, vp, bt, lens)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2
+    )
+
+
+def test_paged_kernel_dead_slot_is_zero(force_interpret):
+    """A length-0 slot (free slot parked on the null page) produces exact
+    zeros — never NaN — so the engine can discard it without poisoning
+    anything downstream."""
+    q, kp, vp, bt, lens = _paged_case(
+        jax.random.PRNGKey(3), 3, 4, 2, 32, 8, 2, [9, 0, 16]
+    )
+    bt = bt.at[1].set(0)  # evicted row points at the null page
+    out = np.asarray(ops.paged_decode_attention(q, kp, vp, bt, lens))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[1], np.zeros_like(out[1]))
+    # live rows are untouched by the dead one
+    want = layers.paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(out[0], np.asarray(want)[0], atol=2e-5)
+    np.testing.assert_allclose(out[2], np.asarray(want)[2], atol=2e-5)
+
+
+def test_twin_vs_dense_bitwise():
+    """The page gather must reproduce the values a contiguous dense cache
+    holds, slot by slot, BITWISE — the serving engine's solo-vs-mixed
+    identity contract reduces to this plus row independence."""
+    S, H, KV, dh, ps, pps = 3, 4, 2, 32, 8, 3
+    lengths = [5, 20, 24]
+    q, kp, vp, bt, lens = _paged_case(
+        jax.random.PRNGKey(11), S, H, KV, dh, ps, pps, lengths
+    )
+    paged = np.asarray(layers.paged_decode_attention_ref(q, kp, vp, bt, lens))
+    T = pps * ps
+    for s in range(S):
+        k_dense = np.asarray(kp)[np.asarray(bt)[s]].reshape(T, KV, dh)
+        v_dense = np.asarray(vp)[np.asarray(bt)[s]].reshape(T, KV, dh)
+        valid = np.arange(T) < lengths[s]
+        dense = layers.decode_attention(
+            q[s][None, None],
+            jnp.asarray(k_dense)[None],
+            jnp.asarray(v_dense)[None],
+            jnp.asarray(valid)[None],
+        )
+        np.testing.assert_array_equal(paged[s], np.asarray(dense)[0, 0])
+
+
+def test_decode_attention_dispatch_routing(force_interpret):
+    """decode_attention_fwd routes like attention_fwd: pallas+interpret →
+    the real kernel, pallas off-TPU → the twin in the marker region, xla →
+    the twin directly; all three numerically agree."""
+    q, kp, vp, bt, lens = _paged_case(jax.random.PRNGKey(5), 2, 4, 2, 32, 8, 2, [6, 11])
+    kernel = dispatch.decode_attention_fwd(q, kp, vp, bt, lens, mode="pallas")
+    xla = dispatch.decode_attention_fwd(q, kp, vp, bt, lens, mode="xla")
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(xla), atol=2e-5)
+    ops.set_interpret(None)  # auto-detect: off-TPU pallas runs the twin
+    assert dispatch.forward_execution("pallas") == ("pallas", False)
+    twin = dispatch.decode_attention_fwd(q, kp, vp, bt, lens, mode="pallas")
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(xla))
+    fwd = jax.jit(lambda *a: dispatch.decode_attention_fwd(*a, mode="pallas"))
+    hlo = fwd.lower(q, kp, vp, bt, lens).compile().as_text()
+    assert "PALLAS_FLASH_REGION" in hlo

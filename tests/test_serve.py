@@ -10,6 +10,11 @@ The model is stubbed: a scripted [B, T] token matrix drives argmax via
 one-hot logits, so every expected emission is known exactly without
 building a real network.
 """
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -111,6 +116,30 @@ def test_no_eos_configured_runs_full_budget():
     tokens, stats = srv.generate(np.zeros((3, 4), np.int32), max_new_tokens=6)
     assert tokens.shape == (3, 6)
     assert stats["live_tokens"] == tokens.size
+
+
+def test_stats_report_ttft():
+    """ttft_s (prefill + first sample) is its own stat, measured from the
+    generate() start and at least as large as the prefill time it contains."""
+    srv = _ScriptedServer(_mixed_script())
+    _, stats = srv.generate(
+        np.zeros((3, 4), np.int32), max_new_tokens=6, eos_id=EOS
+    )
+    assert stats["ttft_s"] >= stats["prefill_s"] >= 0
+
+
+def test_cli_exposes_eos_and_engine_flags():
+    """The serving CLI must expose --eos-id (the early-stop bugfix) and the
+    --engine switch into the continuous-batching path."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    for flag in ("--eos-id", "--engine", "--max-concurrent", "--page-size"):
+        assert flag in proc.stdout, flag
 
 
 @pytest.mark.parametrize("temperature", [0.0, 0.8])

@@ -1,0 +1,350 @@
+"""Continuous-batching ServeEngine (PR 8): scheduler invariants under random
+traces, the solo-vs-mixed bitwise contract (a request's token stream is
+identical whether served alone or inserted mid-decode next to arbitrary
+neighbours), the no-recompile contract (``compile_count`` frozen after
+warmup), EOS evict-and-refill, per-request sampling streams, and the
+legacy-BatchedServer oracle at matched capacity.
+
+The real-model tests share one module-scoped engine: serve() must leave the
+scheduler drained and the cache reusable, so running the solo oracles on the
+*same* engine that just served the mixed trace is itself part of the test.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import BatchedServer, Request, ServeEngine, SlotScheduler
+from repro.models import build_model
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# --------------------------------------------------------------------------
+# SlotScheduler: property test over random insert/evict/decode traces
+# --------------------------------------------------------------------------
+
+
+def test_scheduler_random_trace_invariants():
+    """400 random ops (insert / evict / simulated decode growth): after every
+    one, no double-occupancy, pages disjoint and conserved, the null page
+    never owned, and live_tokens() exactly the sum of resident lengths."""
+    rng = np.random.default_rng(0)
+    sched = SlotScheduler(n_slots=4, pages_per_slot=3, n_pages=13)
+    resident: dict[str, int] = {}  # rid -> slot
+    expected: dict[str, int] = {}  # rid -> length
+    next_id = 0
+    for _ in range(400):
+        ops_avail = []
+        if sched.has_free_slot():
+            ops_avail.append("insert")
+        if resident:
+            ops_avail += ["evict", "decode"]
+        op = rng.choice(ops_avail)
+        if op == "insert":
+            rid = f"q{next_id}"
+            next_id += 1
+            n = int(rng.integers(1, 3 * 4))
+            slot = sched.insert(rid, n)
+            assert slot not in resident.values()
+            resident[rid] = slot
+            expected[rid] = n
+        elif op == "evict":
+            rid = rng.choice(list(resident))
+            got = sched.evict(resident.pop(rid))
+            assert got == rid
+            del expected[rid]
+        else:  # a decode step grows every live sequence by one
+            for rid, slot in resident.items():
+                sched.lengths[slot] += 1
+                expected[rid] += 1
+        sched.check_invariants()
+        assert sched.live_tokens() == sum(expected.values())
+    # drain completely: every page returns, every slot frees
+    for rid in list(resident):
+        sched.evict(resident.pop(rid))
+    sched.check_invariants()
+    assert sched.occupied() == []
+    assert sched.live_tokens() == 0
+
+
+def test_scheduler_rejects_misuse():
+    sched = SlotScheduler(n_slots=2, pages_per_slot=2, n_pages=5)
+    slot = sched.insert("a", 3)
+    with pytest.raises(AssertionError):
+        sched.insert("a", 1)  # double residency
+    sched.insert("b", 1)
+    with pytest.raises(AssertionError):
+        sched.insert("c", 1)  # no free slot
+    sched.evict(slot)
+    with pytest.raises(AssertionError):
+        sched.evict(slot)  # already free
+
+
+def test_scheduler_tables_shuffle_after_churn():
+    """FIFO page recycling: after churn the block table is not the identity
+    layout, so the paged tests genuinely exercise table indirection."""
+    sched = SlotScheduler(n_slots=2, pages_per_slot=2, n_pages=7)
+    s0 = sched.insert("a", 1)
+    sched.insert("b", 1)
+    sched.evict(s0)
+    sched.insert("c", 1)  # FIFO hands out the never-used tail pages first
+    sched.check_invariants()
+    assert [int(p) for p in sched.block_tables[s0]] == [5, 6]
+
+
+# --------------------------------------------------------------------------
+# ServeEngine on a real smoke model
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("opt-125m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engine(cfg, params):
+    eng = ServeEngine(
+        cfg,
+        params,
+        max_concurrent_decodes=3,
+        max_prompt_len=16,
+        max_new_tokens=8,
+        page_size=8,
+    )
+    eng.warmup()
+    return eng
+
+
+def _prompts(cfg):
+    rng = np.random.default_rng(0)
+    return [
+        rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (5, 8, 13, 16, 3, 11)
+    ]
+
+
+@pytest.fixture(scope="module")
+def mixed(engine, cfg):
+    """One staggered mixed trace, shared by the assertions below.  Arrivals
+    force the full life cycle: r0–r2 fill every slot at step 0, r3 queues
+    until r0's eviction frees a slot (a genuine mid-decode insertion), r4/r5
+    refill later evictions."""
+    prompts = _prompts(cfg)
+    warm_compiles = engine.compile_count
+    reqs = [
+        Request(id=f"r{i}", tokens=p, max_new=6, arrival=a)
+        for i, (p, a) in enumerate(zip(prompts, [0, 0, 0, 1, 6, 9]))
+    ]
+    results, stats = engine.serve(reqs, step_clock=True)
+    return prompts, results, stats, warm_compiles
+
+
+def test_no_recompile_after_warmup(engine, mixed):
+    """The jit-cache-miss counter is frozen by warmup(): serving a workload
+    with every prompt bucket, insertion, eviction and refill compiles
+    nothing new."""
+    _, _, stats, warm_compiles = mixed
+    assert stats["compile_count"] == warm_compiles
+    assert engine.compile_count == warm_compiles
+
+
+def test_mixed_trace_accounting_and_stats(engine, mixed):
+    prompts, results, stats, _ = mixed
+    assert stats["requests"] == 6
+    # exact live-token accounting: every request ran its full max_new budget
+    assert stats["emitted_tokens"] == 6 * 6
+    assert stats["live_tokens"] == 6 * 6
+    assert stats["live_tokens"] == sum(len(r["tokens"]) for r in results.values())
+    for key in (
+        "tok_per_s",
+        "ttft_p50_ms",
+        "ttft_p99_ms",
+        "decode_steps",
+        "max_concurrent_decodes",
+    ):
+        assert key in stats, key
+    assert stats["max_concurrent_decodes"] == 3
+    # r3 arrived at step 1 but had to wait for a slot: queueing shows in TTFT
+    assert results["r3"]["ttft_s"] > 0
+    # the detokenize worker drained the full backlog, in emission order
+    for r in results.values():
+        assert r["text"] == "".join(f"<{t}>" for t in r["tokens"])
+        assert r["times"] == sorted(r["times"])
+    # serve() leaves the engine drained and reusable
+    assert engine.scheduler.occupied() == []
+    engine.scheduler.check_invariants()
+
+
+def test_solo_vs_mixed_bitwise(engine, cfg, mixed):
+    """THE engine contract: each request's greedy stream served solo — on
+    the same engine, after the mixed trace churned the page pool — is
+    bitwise the stream it got mid-flight next to its neighbours."""
+    prompts, results, _, warm_compiles = mixed
+    for i, p in enumerate(prompts):
+        solo, _ = engine.serve(
+            [Request(id=f"solo{i}", tokens=p, max_new=6)], step_clock=True
+        )
+        np.testing.assert_array_equal(
+            solo[f"solo{i}"]["tokens"],
+            results[f"r{i}"]["tokens"],
+            err_msg=f"r{i} diverged between solo and mixed serving",
+        )
+    assert engine.compile_count == warm_compiles  # solo reruns recompile nothing
+
+
+def test_eos_evicts_and_refills(engine, cfg, mixed):
+    """With an EOS id picked from the no-EOS streams: every request's stream
+    is exactly its no-EOS stream truncated after the first EOS, eviction
+    frees slots for queued requests, and the pool drains clean."""
+    prompts, results, _, _ = mixed
+    eos = int(results["r0"]["tokens"][2])  # r0 stops after 3 tokens
+    old = engine.eos_id
+    engine.eos_id = eos  # host-side check only — never traced, no recompile
+    try:
+        reqs = [
+            Request(id=f"e{i}", tokens=p, max_new=6) for i, p in enumerate(prompts)
+        ]
+        res_eos, stats = engine.serve(reqs, step_clock=True)
+    finally:
+        engine.eos_id = old
+    assert len(res_eos) == 6  # all admitted despite 3 slots: evict → refill
+    assert any(len(r["tokens"]) < 6 for r in res_eos.values())
+    for i in range(6):
+        full = results[f"r{i}"]["tokens"]
+        hits = np.flatnonzero(full == eos)
+        want = full[: hits[0] + 1] if hits.size else full
+        np.testing.assert_array_equal(res_eos[f"e{i}"]["tokens"], want)
+    assert stats["live_tokens"] == sum(len(r["tokens"]) for r in res_eos.values())
+    assert engine.scheduler.occupied() == []
+    engine.scheduler.check_invariants()
+
+
+def test_temperature_stream_is_per_request(cfg, params):
+    """Sampling keys off each request's own fold-in stream: temperature
+    decode is deterministic for a fixed seed AND invariant to neighbours —
+    the bitwise contract survives temperature > 0."""
+    def run(reqs):
+        eng = ServeEngine(
+            cfg,
+            params,
+            max_concurrent_decodes=2,
+            max_prompt_len=8,
+            max_new_tokens=6,
+            page_size=8,
+            temperature=0.8,
+        )
+        res, _ = eng.serve(reqs, step_clock=True)
+        return res
+
+    prompts = _prompts(cfg)[:3]
+
+    def mk(i, **kw):
+        return Request(id=f"t{i}", tokens=prompts[i][:8], max_new=5, seed=100 + i, **kw)
+
+    mixed = run([mk(0), mk(1, arrival=1), mk(2, arrival=2)])
+    mixed2 = run([mk(0), mk(1, arrival=1), mk(2, arrival=2)])
+    for i in range(3):
+        want = mixed[f"t{i}"]["tokens"]
+        np.testing.assert_array_equal(mixed2[f"t{i}"]["tokens"], want)
+        solo = run([mk(i)])
+        np.testing.assert_array_equal(solo[f"t{i}"]["tokens"], want)
+
+
+def test_engine_matches_batched_server_oracle(engine, cfg, params):
+    """At matched capacity (solo max_len == pages_per_slot * page_size) and
+    a bucket-exact prompt, the paged engine reproduces the legacy dense
+    BatchedServer token for token."""
+    prompt = _prompts(cfg)[3]  # length 16 == the largest bucket
+    assert len(prompt) == 16
+    res, _ = engine.serve([Request(id="o", tokens=prompt, max_new=8)], step_clock=True)
+    srv = BatchedServer(cfg, params, max_len=engine.capacity)
+    tokens, stats = srv.generate(prompt[None], max_new_tokens=8)
+    np.testing.assert_array_equal(res["o"]["tokens"], tokens[0])
+    assert "ttft_s" in stats
+
+
+def test_rejects_oversized_work(engine, cfg):
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.serve(
+            [Request(id="big", tokens=np.zeros(17, np.int32), max_new=8)],
+            step_clock=True,
+        )
+    with pytest.raises(ValueError, match="capacity"):
+        engine.serve(
+            [Request(id="long", tokens=np.zeros(16, np.int32), max_new=9)],
+            step_clock=True,
+        )
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(get_smoke_config("xlstm-350m"))
+
+
+# --------------------------------------------------------------------------
+# 8 fake host devices: the acceptance-criteria trace in a subprocess
+# --------------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import Request, ServeEngine
+
+    assert jax.device_count() == 8
+    cfg = get_smoke_config("opt-125m")
+    eng = ServeEngine(cfg, max_concurrent_decodes=4, max_prompt_len=16,
+                      max_new_tokens=8, page_size=8)
+    eng.warmup()
+    warm = eng.compile_count
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 16, 9, 12, 3, 14, 7, 16)]
+    # 8 overlapping requests over 4 slots; late arrivals insert mid-decode
+    reqs = [Request(id=f"r{i}", tokens=p, max_new=6, arrival=float(i))
+            for i, p in enumerate(prompts)]
+    res, stats = eng.serve(reqs, step_clock=True)
+    assert stats["compile_count"] == warm, (stats["compile_count"], warm)
+    assert stats["live_tokens"] == 8 * 6, stats
+    # the mid-decode-inserted request r5 must be bitwise its solo run
+    for i in (0, 5, 7):
+        solo, _ = eng.serve([Request(id=f"s{i}", tokens=prompts[i], max_new=6)],
+                            step_clock=True)
+        np.testing.assert_array_equal(solo[f"s{i}"]["tokens"],
+                                      res[f"r{i}"]["tokens"])
+    assert eng.compile_count == warm
+    print("ENGINE_8DEV_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_engine_staggered_8_fake_devices(tmp_path):
+    script = tmp_path / "engine_8dev.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    repo = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "ENGINE_8DEV_OK" in proc.stdout, proc.stdout[-2000:]
