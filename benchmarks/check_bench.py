@@ -1,24 +1,33 @@
 """CI gate for the kernel benchmark record: coverage ratchet, not speed.
 
 Walltime on shared CI runners is noise, so the enforced contract is record
-*coverage*: every (leg, method, kernel, mesh) combination present in the
-committed baseline ``results/BENCH_kernels.json`` must also appear in the
-freshly produced file (any model/width satisfies a combination — the CI
-smoke runs width x1 only while the committed baseline also carries x4).  A
-method silently losing its pallas leg, a kernel-mode regressing to the
-dense path, the sharded leg disappearing, or the forward leg (schema 3:
-prefill rows per model × kernel mode, ``leg: "forward"``) vanishing all
-fail here; a fresh file with no forward-leg rows fails unconditionally, and
-so does a zo-step row without the schema-4 ``zo_passes`` field (the chained
-2q+1 pass schedule must stay self-describing).  Schema 5 adds the
-probe-parallel leg: a sharded fresh file must carry at least one zo-step
-row with ``probe_parallel: true`` and its ``per_replica_passes`` field
-(the 2·ceil(q/D)+1 per-replica schedule), so the data-axis probe
-parallelism can't silently drop out of the bench.  Schema 6 adds the
-serving leg: a fresh file must carry ``leg: "serve"`` rows (the
-continuous-batching engine under Poisson arrival), each with ``tok_per_s``,
-``ttft_p50_ms``, ``ttft_p99_ms`` and ``max_concurrent_decodes`` — the
-serving stack can't silently fall out of the bench either.
+*coverage*: every (leg, method, kernel, mesh, hardware, weight_quant)
+combination present in the committed baseline ``results/BENCH_kernels.json``
+must also appear in the freshly produced file (any model/width satisfies a
+combination — the CI smoke runs width x1 only while the committed baseline
+also carries x4).  A method silently losing its pallas leg, a kernel-mode
+regressing to the dense path, the sharded leg disappearing, or the forward
+leg (schema 3: prefill rows per model × kernel mode, ``leg: "forward"``)
+vanishing all fail here; a fresh file with no forward-leg rows fails
+unconditionally, and so does a zo-step row without the schema-4
+``zo_passes`` field (the chained 2q+1 pass schedule must stay
+self-describing).  Schema 5 adds the probe-parallel leg: a sharded fresh
+file must carry at least one zo-step row with ``probe_parallel: true`` and
+its ``per_replica_passes`` field (the 2·ceil(q/D)+1 per-replica schedule),
+so the data-axis probe parallelism can't silently drop out of the bench.
+Schema 6 adds the serving leg: a fresh file must carry ``leg: "serve"``
+rows (the continuous-batching engine under Poisson arrival), each with
+``tok_per_s``, ``ttft_p50_ms``, ``ttft_p99_ms`` and
+``max_concurrent_decodes`` — the serving stack can't silently fall out of
+the bench either.  Schema 7 labels every record with ``hardware`` ("cpu" /
+"tpu:<kind>"): rows from different hardware are never comparable, so the
+coverage ratchet binds PER HARDWARE — baseline combinations whose hardware
+the fresh run didn't execute on (e.g. a committed TPU leg checked on a CPU
+runner) are reported but not enforced.  Schema 7 also adds the
+quantized-leaf leg: a schema-≥7 fresh file must carry at least one zo-step
+row with ``weight_quant != "none"`` whose ``weight_bytes_reduction``
+(dense-f16 bytes ÷ stored packed bytes) is ≥ 3.0 — the storage win the
+QuantLeaf representation exists for can't silently regress.
 New combinations are allowed (they become binding once committed).
 
 Usage (CI):
@@ -33,28 +42,67 @@ import json
 import sys
 from pathlib import Path
 
+QUANT_MIN_REDUCTION = 3.0
+
+
+def load_doc(path: str, role: str) -> dict | None:
+    """Read + validate one bench JSON; None (with a clear message) on any
+    malformed input — a truncated bench write or a bad path must fail the
+    gate with a diagnosis, not a traceback."""
+    try:
+        text = Path(path).read_text()
+    except OSError as e:
+        print(f"[check_bench] FAIL: cannot read {role} file {path}: {e}")
+        return None
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        print(f"[check_bench] FAIL: {role} file {path} is not valid JSON: {e}")
+        return None
+    if not isinstance(doc, dict):
+        print(
+            f"[check_bench] FAIL: {role} file {path} must be a JSON object "
+            f"with 'schema' and 'records', got {type(doc).__name__}"
+        )
+        return None
+    if "schema" not in doc:
+        print(
+            f"[check_bench] FAIL: {role} file {path} has no 'schema' field "
+            "(every BENCH_kernels.json carries its schema version)"
+        )
+        return None
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        print(f"[check_bench] FAIL: {role} file {path} has no records")
+        return None
+    return doc
+
 
 def record_keys(doc: dict) -> set[tuple]:
     keys = set()
     for rec in doc.get("records", []):
-        # pre-schema-2 baselines have no mesh field (single-device) and
-        # pre-schema-3 none have a leg (everything was the ZO step)
+        # pre-schema-2 baselines have no mesh field (single-device),
+        # pre-schema-3 none have a leg (everything was the ZO step), and
+        # pre-schema-7 none have hardware (CPU runners) or weight_quant
         keys.add(
             (
                 rec.get("leg", "zo-step"),
                 rec["method"],
                 rec["kernel"],
                 rec.get("mesh", "1x1"),
+                rec.get("hardware", "cpu"),
+                rec.get("weight_quant", "none"),
             )
         )
     return keys
 
 
 def check(fresh_path: str, baseline_path: str) -> int:
-    fresh = json.loads(Path(fresh_path).read_text())
-    baseline = json.loads(Path(baseline_path).read_text())
-    if not fresh.get("records"):
-        print(f"[check_bench] FAIL: {fresh_path} has no records")
+    fresh = load_doc(fresh_path, "fresh")
+    if fresh is None:
+        return 1
+    baseline = load_doc(baseline_path, "baseline")
+    if baseline is None:
         return 1
     # the forward compute rides the dispatch now (PR 4): a record file
     # without forward-leg rows means the bench silently lost the forward
@@ -118,21 +166,73 @@ def check(fresh_path: str, baseline_path: str) -> int:
             f"{fresh_path} lack schema-6 fields {_SERVE_FIELDS}",
         )
         return 1
-    missing = sorted(record_keys(baseline) - record_keys(fresh))
+    # schema 7: every record hardware-labeled, and the quantized-leaf leg
+    # present with its storage win intact
+    if fresh.get("schema", 0) >= 7:
+        no_hw = [r for r in fresh.get("records", []) if "hardware" not in r]
+        if no_hw:
+            print(
+                f"[check_bench] FAIL: {len(no_hw)} record(s) in {fresh_path} "
+                "lack the schema-7 'hardware' field",
+            )
+            return 1
+        quant_rows = [
+            r
+            for r in fresh.get("records", [])
+            if r.get("leg", "zo-step") == "zo-step"
+            and r.get("weight_quant", "none") != "none"
+        ]
+        if not quant_rows:
+            print(
+                f"[check_bench] FAIL: {fresh_path} (schema ≥ 7) has no "
+                "quantized zo-step records (weight_quant != 'none')",
+            )
+            return 1
+        good_quant = [
+            r
+            for r in quant_rows
+            if r.get("weight_bytes_reduction", 0.0) >= QUANT_MIN_REDUCTION
+        ]
+        if not good_quant:
+            best = max(
+                (r.get("weight_bytes_reduction", 0.0) for r in quant_rows),
+                default=0.0,
+            )
+            print(
+                f"[check_bench] FAIL: no quantized record in {fresh_path} "
+                f"reaches weight_bytes_reduction ≥ {QUANT_MIN_REDUCTION} "
+                f"(best: {best}) — the packed-storage win regressed",
+            )
+            return 1
+    # the coverage ratchet, scoped per hardware: baseline combinations are
+    # binding only on hardware the fresh run actually executed on (a CPU CI
+    # runner can't reproduce a committed TPU leg — report, don't fail)
+    fresh_keys = record_keys(fresh)
+    fresh_hw = {k[4] for k in fresh_keys}
+    base_keys = record_keys(baseline)
+    binding = {k for k in base_keys if k[4] in fresh_hw}
+    skipped_hw = sorted({k[4] for k in base_keys} - fresh_hw)
+    if skipped_hw:
+        n_skipped = sum(1 for k in base_keys if k[4] in skipped_hw)
+        print(
+            f"[check_bench] note: {n_skipped} baseline combination(s) on "
+            f"other hardware {skipped_hw} are not binding for this run",
+        )
+    missing = sorted(binding - fresh_keys)
     if missing:
         print(
-            f"[check_bench] FAIL: {len(missing)} (method, kernel, mesh) "
-            "combination(s) in the committed baseline are missing from the "
-            "fresh run:",
+            f"[check_bench] FAIL: {len(missing)} (leg, method, kernel, mesh, "
+            "hardware, weight_quant) combination(s) in the committed "
+            "baseline are missing from the fresh run:",
         )
         for key in missing:
             print(f"  - {key}")
         return 1
-    extra = sorted(record_keys(fresh) - record_keys(baseline))
+    extra = sorted(fresh_keys - base_keys)
     extra_note = f" (+{len(extra)} new, not yet binding)" if extra else ""
     print(
-        f"[check_bench] OK: {len(record_keys(fresh))} combinations cover "
-        f"the baseline's {len(record_keys(baseline))}{extra_note}",
+        f"[check_bench] OK: {len(fresh_keys)} combinations cover "
+        f"the baseline's {len(binding)} binding{extra_note}",
     )
     return 0
 

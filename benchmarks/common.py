@@ -91,6 +91,8 @@ def zo_step_bytes_model(
     dtype_bytes: int = 2,      # bf16 weights
     state_bytes: int = 4,      # f32 dense moments
     probe_lanes: int | None = None,
+    weight_quant: str = "none",
+    n_quant_params: float = 0.0,
 ) -> float:
     """Estimated HBM bytes moved by the ZO step's perturb/update touches.
 
@@ -103,10 +105,21 @@ def zo_step_bytes_model(
     factored momentum is r·n — both negligible here).  ``probe_lanes``
     switches to the probe-parallel schedule's PER-REPLICA passes
     (2·ceil(q/D)+1 on the busiest lane — the walltime-relevant traffic).
+
+    ``weight_quant`` + ``n_quant_params`` (the QuantLeaf elements): the
+    TeZO family's perturb/update on a quantized leaf moves only the
+    r-vector temporal coefficient — ZERO weight-sized bytes — so those
+    elements drop out of every pass (the NO-DENSE-MATERIALIZATION property
+    tests/test_quant.py locks against this model).  The MeZO family still
+    round-trips its dense ``nacc`` buffer (weight dtype), so its per-pass
+    traffic is unchanged; quantization is a storage/forward win there, not
+    a ZO-pass one.
     """
     from repro.core.zo_step import zo_pass_count
 
-    P = n_params * dtype_bytes
+    quantized = weight_quant != "none" and method.startswith("tezo")
+    n_passed = n_params - n_quant_params if quantized else n_params
+    P = n_passed * dtype_bytes
     S = n_params * state_bytes
     touch = 2.0 * P if kernel_path == "pallas" else 4.0 * P
     total = zo_pass_count(q_probes, restore_mode, probe_lanes=probe_lanes) * touch
@@ -115,7 +128,9 @@ def zo_step_bytes_model(
     elif method in ("mezo_adam",):
         total += 4.0 * S
     elif method in ("tezo_adam",) and kernel_path == "xla":
-        total += 2.0 * P   # dense M and V reconstructions materialized
+        # dense M and V reconstructions materialized — quantized leaves run
+        # Adam in τ-space (r-vectors) and reconstruct nothing
+        total += 2.0 * P
     return total
 
 
@@ -137,6 +152,8 @@ def forward_bytes_model(
     seq_len: int,
     kernel_path: str,          # "pallas" | "xla"
     dtype_bytes: int = 2,      # bf16 activations/weights
+    weight_quant: str = "none",
+    n_quant_params: float = 0.0,
 ) -> float:
     L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
     B, S = batch, seq_len
@@ -155,4 +172,12 @@ def forward_bytes_model(
             ssm = 2.0 * B * Di * N * 4.0 * L              # one state round-trip
         else:
             ssm = 2.0 * B * Di * N * 4.0 * S * L          # per-timestep
-    return n_params * dtype_bytes + qkvo + scores + ssm
+    # weight stream: quantized leaves stream packed b-bit codes instead of
+    # dense elements (per-channel LUT/scale traffic is K× smaller — folded
+    # into the code term's round-up rather than modeled separately)
+    weights = (n_params - n_quant_params) * dtype_bytes
+    if n_quant_params:
+        from repro.core.quant import code_bytes_per_element
+
+        weights += n_quant_params * code_bytes_per_element(weight_quant)
+    return weights + qkvo + scores + ssm

@@ -11,12 +11,13 @@ Two measurements:
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit_csv, zo_memory_model
 from repro.configs import get_smoke_config
-from repro.core import ZOConfig, init_zo_state
+from repro.core import ZOConfig, init_zo_state, quant
 from repro.models import build_model
-from repro.utils.tree import tree_size_bytes
+from repro.utils.tree import map_with_path, tree_size_bytes
 
 METHODS = ["mezo", "mezo_m", "mezo_adam", "lozo", "subzo", "tezo", "tezo_m", "tezo_adam"]
 
@@ -26,6 +27,71 @@ PAPER_MODELS = [
     ("opt-13b", 13e9, 40 * 6 + 2, 5120, 10240),
     ("llama-7b", 6.7e9, 32 * 7 + 2, 4096, 8192),
 ]
+
+
+def weight_bytes_rows() -> list[dict]:
+    """Per-leaf WEIGHT storage from the arrays actually held, not the
+    analytic model: dense leaves report ``size × itemsize`` of their real
+    dtype, quantized leaves report packed codes + codebook + scale (+ nacc)
+    bytes via ``quant.stored_weight_bytes``.  ``vs_f16`` is the reduction
+    against a dense-f16 copy of the same leaf — the same baseline
+    ``table8_walltime``'s ``weight_bytes_reduction`` ratchets on."""
+    cfg = get_smoke_config("opt-125m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows: list[dict] = []
+    for scheme in ("none", "nf4", "lut3", "lut4"):
+        if scheme == "none":
+            qparams = params
+        else:
+            zo_cfg = ZOConfig(
+                method="tezo",
+                rank=8,
+                weight_quant=scheme,
+                factor_dtype=jnp.float32,
+            )
+            qparams = quant.quantize_for_config(
+                params, zo_cfg, jax.random.PRNGKey(1)
+            )
+        total_stored = 0
+        total_f16 = 0
+
+        def leaf_row(path: str, leaf) -> None:
+            nonlocal total_stored, total_f16
+            if isinstance(leaf, quant.QuantLeaf):
+                stored = quant.stored_weight_bytes(leaf)
+                packing = f"{leaf.bits}-bit codes"
+            else:
+                stored = leaf.size * jnp.dtype(leaf.dtype).itemsize
+                packing = str(jnp.dtype(leaf.dtype))
+            f16 = leaf.size * 2
+            total_stored += stored
+            total_f16 += f16
+            rows.append(
+                {
+                    "scope": "per-leaf",
+                    "weight_quant": scheme,
+                    "leaf": path,
+                    "packing": packing,
+                    "stored_bytes": stored,
+                    "dense_f16_bytes": f16,
+                    "vs_f16": round(f16 / stored, 3),
+                }
+            )
+
+        map_with_path(lambda p, leaf: (leaf_row(p, leaf), leaf)[1], qparams)
+        rows.append(
+            {
+                "scope": "total",
+                "weight_quant": scheme,
+                "leaf": "*",
+                "packing": "",
+                "stored_bytes": total_stored,
+                "dense_f16_bytes": total_f16,
+                "vs_f16": round(total_f16 / total_stored, 3),
+            }
+        )
+    return rows
 
 
 def run() -> list[dict]:
@@ -78,7 +144,9 @@ def run() -> list[dict]:
             }
         )
     emit_csv("table7_memory", rows)
-    return rows
+    wrows = weight_bytes_rows()
+    emit_csv("table7_weight_bytes", wrows)
+    return rows + wrows
 
 
 if __name__ == "__main__":

@@ -105,6 +105,14 @@ PP_Q = 2
 _CHILD_MARKER = "BENCH_SHARDED_JSON:"
 
 
+def _hardware_label() -> str:
+    """Schema-7 hardware tag: "cpu" / "gpu" / "tpu:<device_kind>".  Rows
+    from different hardware are never walltime-comparable, so check_bench
+    ratchets coverage per hardware value instead of globally."""
+    d = jax.devices()[0]
+    return f"tpu:{d.device_kind}" if d.platform == "tpu" else d.platform
+
+
 def _kernel_label(method: str, kernel_mode: str) -> str:
     resolved, interp = kernel_execution(method, kernel_mode)
     return "pallas-interpret" if resolved == "pallas" and interp else resolved
@@ -226,6 +234,99 @@ def _single_device_rows(widths, iters: int) -> list[dict]:
                         ),
                     }
                 )
+    return rows
+
+
+def _quant_storage_stats(params) -> tuple[int, int, int]:
+    """(n_quant_elements, stored_bytes, dense_f16_bytes) over the QuantLeaf
+    leaves of a quantized parameter tree.  The dense baseline is the paper's
+    fp16 storage (2 B/element) regardless of the bench model's dtype, so the
+    recorded ``weight_bytes_reduction`` is comparable across configs."""
+    from repro.core import quant
+    from repro.utils.tree import map_with_path
+
+    stats = {"n": 0, "stored": 0, "dense": 0}
+
+    def visit(path, leaf):
+        if isinstance(leaf, quant.QuantLeaf):
+            stats["n"] += leaf.size
+            stats["stored"] += quant.stored_weight_bytes(leaf)
+            stats["dense"] += leaf.size * 2
+        return leaf
+
+    map_with_path(visit, params)
+    return stats["n"], stats["stored"], stats["dense"]
+
+
+def quant_leg_rows(iters: int) -> list[dict]:
+    """The quantized-leaf leg (schema 7): tezo / tezo_adam / mezo on lut4
+    QuantLeaf weights, both lowerings, single device.
+
+    Runs at 8× smoke width (d_model 512) so the per-channel codebooks
+    amortize to a real packed-storage profile: the recorded
+    ``weight_bytes_reduction`` (dense-f16 bytes ÷ stored packed bytes over
+    the quantized leaves) must clear 3× for the TeZO rows — the number
+    check_bench ratchets on.  The bytes-moved model drops the quantized
+    elements from every TeZO-family ZO pass (perturb/update write the
+    r-vector ``acc`` only); the MeZO row keeps full per-pass traffic (its
+    dense ``nacc`` still round-trips) and is here for knob coverage, not a
+    storage claim."""
+    rows = []
+    shape = ShapeConfig("bench", seq_len=64, global_batch=4, kind="train")
+    width_mult = 8
+    base = get_smoke_config("opt-125m")
+    cfg = base.reduced(
+        d_model=base.d_model * width_mult,
+        d_ff=base.d_ff * width_mult,
+        head_dim=base.head_dim * width_mult,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = tree_num_params(params)
+    batch = model.make_inputs(jax.random.PRNGKey(1), shape)
+    for method in ("tezo", "tezo_adam", "mezo"):
+        for kernel_mode in ("xla", "pallas"):
+            zo_cfg = ZOConfig(
+                method=method, kernel_mode=kernel_mode, rank=16,
+                lr=1e-5, lazy_interval=50, weight_quant="lut4",
+            )
+            state = init_zo_state(params, zo_cfg)
+            n_quant, stored, dense_f16 = _quant_storage_stats(state.params)
+            step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
+            sec = time_fn(
+                lambda s=state, b=batch: step(s, b)[1]["loss"], iters=iters
+            )
+            resolved, _ = kernel_execution(method, kernel_mode)
+            rows.append(
+                {
+                    "leg": "zo-step",
+                    "model": f"{cfg.name}-x{width_mult}",
+                    "method": method,
+                    "kernel": _kernel_label(method, kernel_mode),
+                    "mesh": "1x1",
+                    "ms_per_iter": round(sec * 1e3, 2),
+                    "q_probes": zo_cfg.q_probes,
+                    "restore_mode": zo_cfg.restore_mode,
+                    "probe_parallel": False,
+                    "zo_passes": zo_pass_count(
+                        zo_cfg.q_probes, zo_cfg.restore_mode
+                    ),
+                    "weight_quant": zo_cfg.weight_quant,
+                    "quant_params": int(n_quant),
+                    "weight_bytes_reduction": round(dense_f16 / stored, 2),
+                    "bytes_moved_est_mb": round(
+                        zo_step_bytes_model(
+                            n_params, method, resolved,
+                            q_probes=zo_cfg.q_probes,
+                            restore_mode=zo_cfg.restore_mode,
+                            weight_quant=zo_cfg.weight_quant,
+                            n_quant_params=n_quant,
+                        ) / 2 ** 20,
+                        1,
+                    ),
+                }
+            )
+            jax.clear_caches()
     return rows
 
 
@@ -468,17 +569,31 @@ def run(
     sharded: bool = True,
 ) -> list[dict]:
     rows = _single_device_rows(widths, iters)
+    rows += quant_leg_rows(iters)
     rows += forward_leg_rows(iters)
     rows += serve_leg_rows()
     if sharded:
         rows += _sharded_leg_subprocess(iters)
+    # schema 7: every record is hardware-labeled — rows from different
+    # hardware are never comparable, and check_bench ratchets coverage per
+    # hardware value (the sharded child runs on this host, so one stamp
+    # covers every leg)
+    hw = _hardware_label()
+    for r in rows:
+        r.setdefault("hardware", hw)
     # the legs carry different columns — emit as separate CSV blocks
     # (probe-parallel zo-step rows have per_replica_passes instead of
-    # vs_mezo, so they get their own block too)
+    # vs_mezo, quantized rows carry weight_bytes_reduction)
     emit_csv(
         "table8_walltime",
         [r for r in rows
-         if r["leg"] == "zo-step" and not r.get("probe_parallel")],
+         if r["leg"] == "zo-step" and not r.get("probe_parallel")
+         and r.get("weight_quant", "none") == "none"],
+    )
+    emit_csv(
+        "table8_walltime_quant",
+        [r for r in rows
+         if r["leg"] == "zo-step" and r.get("weight_quant", "none") != "none"],
     )
     emit_csv(
         "table8_walltime_probe_parallel",
@@ -502,7 +617,12 @@ def run(
                 # schema 6: serve-leg rows (continuous-batching engine under
                 # Poisson arrival — tok_per_s, TTFT/TPOT percentiles,
                 # max_concurrent_decodes)
-                "schema": 6,
+                # schema 7: every record carries ``hardware`` ("cpu" /
+                # "tpu:<kind>"; coverage ratchets per hardware value) and a
+                # quantized zo-step leg (``weight_quant: "lut4"`` QuantLeaf
+                # rows with ``weight_bytes_reduction`` — packed storage vs
+                # dense f16 — and a packed-code-aware bytes-moved model)
+                "schema": 7,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter

@@ -34,6 +34,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import QuantLeaf
 from repro.utils.tree import fold_in_path, map_with_path
 
 
@@ -96,6 +97,25 @@ def init_factors(
     factors: FactorTree = {}
 
     def make(path: str, leaf: Any) -> Any:
+        if isinstance(leaf, QuantLeaf):
+            # quantized leaves carry their frozen factors (drawn at
+            # quantize time from the SAME (key, path+"#u"/"#v") streams
+            # used below, so they equal the dense run's) — reuse them so
+            # the acc accumulated on the leaf and the τ sampled from the
+            # factor table agree on rank and batch shape
+            if rank_masks is not None and path in rank_masks:
+                raise ValueError(
+                    f"rank_masks on quantized leaf {path}: per-layer rank "
+                    "masks are unsupported with weight_quant"
+                )
+            # COPIES, not references: the train state donates its buffers,
+            # and a buffer reachable both as params...qu and factors[path].u
+            # would be donated twice.  Cost matches the dense run's factor
+            # storage exactly.
+            factors[path] = CPDFactor(
+                u=jnp.array(leaf.qu), v=jnp.array(leaf.qv), rank_mask=None
+            )
+            return leaf
         if not is_lowrank_leaf(path, leaf):
             return leaf  # ignored; we only collect into `factors`
         r = _leaf_rank(path, leaf, ranks, default_rank)

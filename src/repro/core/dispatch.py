@@ -104,6 +104,7 @@ from repro.core.cpd import (
     reconstruct,
     reconstruct_squared,
 )
+from repro.core.quant import QuantLeaf, scaled_lut
 from repro.kernels import fence, ops
 from repro.kernels.zo_noise import MAX_ROWS
 
@@ -316,6 +317,83 @@ def noise_kernel_eligible(w: jax.Array) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# QuantLeaf leaf-op protocol
+# ---------------------------------------------------------------------------
+#
+# A ``core.quant.QuantLeaf`` is an atomic pytree leaf that stands in for a
+# dense ``[..., K, N]`` weight: packed b-bit codes + per-channel LUT
+# (frozen), the CPD factors qu/qv (frozen), an r-vector ``acc`` (the
+# accumulated temporal coefficient — the leaf's ONLY TeZO-family mutable
+# state) and, for the MeZO family, a dense ``nacc`` delta buffer.  Every
+# leaf op in this module accepts a QuantLeaf wherever it accepts a dense
+# leaf and branches FIRST on the leaf kind, so the estimator closures are
+# lowering- and representation-agnostic:
+#
+#   * TeZO-family ops (perturb/pair/chain/sgd_update/adam_update): the
+#     delta ``scale·recon(τ)`` is closed in τ-space — ``acc += scale·τ``
+#     via :func:`add_scaled` on the r-vector, one fenced f32 add per
+#     logical delta.  ZERO weight-sized bytes move on any of the 2q+1
+#     passes; the perturbed weight materializes only inside the forward's
+#     dequant tile (:func:`quant_matmul_fwd`).  Because each chained delta
+#     is the same fenced f32 add the unchained schedule performs, the
+#     chained/unchained and probe-parallel contracts hold BITWISE on both
+#     lowerings (there is no weight-dtype rounding at all on this path).
+#     TeZO-Adam's second-moment normalization applies in τ-space
+#     (upd = τ_m·rsqrt(τ_v + ε) — the factorwise preconditioner), a
+#     documented deviation from the dense leaf's elementwise Eq.-8
+#     reconstruction.
+#   * MeZO-family noise ops: route to the same op on ``nacc`` (which has
+#     the dense leaf's shape, dtype and tree path, so the global-coordinate
+#     PRNG contract and the 2q+1 pass structure are preserved verbatim) and
+#     rewrap.  This keeps the knob uniform; it is not a traffic win.
+#   * Weight decay is rejected: decay scales the frozen packed base, which
+#     neither τ-space nor nacc can express (``quant.validate_quant_config``
+#     raises at build time; the guards here are the trace-time backstop).
+#   * LOZO/SubZO never see QuantLeaves (``quant.QUANT_METHODS`` excludes
+#     them at init).
+#
+# Sharding: the quant ops are plain jnp — GSPMD partitions them (acc is
+# replicated-or-batch-sharded like any τ vector; nacc rides the dense
+# leaf's spec) — so none of them consult the shard context.
+
+
+def _quant_no_decay(decay) -> None:
+    if decay is not None:
+        raise ValueError(
+            "weight decay is unsupported on quantized leaves (it scales the "
+            "frozen packed base) — quant.validate_quant_config rejects this "
+            "at build time"
+        )
+
+
+def _quant_nacc(w: QuantLeaf) -> jax.Array:
+    if w.nacc is None:
+        raise ValueError(
+            "dense-noise op on a QuantLeaf without a noise buffer: "
+            "quantize with with_nacc=True (MeZO-family methods) — "
+            "see core.quant.quantize_for_config"
+        )
+    return w.nacc
+
+
+def _quant_acc_chain(w: QuantLeaf, taus, scales, decay=None) -> QuantLeaf:
+    """Apply k τ-space deltas ``acc += scaleᵢ·τᵢ`` in chain order — each via
+    the same fenced f32 ``add_scaled`` the dense XLA path uses, so the
+    grouping (chained vs unchained vs probe-parallel) never changes the
+    rounding."""
+    if decay is not None:
+        raise ValueError(
+            "weight decay is unsupported on quantized leaves (it scales the "
+            "frozen packed base) — quant.validate_quant_config rejects this "
+            "at build time"
+        )
+    acc = w.acc
+    for tau, s in zip(taus, scales):
+        acc = add_scaled(acc, tau, s)
+    return w.replace(acc=acc)
+
+
+# ---------------------------------------------------------------------------
 # TeZO family leaf ops (factors from HBM, τ from the step key)
 # ---------------------------------------------------------------------------
 
@@ -354,8 +432,12 @@ def perturb_leaf(
 
     Kernel path: fused HBM-resident add (Z never materialized); under a
     shard context each device touches only its local shard.  XLA path:
-    dense reconstruct + f32 add (the pre-dispatch behaviour).
+    dense reconstruct + f32 add (the pre-dispatch behaviour).  QuantLeaf:
+    the delta closes in τ-space — ``acc += scale·τ``, zero weight bytes
+    (see the QuantLeaf protocol section above).
     """
+    if isinstance(w, QuantLeaf):
+        return _quant_acc_chain(w, [tau], [scale])
     if use_kernel and kernel_eligible(factor, w):
         return _tezo_kernel_call(w, factor, tau, scale, None, path)
     return add_scaled(w, reconstruct(factor, tau), scale)
@@ -384,7 +466,11 @@ def perturb_pair_leaf(
     between the deltas, so the result is bitwise identical to two
     ``perturb_leaf`` passes at half the HBM traffic.  XLA path: two dense
     adds (identical arithmetic to the unchained calls, for parity).
+    QuantLeaf: two τ-space adds, bitwise identical to two ``perturb_leaf``
+    calls by construction.
     """
+    if isinstance(w, QuantLeaf):
+        return _quant_acc_chain(w, [tau_a, tau_b], [scale_a, scale_b])
     if use_kernel and kernel_eligible(factor, w):
         scales = jnp.stack([_scalar_f32(scale_a), _scalar_f32(scale_b)])
         return _tezo_kernel_call(
@@ -419,8 +505,10 @@ def perturb_chain_leaf(
 
     Kernel path: the stacked-τ chain kernel rounds to the weight dtype
     between deltas, bitwise identical to k single ``perturb_leaf`` passes.
-    XLA path: the same k dense adds.
+    XLA path: the same k dense adds.  QuantLeaf: the same k τ-space adds.
     """
+    if isinstance(w, QuantLeaf):
+        return _quant_acc_chain(w, list(taus), list(scales))
     if use_kernel and kernel_eligible(factor, w):
         scale_arr = jnp.stack([_scalar_f32(s) for s in scales])
         return _tezo_kernel_call(
@@ -458,7 +546,16 @@ def sgd_update_leaf(
     the same two dense adds.  A list/tuple ``restore_tau`` (with matching
     scales) is a multi-delta restore chain — the probe-parallel trajectory
     restore — applied delta by delta before the update in the same pass.
+    QuantLeaf: the restore chain and the −lr·κτ descent delta are all
+    τ-space adds on ``acc``.
     """
+    if isinstance(w, QuantLeaf):
+        taus, scales = [], []
+        if restore_tau is not None:
+            taus, scales = _chain_restores(restore_tau, restore_scale)
+        return _quant_acc_chain(
+            w, taus + [ktau], scales + [-_scalar_f32(lr)], decay
+        )
     if use_kernel and kernel_eligible(factor, w):
         if restore_tau is not None:
             if isinstance(restore_tau, (list, tuple)):
@@ -506,7 +603,22 @@ def adam_update_leaf(
     the decoupled weight decay rides the same pass.  ``restore_tau`` +
     ``restore_scale`` fold the chained +ρ·recon(τ_q) restore into the same
     pass (applied before the Adam math, with the replaced pass's rounding).
+
+    QuantLeaf: the Adam normalization applies in τ-space — the restore
+    chain adds on ``acc``, then ``acc += −lr·τ_m·rsqrt(τ_v + ε)`` (the
+    factorwise preconditioner; a documented deviation from the dense
+    leaf's elementwise Eq.-8 reconstruction — see the protocol section).
     """
+    if isinstance(w, QuantLeaf):
+        taus, scales = [], []
+        if restore_tau is not None:
+            taus, scales = _chain_restores(restore_tau, restore_scale)
+        upd = tau_m.astype(jnp.float32) * jax.lax.rsqrt(
+            tau_v.astype(jnp.float32) + eps
+        )
+        return _quant_acc_chain(
+            w, taus + [upd], scales + [-_scalar_f32(lr)], decay
+        )
     if use_kernel and kernel_eligible(factor, w):
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
         lr_a = _scalar_f32(lr)
@@ -591,8 +703,14 @@ def noise_perturb_leaf(
     ``jax.random.normal`` dense buffer + f32 add.  The two streams differ
     (statistical parity only) but each is a pure function of (key_t, path,
     probe, global coords), so all three Algorithm-1 passes and the update
-    replay the same z within a mode.
+    replay the same z within a mode.  QuantLeaf: the op applies to the
+    leaf's dense ``nacc`` delta buffer (same shape/dtype/path as the dense
+    leaf it replaced — identical noise streams and pass structure).
     """
+    if isinstance(w, QuantLeaf):
+        return w.replace(nacc=noise_perturb_leaf(
+            _quant_nacc(w), key_t, path, probe, scale, use_kernel=use_kernel
+        ))
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
@@ -622,8 +740,13 @@ def noise_perturb_pair_leaf(
     (identical per-probe counter streams), half the HBM traffic; global-
     coordinate seeding keeps it mesh-layout-invariant like the single-draw
     op.  XLA path: two dense ``jax.random`` adds, identical arithmetic to
-    the unchained calls.
+    the unchained calls.  QuantLeaf: applies to ``nacc``.
     """
+    if isinstance(w, QuantLeaf):
+        return w.replace(nacc=noise_perturb_pair_leaf(
+            _quant_nacc(w), key_t, path, probe_a, scale_a, probe_b, scale_b,
+            use_kernel=use_kernel,
+        ))
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
@@ -655,7 +778,11 @@ def noise_perturb_chain_leaf(
     path: the multi-draw kernel generates every probe's z in the same tile
     visit (one W round-trip), bitwise identical to k ``noise_perturb_leaf``
     passes; global-coordinate seeding keeps it mesh-layout-invariant.  XLA
-    path: the same k dense adds."""
+    path: the same k dense adds.  QuantLeaf: applies to ``nacc``."""
+    if isinstance(w, QuantLeaf):
+        return w.replace(nacc=noise_perturb_chain_leaf(
+            _quant_nacc(w), key_t, path, probes, scales, use_kernel=use_kernel
+        ))
     probes_t = tuple(probes)
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
@@ -709,7 +836,14 @@ def noise_sgd_update_leaf(
     leaf, probe mean and weight decay fused in-kernel on the pallas path.
     ``restore_probe`` folds the chained +restore_scale·z restore into the
     same pass (one extra on-chip draw; bitwise identical to the separate
-    restore on both lowerings)."""
+    restore on both lowerings).  QuantLeaf: applies to ``nacc`` (decay is
+    rejected upstream — it would scale the frozen packed base)."""
+    if isinstance(w, QuantLeaf):
+        _quant_no_decay(decay)
+        return w.replace(nacc=noise_sgd_update_leaf(
+            _quant_nacc(w), key_t, path, kappas, lr, use_kernel=use_kernel,
+            restore_probe=restore_probe, restore_scale=restore_scale,
+        ))
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
@@ -747,7 +881,16 @@ def noise_momentum_update_leaf(
 
     Returns (w', m').  Kernel path fuses the probe mean, the moment update,
     the weight decay, the weight update — and, when ``restore_probe`` is
-    set, the chained restore — into one pass over (W, M)."""
+    set, the chained restore — into one pass over (W, M).  QuantLeaf:
+    applies to ``nacc`` (the f32 moment buffer is dense either way)."""
+    if isinstance(w, QuantLeaf):
+        _quant_no_decay(decay)
+        nacc, m_new = noise_momentum_update_leaf(
+            _quant_nacc(w), m_buf, key_t, path, kappas, lr, beta1,
+            use_kernel=use_kernel, restore_probe=restore_probe,
+            restore_scale=restore_scale,
+        )
+        return w.replace(nacc=nacc), m_new
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
@@ -785,7 +928,16 @@ def noise_adam_update_leaf(
 ):
     """Dense Adam step for one leaf; returns (w', m', v').  Kernel path
     makes one HBM round-trip per buffer instead of materializing g; the
-    chained restore rides the same pass when ``restore_probe`` is set."""
+    chained restore rides the same pass when ``restore_probe`` is set.
+    QuantLeaf: applies to ``nacc``."""
+    if isinstance(w, QuantLeaf):
+        _quant_no_decay(decay)
+        nacc, m_new, v_new = noise_adam_update_leaf(
+            _quant_nacc(w), m_buf, v_buf, key_t, path, kappas, lr,
+            beta1, beta2, eps, use_kernel=use_kernel,
+            restore_probe=restore_probe, restore_scale=restore_scale,
+        )
+        return w.replace(nacc=nacc), m_new, v_new
     if use_kernel and noise_kernel_eligible(w):
         seed = ops.leaf_seed(key_t, path)
         mesh, spec = _leaf_mesh_spec(path, w.ndim)
@@ -1279,3 +1431,79 @@ def selective_scan_fwd(
         with jax.named_scope("PALLAS_FLASH_REGION"):
             return selective_scan_ref(x, dt, a, b, c, h0)
     return selective_scan_ref(x, dt, a, b, c, h0)
+
+
+def _quant_matmul_ref(x: jax.Array, w: QuantLeaf) -> jax.Array:
+    """XLA gather-twin of the fused LUT-dequant matmul: dequantize through
+    ``take_along_axis`` (a real gather — the lowering Mosaic can't take,
+    which is why the kernel uses select-sum) and contract densely.  The
+    dequantized tile values are bit-identical to the kernel's select-sum,
+    so kernel-vs-twin parity is a dot-accumulation tolerance, not a
+    quantization tolerance."""
+    from repro.core.quant import dequantize
+
+    xf = x.astype(jnp.float32)
+    wd = dequantize(w).astype(jnp.float32)              # [..., K, N]
+    out = jnp.einsum(
+        "...k,...kn->...n", xf, wd, preferred_element_type=jnp.float32
+    )
+    ut = w.qu * w.acc[..., None, :]                      # [..., K, r]
+    xu = jnp.einsum(
+        "...k,...kr->...r", xf, ut, preferred_element_type=jnp.float32
+    )
+    out = out + jnp.einsum(
+        "...r,...nr->...n", xu, w.qv, preferred_element_type=jnp.float32
+    )
+    if w.nacc is not None:
+        out = out + jnp.einsum(
+            "...k,...kn->...n", xf, w.nacc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    return out.astype(x.dtype)
+
+
+def quant_matmul_fwd(x: jax.Array, w: QuantLeaf, *, mode: str = "auto") -> jax.Array:
+    """``x @ W_eff`` for a quantized leaf — the forward half of the
+    QuantLeaf protocol (models call this via ``layers.weight_matmul``).
+
+    ``W_eff = dequant(codes) + qu·diag(acc)·qvᵀ [+ nacc]`` is NEVER
+    materialized in HBM on the kernel path: the Pallas kernel
+    (kernels/quant_matmul) loads the packed b-bit code tile, dequants
+    through the per-channel LUT in-tile, and folds the temporal-factor
+    delta via the precomputed ``xu = x @ (qu·acc)`` half — so per-pass
+    weight traffic is the packed codes (b/16 of the bf16 bytes) plus
+    r-fraction noise.  Off-TPU the XLA gather-twin runs inside the
+    ``PALLAS_FLASH_REGION`` marker, same costing convention as the other
+    forward kernels.  The MeZO-family ``nacc`` delta (dense, trainable)
+    is applied as a separate XLA matmul on both paths — it is state
+    traffic, not weight-materialization traffic.
+
+    No shard_map wrap: the call sites sit under the model's ``lax.scan``
+    with per-layer (unbatched) leaves; a tensor-parallel sharded quant
+    forward on a real mesh is an open-item-1 follow-on (GSPMD replicates
+    the pallas_call there — correct, not fast).  Batched leaves always
+    take the twin.
+    """
+    path, kernel = forward_execution(mode)
+    if path == "pallas" and kernel and w.codes.ndim == 2:
+        lead = x.shape[:-1]
+        x2 = x.reshape((-1, x.shape[-1]))
+        xf = x2.astype(jnp.float32)
+        ut = (w.qu * w.acc[..., None, :]).astype(jnp.float32)
+        xu = jnp.dot(xf, ut, preferred_element_type=jnp.float32)
+        out = ops.quant_matmul(
+            x2, w.codes, scaled_lut(w), xu, w.qv, bits=w.bits
+        )
+        if w.nacc is not None:
+            out = (
+                out.astype(jnp.float32)
+                + jnp.dot(
+                    xf, w.nacc.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+            ).astype(x.dtype)
+        return out.reshape(lead + (out.shape[-1],))
+    if path == "pallas":
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return _quant_matmul_ref(x, w)
+    return _quant_matmul_ref(x, w)

@@ -103,6 +103,13 @@ class ZOConfig:
     adaptive_q: bool = False       # AdaZeta-style host-level q growth gated
     #                                on the κ-variance estimate (core.adaptive)
     q_max: int = 16                # adaptive-q growth cap
+    weight_quant: str = "none"     # none | nf4 | lut3 | lut4 — pack the
+    #                                transformer block weights as b-bit LUT
+    #                                codes (core.quant.QuantLeaf); TeZO-family
+    #                                updates then close in τ-space and the
+    #                                forward dequants in-tile.  Restricted to
+    #                                quant.QUANT_METHODS, weight_decay == 0,
+    #                                rank_mode == "const"
     factor_dtype: Any = jnp.float32
     lr_schedule: str = "const"     # const | cosine | linear_warmup_cosine
     warmup_steps: int = 0

@@ -1,0 +1,398 @@
+"""Quantized weight leaves: SqueezeLLM-style per-channel LUT quantization.
+
+ZO fine-tuning needs no backward pass, so the frozen base weights never
+need gradients — they can live in HBM as 3/4-bit LUT-quantized blocks
+while every trainable quantity stays f32.  This module owns the leaf type
+and the pack/quantize math; the *compute* on quantized leaves lives in
+``core.dispatch`` (leaf-op protocol) and ``kernels/quant_matmul.py`` (the
+fused in-tile dequant matmul).
+
+Representation (one ``QuantLeaf`` replaces one dense ``[..., K, N]`` leaf):
+
+  * ``codes``     uint32 ``[..., Kw, N]`` — plane-strided packed b-bit codes,
+                  ``cpw = 32 // bits`` codes per word.  Word row ``i`` packs
+                  dense rows ``{s·Kw + i : s < cpw}`` at bit offset ``b·s``
+                  (a C-order reshape of the padded ``[Kp, N]`` code matrix to
+                  ``[cpw, Kw, N]``), so a kernel tile unpacks with ``cpw``
+                  shift-and-mask ops and one concatenate — no gathers.
+  * ``codebook``  f32 ``[..., N, 2**bits]`` — per-output-channel LUT in
+                  *normalized* units (nf4: the fixed NormalFloat table;
+                  lut3/lut4: per-channel quantiles of w/scale).
+  * ``scale``     f32 ``[..., N]`` — per-channel absmax.  Dequant of code
+                  ``c`` in channel ``n`` is ``scale[n] · codebook[n, c]``.
+  * ``qu, qv``    f32 ``[..., K, r]`` / ``[..., N, r]`` — the frozen CPD
+                  model-dimension factors, drawn at quantize time with the
+                  *same* (key, path) streams ``cpd.init_factors`` uses, so a
+                  quantized run perturbs with bitwise the same Z as dense.
+  * ``acc``       f32 ``[..., r]`` — the accumulated temporal coefficient:
+                  the leaf's *entire* mutable state for the TeZO family.
+                  The effective weight is
+                  ``W_eff = dequant(codes) + (qu · diag(acc)) @ qvᵀ``;
+                  perturb/update touch only ``acc`` (r floats), so the 2q+1
+                  chained passes move ZERO weight bytes for quantized leaves.
+  * ``nacc``      optional dense ``[..., K, N]`` (weight dtype) — the
+                  accumulated MeZO-style dense delta, present only when the
+                  method draws dense noise (mezo / mezo_m / mezo_adam).  It
+                  reuses the leaf's path, so the global-coordinate PRNG
+                  streams match the dense run bitwise.
+
+K is zero-padded to a multiple of ``lcm(cpw, 128)`` before packing so the
+packed row count is both integral and lane-aligned for the Pallas tile
+(pad rows carry code 0; the matmul's x operand is zero-padded over the
+same rows, so they are inert).
+
+``QuantLeaf`` is a registered pytree node AND a registered *atomic* leaf
+(``utils.tree.register_atomic_leaf``): path-keyed machinery — per-leaf PRNG
+streams, the factor table, dispatch — addresses it exactly like the dense
+leaf it replaced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import fold_in_path, map_with_path, register_atomic_leaf
+
+# scheme name -> code width in bits
+SCHEMES = {"nf4": 4, "lut3": 3, "lut4": 4}
+
+# methods whose update path composes with quantized leaves: the TeZO family
+# writes τ-space (acc), the MeZO family writes the dense nacc buffer.
+# LOZO/SubZO lazily rewrite U/V against dense W and are excluded.
+QUANT_METHODS = ("tezo", "tezo_m", "tezo_adam", "mezo", "mezo_m", "mezo_adam")
+NOISE_QUANT_METHODS = ("mezo", "mezo_m", "mezo_adam")
+
+# transformer block weights eligible for quantization (everything that is a
+# plain [L, K, N] matmul operand in models/transformer.py; embeddings,
+# lm_head, norms, router and MoE expert stacks stay dense)
+QUANT_FIELDS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+# QLoRA's NormalFloat-4 table: quantiles of N(0, 1) rescaled to [-1, 1].
+NF4_TABLE = (
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+)
+
+
+def codes_per_word(bits: int) -> int:
+    return 32 // bits
+
+
+def pack_align(bits: int) -> int:
+    """Row-count multiple K is padded to before packing: integral words
+    (cpw | Kp) and a lane-aligned x tile (128 | Kp)."""
+    return math.lcm(codes_per_word(bits), 128)
+
+
+def packed_rows(k: int, bits: int) -> tuple[int, int]:
+    """(Kp, Kw): padded dense rows and packed word rows for a K-row leaf."""
+    align = pack_align(bits)
+    kp = ((k + align - 1) // align) * align
+    return kp, kp // codes_per_word(bits)
+
+
+@dataclass(frozen=True)
+class QuantLeaf:
+    codes: jax.Array                # uint32 [..., Kw, N]
+    codebook: jax.Array             # f32   [..., N, 2**bits], normalized
+    scale: jax.Array                # f32   [..., N]
+    qu: jax.Array                   # f32   [..., K, r]
+    qv: jax.Array                   # f32   [..., N, r]
+    acc: jax.Array                  # f32   [..., r]
+    nacc: Optional[jax.Array]       # weight-dtype [..., K, N] or None
+    bits: int
+    k_dim: int
+    dtype_name: str
+    qmethod: str
+
+    # --- logical dense view ------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.codes.shape[:-2]) + (self.k_dim, self.codes.shape[-1])
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_name)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def rank(self) -> int:
+        return self.qu.shape[-1]
+
+    def replace(self, **kw) -> "QuantLeaf":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    QuantLeaf,
+    data_fields=["codes", "codebook", "scale", "qu", "qv", "acc", "nacc"],
+    meta_fields=["bits", "k_dim", "dtype_name", "qmethod"],
+)
+register_atomic_leaf(QuantLeaf)
+
+
+# --- pack / unpack ---------------------------------------------------------
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """[..., K, N] integer codes -> uint32 [..., Kw, N] plane-strided words."""
+    cpw = codes_per_word(bits)
+    k = codes.shape[-2]
+    kp, kw = packed_rows(k, bits)
+    pad = [(0, 0)] * (codes.ndim - 2) + [(0, kp - k), (0, 0)]
+    c = jnp.pad(codes.astype(jnp.uint32), pad)
+    planes = c.reshape(c.shape[:-2] + (cpw, kw, c.shape[-1]))
+    word = jnp.zeros(planes.shape[:-3] + planes.shape[-2:], jnp.uint32)
+    for s in range(cpw):
+        word = word | (planes[..., s, :, :] << jnp.uint32(bits * s))
+    return word
+
+
+def unpack_codes(words: jax.Array, bits: int, k: int) -> jax.Array:
+    """uint32 [..., Kw, N] -> int32 [..., K, N] codes (crops the pack pad)."""
+    cpw = codes_per_word(bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    planes = [
+        (words >> jnp.uint32(bits * s)) & mask for s in range(cpw)
+    ]
+    codes = jnp.concatenate(planes, axis=-2)
+    return codes[..., :k, :].astype(jnp.int32)
+
+
+def scaled_lut(leaf: QuantLeaf) -> jax.Array:
+    """Per-channel dequant table in weight units: f32 [..., N, 2**bits]."""
+    return leaf.codebook * leaf.scale[..., :, None]
+
+
+def dequantize(leaf: QuantLeaf) -> jax.Array:
+    """Reference dense reconstruction of the *frozen* quantized base (does
+    NOT include the acc/nacc deltas — see ``effective_weight``)."""
+    codes = unpack_codes(leaf.codes, leaf.bits, leaf.k_dim)   # [..., K, N]
+    lut = scaled_lut(leaf)                                     # [..., N, L]
+    ct = jnp.moveaxis(codes, -2, -1)                           # [..., N, K]
+    w = jnp.take_along_axis(lut, ct, axis=-1)                  # [..., N, K]
+    return jnp.moveaxis(w, -2, -1).astype(leaf.dtype)
+
+
+def effective_weight(leaf: QuantLeaf) -> jax.Array:
+    """Dense W_eff = dequant(codes) + (qu·diag(acc))@qvᵀ [+ nacc] — the
+    weight the forward path computes against, materialized (test/debug
+    oracle only; the kernel path never builds this in HBM)."""
+    w = dequantize(leaf).astype(jnp.float32)
+    ut = leaf.qu * leaf.acc[..., None, :]
+    w = w + jnp.einsum(
+        "...kr,...nr->...kn", ut, leaf.qv, preferred_element_type=jnp.float32
+    )
+    if leaf.nacc is not None:
+        w = w + leaf.nacc.astype(jnp.float32)
+    return w.astype(leaf.dtype)
+
+
+# --- quantization ----------------------------------------------------------
+
+def _channel_codebook(wn: jax.Array, bits: int, scheme: str) -> jax.Array:
+    """Normalized per-channel LUT for ``wn = w / scale`` [..., K, N]:
+    nf4 = the fixed NormalFloat table, lut3/lut4 = per-channel quantile
+    (sensitivity-agnostic SqueezeLLM-style density fit)."""
+    n = wn.shape[-1]
+    batch = wn.shape[:-2]
+    levels = 1 << bits
+    if scheme == "nf4":
+        table = jnp.asarray(NF4_TABLE, jnp.float32)
+        return jnp.broadcast_to(table, batch + (n, levels))
+    qs = (jnp.arange(levels, dtype=jnp.float32) + 0.5) / levels
+    cb = jnp.quantile(wn, qs, axis=-2)          # [levels, ..., N]
+    return jnp.moveaxis(cb, 0, -1)              # [..., N, levels]
+
+
+def _assign_codes(wn: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-entry assignment, streamed over the (≤16) LUT entries so the
+    [..., K, N, L] distance tensor is never materialized."""
+    levels = codebook.shape[-1]
+    best = jnp.full(wn.shape, jnp.inf, jnp.float32)
+    codes = jnp.zeros(wn.shape, jnp.int32)
+    for j in range(levels):
+        err = jnp.abs(wn - codebook[..., j][..., None, :])
+        better = err < best
+        best = jnp.where(better, err, best)
+        codes = jnp.where(better, j, codes)
+    return codes
+
+
+def quantize_leaf(
+    w: jax.Array,
+    *,
+    scheme: str,
+    rank: int,
+    key: jax.Array,
+    path: str,
+    with_nacc: bool = False,
+) -> QuantLeaf:
+    """Quantize one dense [..., K, N] leaf.  Pure jnp (traceable, so
+    ``jax.eval_shape`` dryruns see the packed shapes without doing work).
+
+    qu/qv are drawn from ``fold_in_path(key, path + "#u"/"#v")`` — the exact
+    streams ``cpd.init_factors`` uses for this path — so the quantized run's
+    perturbation directions match the dense run's bitwise.
+    """
+    bits = SCHEMES[scheme]
+    k, n = w.shape[-2], w.shape[-1]
+    batch = w.shape[:-2]
+    wf = w.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(wf), axis=-2), 1e-8)   # [..., N]
+    wn = wf / scale[..., None, :]
+    codebook = _channel_codebook(wn, bits, scheme)
+    codes = pack_codes(_assign_codes(wn, codebook), bits)
+    r = max(1, min(rank, k, n))
+    qu = jax.random.normal(
+        fold_in_path(key, path + "#u"), batch + (k, r), dtype=jnp.float32
+    )
+    qv = jax.random.normal(
+        fold_in_path(key, path + "#v"), batch + (n, r), dtype=jnp.float32
+    )
+    acc = jnp.zeros(batch + (r,), jnp.float32)
+    nacc = jnp.zeros(batch + (k, n), w.dtype) if with_nacc else None
+    return QuantLeaf(
+        codes=codes,
+        codebook=codebook,
+        scale=scale,
+        qu=qu,
+        qv=qv,
+        acc=acc,
+        nacc=nacc,
+        bits=bits,
+        k_dim=k,
+        dtype_name=jnp.dtype(w.dtype).name,
+        qmethod=scheme,
+    )
+
+
+def is_quant_target(path: str, leaf: Any) -> bool:
+    """Transformer block matmul weights only: stacked [L, K, N] leaves whose
+    field name is in QUANT_FIELDS."""
+    if isinstance(leaf, QuantLeaf) or getattr(leaf, "ndim", 0) != 3:
+        return False
+    if min(leaf.shape[-2:]) < 8:
+        return False
+    return any(path.endswith(f"['{f}']") for f in QUANT_FIELDS)
+
+
+def quantize_params(
+    params: Any,
+    *,
+    scheme: str,
+    rank: int,
+    key: jax.Array,
+    with_nacc: bool = False,
+) -> Any:
+    """Replace every eligible dense leaf with a QuantLeaf (other leaves pass
+    through untouched and keep dense-path semantics)."""
+    hit = []
+
+    def q(path: str, leaf: Any) -> Any:
+        if not is_quant_target(path, leaf):
+            return leaf
+        hit.append(path)
+        return quantize_leaf(
+            leaf, scheme=scheme, rank=rank, key=key, path=path,
+            with_nacc=with_nacc,
+        )
+
+    out = map_with_path(q, params)
+    if not hit:
+        raise ValueError(
+            f"weight_quant={scheme!r} matched no leaves: quantization covers "
+            f"transformer block weights {QUANT_FIELDS} (stacked [L, K, N]); "
+            "this parameter tree has none"
+        )
+    return out
+
+
+def validate_quant_config(cfg) -> None:
+    """Eager compatibility checks for ``ZOConfig.weight_quant`` (raise at
+    build time, not mid-trace)."""
+    if cfg.weight_quant == "none":
+        return
+    if cfg.weight_quant not in SCHEMES:
+        raise ValueError(
+            f"weight_quant={cfg.weight_quant!r}: expected one of "
+            f"{('none',) + tuple(SCHEMES)}"
+        )
+    if cfg.method not in QUANT_METHODS:
+        raise ValueError(
+            f"weight_quant={cfg.weight_quant!r} supports methods "
+            f"{QUANT_METHODS}; got {cfg.method!r} (LOZO/SubZO lazily rewrite "
+            "factors against dense W and do not compose with packed leaves)"
+        )
+    if cfg.weight_decay:
+        raise ValueError(
+            "weight_quant with weight_decay != 0 is unsupported: decay "
+            "multiplies the frozen packed base, which the factor-space "
+            "update path cannot express"
+        )
+    if getattr(cfg, "rank_mode", "const") == "spectral":
+        raise ValueError(
+            "weight_quant with rank_mode='spectral' is unsupported: spectral "
+            "rank selection inspects dense W at init"
+        )
+    if jnp.dtype(cfg.factor_dtype) != jnp.float32:
+        raise ValueError(
+            "weight_quant requires factor_dtype=float32: quantized leaves "
+            "carry their qu/qv in f32, and jax.random.normal draws different "
+            f"bits per dtype (got factor_dtype={cfg.factor_dtype})"
+        )
+
+
+def quantize_for_config(params: Any, cfg, key: jax.Array) -> Any:
+    """The init-time hook ``zo_step.init_zo_state`` calls: validate the
+    config and quantize the eligible leaves."""
+    validate_quant_config(cfg)
+    if cfg.weight_quant == "none":
+        return params
+    return quantize_params(
+        params,
+        scheme=cfg.weight_quant,
+        rank=cfg.rank,
+        key=key,
+        with_nacc=cfg.method in NOISE_QUANT_METHODS,
+    )
+
+
+# --- storage accounting (benchmarks / table7) ------------------------------
+
+def code_bytes_per_element(scheme: str) -> float:
+    """Packed-code bytes per dense weight element (4-byte words / cpw)."""
+    return 4.0 / codes_per_word(SCHEMES[scheme])
+
+
+def stored_weight_bytes(leaf: QuantLeaf) -> int:
+    """Bytes this leaf actually stores *in place of* the dense weight:
+    packed codes + codebook + scale (+ nacc when present).  qu/qv are
+    excluded — they are the CPD factor state a dense TeZO run carries too."""
+    n = (
+        leaf.codes.size * 4
+        + leaf.codebook.size * 4
+        + leaf.scale.size * 4
+    )
+    if leaf.nacc is not None:
+        n += leaf.nacc.size * jnp.dtype(leaf.nacc.dtype).itemsize
+    return n
+
+
+def dense_weight_bytes(leaf: Any) -> int:
+    """Dense-equivalent storage of any leaf (QuantLeaf: its logical view)."""
+    return leaf.size * jnp.dtype(leaf.dtype).itemsize

@@ -106,7 +106,7 @@ from typing import Any, Callable, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import dispatch
+from repro.core import dispatch, quant
 from repro.core.dispatch import resolve_kernel_mode
 from repro.core.estimator import ZOConfig, get_method
 
@@ -167,6 +167,19 @@ def init_zo_state(
 ) -> ZOTrainState:
     key = jax.random.PRNGKey(cfg.seed)
     method = get_method(cfg.method)
+    if cfg.weight_quant != "none":
+        if ranks is not None or rank_masks is not None:
+            raise ValueError(
+                "weight_quant with per-path ranks/rank_masks is unsupported: "
+                "quantized leaves draw their factors at cfg.rank before the "
+                "method sees the overrides"
+            )
+        # qu/qv are drawn from the SAME folded key TeZO.init hands to
+        # cpd.init_factors (method key, fold 1), so the quantized run's
+        # frozen factors — and therefore its Z — equal the dense run's.
+        params = quant.quantize_for_config(
+            params, cfg, jax.random.fold_in(jax.random.fold_in(key, 0xF0), 1)
+        )
     mstate = method.init(params, jax.random.fold_in(key, 0xF0), cfg, ranks, rank_masks)
     return ZOTrainState(
         params=params,
@@ -198,6 +211,7 @@ def build_zo_train_step(
     method = get_method(cfg.method)
     resolve_kernel_mode(cfg.kernel_mode)  # fail fast on unknown modes
     zo_pass_count(cfg.q_probes, cfg.restore_mode)  # …and unknown schedules
+    quant.validate_quant_config(cfg)  # …and incompatible weight_quant combos
     if cfg.probe_parallel:
         return _build_probe_parallel_step(
             loss_fn, cfg, method, mesh=mesh, param_specs=param_specs

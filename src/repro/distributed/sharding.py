@@ -27,7 +27,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.cpd import CPDFactor
-from repro.utils.tree import map_with_path
+from repro.core.quant import QuantLeaf
+from repro.utils.tree import is_atomic_leaf, map_with_path
 
 LOGICAL_RULES: dict[Optional[str], Optional[str]] = {
     "layers": None,
@@ -73,10 +74,51 @@ def spec_for_axes(axes: tuple, shape: tuple, mesh: Mesh) -> P:
     return P(*out)
 
 
+def quant_leaf_shardings(mesh: Mesh, axes: tuple, leaf: QuantLeaf) -> QuantLeaf:
+    """Per-field shardings for a quantized leaf, derived from the dense
+    leaf's logical axes ``(*batch, row, col)``:
+
+      codes    [.., Kw, N]  — col only (the row dim is bit-packed: a "row"
+                              shard boundary would split words, so packed
+                              rows stay whole per device)
+      codebook [.., N, L]   — col (per-channel LUTs follow their channels)
+      scale    [.., N]      — col
+      qu       [.., K, r]   — row (as the dense CPD u factor)
+      qv       [.., N, r]   — col (as the dense CPD v factor)
+      acc      [.., r]      — replicated r-vector (as τ-space moments)
+      nacc     [.., K, N]   — the dense leaf's own (row, col) spec
+
+    Returned as a QuantLeaf of NamedShardings — structurally parallel to the
+    parameter leaf, so the whole tree drops into pjit in_shardings.
+    """
+    batch, row, col = axes[:-2], axes[-2], axes[-1]
+
+    def s(field_axes: tuple, a) -> NamedSharding:
+        return NamedSharding(mesh, spec_for_axes(field_axes, a.shape, mesh))
+
+    return leaf.replace(
+        codes=s(batch + (None, col), leaf.codes),
+        codebook=s(batch + (col, None), leaf.codebook),
+        scale=s(batch + (col,), leaf.scale),
+        qu=s(batch + (row, None), leaf.qu),
+        qv=s(batch + (col, None), leaf.qv),
+        acc=s(batch + (None,), leaf.acc),
+        nacc=s(batch + (row, col), leaf.nacc) if leaf.nacc is not None else None,
+    )
+
+
 def param_shardings(mesh: Mesh, axes_tree: Any, abstract: Any) -> Any:
-    """NamedSharding tree parallel to the params tree."""
+    """NamedSharding tree parallel to the params tree.  QuantLeaf positions
+    (the axes tuple is a leaf of ``axes_tree``, so tree.map hands the whole
+    QuantLeaf through) expand to a per-field sharding QuantLeaf."""
+
+    def leaf_sharding(axes: tuple, a) -> Any:
+        if isinstance(a, QuantLeaf):
+            return quant_leaf_shardings(mesh, axes, a)
+        return NamedSharding(mesh, spec_for_axes(axes, a.shape, mesh))
+
     return jax.tree.map(
-        lambda axes, a: NamedSharding(mesh, spec_for_axes(axes, a.shape, mesh)),
+        leaf_sharding,
         axes_tree,
         abstract,
         is_leaf=lambda x: isinstance(x, tuple) and all(
@@ -125,11 +167,22 @@ def param_spec_table(shardings: Any) -> dict[str, P]:
     ``param_shardings(...)`` (or ``zo_state_shardings(...).params``) so the
     dispatch-side specs are — by construction — the shardings the jitted
     step places the params with.
+
+    A QuantLeaf-of-shardings contributes ONE entry at its leaf path: the
+    dense nacc spec when present (the only quant field a dense-noise leaf op
+    recursion consults), replicated otherwise — the τ-space acc ops are
+    plain r-vector jnp and never read the shard context.
     """
     from jax.tree_util import keystr, tree_flatten_with_path
 
-    flat, _ = tree_flatten_with_path(shardings)
-    return {keystr(path): s.spec for path, s in flat}
+    flat, _ = tree_flatten_with_path(shardings, is_leaf=is_atomic_leaf)
+    out = {}
+    for path, s in flat:
+        if isinstance(s, QuantLeaf):
+            out[keystr(path)] = s.nacc.spec if s.nacc is not None else P()
+        else:
+            out[keystr(path)] = s.spec
+    return out
 
 
 def mstate_shardings(mesh: Mesh, axes_tree: Any, mstate_abs: Any) -> Any:

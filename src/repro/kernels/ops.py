@@ -617,6 +617,36 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths):
     return out.reshape(S, H, dh)
 
 
+def quant_matmul(x, codes, lut, xu, qv, *, bits: int):
+    """x @ (dequant(codes) + qu·diag(acc)·qvᵀ) with in-tile LUT dequant.
+
+    ``x [M, K]``, ``codes [Kw, N]`` uint32 plane-packed (see
+    core.quant.pack_codes), ``lut [N, 2**bits]`` f32 *scaled* per-channel
+    table, ``xu [M, r]`` the precomputed ``x @ (qu·acc)`` factor half,
+    ``qv [N, r]``.  Pad-and-mask tiling as everywhere else: M/N pad to the
+    weight tiles, K pads to the packed row count (those x columns are zero,
+    so the pack-pad code rows are inert), the LUT lane-pads to 128, and the
+    rank lane-pads off-interpret.  Returns ``[M, N]`` in x's dtype.
+    """
+    from repro.kernels.quant_matmul import quant_matmul as _qmm
+
+    m, k = x.shape
+    kw, n = codes.shape
+    kp = kw * (32 // bits)
+    r = qv.shape[-1]
+    bm, bn, m_pad, n_pad = _weight_tiles(m, n)
+    rp = r if _interpret() else _round_up(r, _LANE)
+    out = _qmm(
+        _pad_axis(_pad_axis(x, 0, m_pad), 1, kp),
+        _pad_axis(codes, 1, n_pad),
+        _pad_axis(_pad_axis(lut, 0, n_pad), 1, _LANE),
+        _pad_axis(_pad_axis(xu, 0, m_pad), 1, rp),
+        _pad_axis(_pad_axis(qv, 0, n_pad), 1, rp),
+        bits=bits, bm=bm, bn=bn, interpret=_interpret(),
+    )
+    return _crop(out, m, n)
+
+
 def selective_scan(x, dt, a, b, c, h0, *, bd=128, bs=2048):
     """Mamba-1 selective scan; VMEM-resident state on TPU (see
     kernels/selective_scan.py), interpret-mode oracle path on CPU.

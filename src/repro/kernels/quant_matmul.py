@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused LUT-dequant matmul for quantized weight leaves
+
+    out = x @ (dequant(codes) + qu·diag(acc)·qvᵀ)
+
+The forward hot path for ``core.quant.QuantLeaf``: the packed b-bit codes
+are the ONLY weight-sized HBM operand — each grid step loads a
+``[Kw, bn]`` uint32 code tile (b/16 the bytes of the bf16 weight tile it
+replaces), unpacks it with ``cpw = 32//b`` shift-and-mask ops, dequants
+through the per-channel LUT, and feeds the MXU — the dense f16/f32 weight
+tile exists only in VMEM/registers, never in HBM.
+
+Dequant is select-sum over the (≤16) LUT entries:
+
+    W[k, n] = Σ_j (codes[k, n] == j) · lut[n, j]
+
+exactly one term is nonzero per element, so this is exact (it is a gather
+in disguise) while lowering to pure VPU compare/select — no dynamic
+indexing, so the same body runs under Mosaic, interpret mode, and the XLA
+twin's semantics.
+
+The temporal-factor delta ``(x @ (qu·diag(acc))) @ qvᵀ`` rides the same
+tile: the caller precomputes ``xu = x @ (qu·acc)`` (an [M, r] matmul, r ≪
+N — negligible) and the kernel adds ``xu @ qvᵀ`` to the accumulator while
+the output tile is resident.  This is how a quantized TeZO-family step
+trains without EVER materializing the effective weight: perturb/update
+write the r-vector ``acc`` (see dispatch), and the forward folds the
+low-rank correction in-tile.
+
+Tiling: grid (M/bm, N/bn) with the full (padded) K resident per tile —
+fine for the block sizes this repo's models use; K-blocking with an
+accumulator ref is the on-TPU follow-up (ROADMAP open item 1).  ``lut``
+arrives lane-padded to 128 and pre-scaled (scale·codebook); code rows are
+padded so ``cpw · Kw`` is lane-aligned (see quant.pack_align) with the
+matching x columns zero — padded rows multiply zero activations and are
+inert regardless of what their codes decode to.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, codes_ref, lut_ref, xu_ref, qv_ref, o_ref, *, bits):
+    cpw = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    x = x_ref[...].astype(jnp.float32)                  # [bm, kp]
+    words = codes_ref[...]                              # [kw, bn] uint32
+    lut = lut_ref[...].astype(jnp.float32)              # [bn, lanes]
+    # plane-strided unpack (see quant.pack_codes): word row i holds dense
+    # rows {s·kw + i}, so cpw shifted/masked copies concatenated along rows
+    # restore the dense [kp, bn] code tile in order
+    planes = [(words >> jnp.uint32(bits * s)) & mask for s in range(cpw)]
+    codes = jnp.concatenate(planes, axis=0)             # [kp, bn]
+    w = jnp.zeros(codes.shape, jnp.float32)
+    for j in range(1 << bits):
+        w = w + jnp.where(codes == jnp.uint32(j), lut[:, j][None, :], 0.0)
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # [bm, bn]
+    acc = acc + jax.lax.dot_general(
+        xu_ref[...].astype(jnp.float32), qv_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "interpret"))
+def quant_matmul(
+    x: jax.Array,       # [m, kp]  activations, K zero-padded to cpw·kw
+    codes: jax.Array,   # [kw, n]  uint32 packed codes
+    lut: jax.Array,     # [n, lanes] f32 scaled LUT (scale·codebook, lane-padded)
+    xu: jax.Array,      # [m, rp]  f32 precomputed x @ (qu·acc)
+    qv: jax.Array,      # [n, rp]  f32 frozen column factor
+    *,
+    bits: int,
+    bm: int = 256,
+    bn: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, kp = x.shape
+    kw, n = codes.shape
+    rp = qv.shape[-1]
+    assert kw * (32 // bits) == kp, (kw, bits, kp)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kw, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn, lut.shape[-1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, rp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, rp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, codes, lut, xu, qv)

@@ -123,6 +123,7 @@ def run_cell(
     verbose: bool = True,
     save_hlo: bool = False,
     kernel_mode: str = "auto",
+    weight_quant: str = "none",
 ) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     from repro.distributed.context import set_current_mesh
@@ -175,10 +176,14 @@ def run_cell(
         record["kernel_mode"] = resolved
         if resolved == "pallas":
             record["kernel_interpret"] = interp
+        # quantized runs keep factors f32 (the QuantLeaf carries qu/qv in
+        # f32; see core.quant.validate_quant_config)
         zo_cfg = ZOConfig(
             method=method, kernel_mode=kernel_mode, rank=rank,
-            factor_dtype=jnp.bfloat16,
+            factor_dtype=jnp.float32 if weight_quant != "none" else jnp.bfloat16,
+            weight_quant=weight_quant,
         )
+        record["weight_quant"] = weight_quant
         # step-schedule provenance: BENCH rows and HLO costings are only
         # comparable across PRs when the record says how many full-W passes
         # the lowered step makes (chained default: 2q+1)
@@ -319,6 +324,13 @@ def main() -> None:
         "invocation (the exact command is printed at the end)",
     )
     ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument(
+        "--weight-quant", default="none",
+        choices=["none", "nf4", "lut3", "lut4"],
+        help="train cells quantize transformer block weights into packed "
+        "QuantLeaf storage (3/4-bit LUT codes; in-tile dequant forward, "
+        "τ-space perturb/update) before lowering the ZO step",
+    )
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
@@ -391,6 +403,7 @@ def main() -> None:
                         out_dir=args.out, tag=tag, save_hlo=args.save_hlo,
                         overrides=preset_overrides(arch, shape),
                         kernel_mode=kmode,
+                        weight_quant=args.weight_quant,
                     )
                     n_cells += 1
                     jax.clear_caches()

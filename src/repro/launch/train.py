@@ -54,6 +54,7 @@ def train(
     rho: float = 1e-3,
     rank: int = 24,
     rank_mode: str = "const",
+    weight_quant: str = "none",
     q_probes: int = 1,
     restore_mode: str = "inplace",
     probe_parallel: bool = False,
@@ -85,9 +86,9 @@ def train(
 
     zo_cfg = ZOConfig(
         method=method, kernel_mode=kernel_mode, lr=lr, rho=rho, rank=rank,
-        rank_mode=rank_mode, q_probes=q_probes, restore_mode=restore_mode,
-        probe_parallel=probe_parallel, adaptive_q=adaptive_q, q_max=q_max,
-        seed=seed, total_steps=steps,
+        rank_mode=rank_mode, weight_quant=weight_quant, q_probes=q_probes,
+        restore_mode=restore_mode, probe_parallel=probe_parallel,
+        adaptive_q=adaptive_q, q_max=q_max, seed=seed, total_steps=steps,
     )
     if probe_parallel and (mesh is None or "data" not in mesh.axis_names):
         raise ValueError(
@@ -280,6 +281,7 @@ def train(
         # q_probes is the FINAL ensemble size (adaptive-q may have grown it).
         "q_probes": zo_cfg.q_probes,
         "restore_mode": restore_mode,
+        "weight_quant": weight_quant,
         "probe_parallel": probe_parallel,
         "probe_lanes": probe_lanes,
         "zo_passes": zo_pass_count(
@@ -315,6 +317,16 @@ def main() -> None:
     ap.add_argument("--rho", type=float, default=1e-3)
     ap.add_argument("--rank", type=int, default=24)
     ap.add_argument("--rank-mode", default="const", choices=["const", "spectral"])
+    ap.add_argument(
+        "--weight-quant", default="none",
+        choices=["none", "nf4", "lut3", "lut4"],
+        help="store transformer block weights as packed LUT-quantized leaves "
+        "(core.quant.QuantLeaf): 3/4-bit codes + per-channel codebooks in "
+        "HBM, dequantized in-tile on the forward path; TeZO-family "
+        "perturb/update then move only the r-vector temporal coefficient — "
+        "zero weight bytes per ZO pass.  Composes with tezo/tezo_m/"
+        "tezo_adam/mezo/mezo_m/mezo_adam; requires weight_decay 0",
+    )
     ap.add_argument("--q-probes", type=int, default=1)
     ap.add_argument(
         "--restore-mode", default="inplace",

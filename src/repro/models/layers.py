@@ -242,19 +242,36 @@ def attention(
 # --------------------------------------------------------------------------
 
 
-def gated_mlp(x, w_gate, w_up, w_down, activation="swiglu"):
-    u = x @ w_up
+def weight_matmul(x, w, *, mode="auto"):
+    """``x @ w`` where ``w`` is a dense matrix OR a ``core.quant.QuantLeaf``.
+
+    The quantized branch routes through ``dispatch.quant_matmul_fwd`` (the
+    fused in-tile LUT-dequant kernel / its XLA gather twin, selected by the
+    jit-static ``kernel_mode`` — same single-authority contract as
+    ``attention``); the dense branch is a plain matmul.  Every transformer
+    weight-matmul site goes through here so quantized leaves are handled
+    uniformly in training forward, decode, and paged decode."""
+    from repro.core import dispatch
+    from repro.core.quant import QuantLeaf
+
+    if isinstance(w, QuantLeaf):
+        return dispatch.quant_matmul_fwd(x, w, mode=mode)
+    return x @ w
+
+
+def gated_mlp(x, w_gate, w_up, w_down, activation="swiglu", mode="auto"):
+    u = weight_matmul(x, w_up, mode=mode)
     if activation == "gelu":  # classic 2-matrix FFN (musicgen / OPT style)
         a = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(x.dtype)
-        return a @ w_down
-    g = x @ w_gate
+        return weight_matmul(a, w_down, mode=mode)
+    g = weight_matmul(x, w_gate, mode=mode)
     if activation == "swiglu":
         a = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
     elif activation == "geglu":
         a = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype)
     else:
         raise ValueError(activation)
-    return (a * u) @ w_down
+    return weight_matmul(a * u, w_down, mode=mode)
 
 
 # --------------------------------------------------------------------------

@@ -84,9 +84,9 @@ class TransformerLM:
         B, S, D = x.shape
         dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
         h = layers.rms_norm(x, p["ln1"], c.norm_eps)
-        q = h @ p["wq"]
-        k = h @ p["wk"]
-        v = h @ p["wv"]
+        q = layers.weight_matmul(h, p["wq"], mode=c.kernel_mode)
+        k = layers.weight_matmul(h, p["wk"], mode=c.kernel_mode)
+        v = layers.weight_matmul(h, p["wv"], mode=c.kernel_mode)
         if c.qkv_bias:
             q = q + p["bq"].astype(q.dtype)
             k = k + p["bk"].astype(k.dtype)
@@ -106,14 +106,20 @@ class TransformerLM:
             chunk_q=c.attn_chunk_q, chunk_k=c.attn_chunk_k,
             chunked_min_seq=c.attn_chunked_min_seq,
         )
-        return o.reshape(B, S, H * dh) @ p["wo"], (k, v)
+        o = layers.weight_matmul(
+            o.reshape(B, S, H * dh), p["wo"], mode=c.kernel_mode
+        )
+        return o, (k, v)
 
     def _ffn(self, p, x):
         c = self.cfg
         h = layers.rms_norm(x, p["ln2"], c.norm_eps)
         if c.n_experts > 0:
             return self._moe(p, h)
-        return layers.gated_mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], c.activation)
+        return layers.gated_mlp(
+            h, p.get("w_gate"), p["w_up"], p["w_down"], c.activation,
+            mode=c.kernel_mode,
+        )
 
     def _moe(self, p, h):
         if self.cfg.moe_impl == "ep" and self.cfg.spmd_hints:
@@ -366,9 +372,9 @@ class TransformerLM:
             B = x.shape[0]
             dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
             h = layers.rms_norm(x, p["ln1"], c.norm_eps)
-            q = h @ p["wq"]
-            k = h @ p["wk"]
-            v = h @ p["wv"]
+            q = layers.weight_matmul(h, p["wq"], mode=c.kernel_mode)
+            k = layers.weight_matmul(h, p["wk"], mode=c.kernel_mode)
+            v = layers.weight_matmul(h, p["wv"], mode=c.kernel_mode)
             if c.qkv_bias:
                 q = q + p["bq"].astype(q.dtype)
                 k = k + p["bk"].astype(k.dtype)
@@ -388,7 +394,9 @@ class TransformerLM:
                 v_l, v.astype(v_l.dtype), (0, slot, 0, 0)
             )
             o = layers.decode_attention(q, k_l, v_l, valid)
-            x = x + o.reshape(B, 1, H * dh) @ p["wo"]
+            x = x + layers.weight_matmul(
+                o.reshape(B, 1, H * dh), p["wo"], mode=c.kernel_mode
+            )
             x = x + self._ffn(p, x)
             return x, (k_l, v_l)
 
@@ -480,9 +488,9 @@ class TransformerLM:
             p, k_l, v_l = xs
             dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
             h = layers.rms_norm(x, p["ln1"], c.norm_eps)
-            q = h @ p["wq"]
-            k = h @ p["wk"]
-            v = h @ p["wv"]
+            q = layers.weight_matmul(h, p["wq"], mode=c.kernel_mode)
+            k = layers.weight_matmul(h, p["wk"], mode=c.kernel_mode)
+            v = layers.weight_matmul(h, p["wv"], mode=c.kernel_mode)
             if c.qkv_bias:
                 q = q + p["bq"].astype(q.dtype)
                 k = k + p["bk"].astype(k.dtype)
@@ -500,7 +508,9 @@ class TransformerLM:
             o = layers.paged_decode_attention(
                 q[:, 0], k_l, v_l, block_tables, attn_len, mode=c.kernel_mode
             )
-            x = x + o.reshape(S, 1, H * dh) @ p["wo"]
+            x = x + layers.weight_matmul(
+                o.reshape(S, 1, H * dh), p["wo"], mode=c.kernel_mode
+            )
             x = x + self._ffn(p, x)
             return x, (k_l, v_l)
 

@@ -15,9 +15,34 @@ import jax.numpy as jnp
 from jax.tree_util import tree_flatten_with_path, tree_unflatten, keystr
 
 
+# --- atomic leaves -------------------------------------------------------
+#
+# Some registered pytree nodes are *logically* one leaf even though they
+# carry several array children — e.g. the quantized weight leaf
+# (``core.quant.QuantLeaf``: packed codes + codebook + scale + factor
+# state).  Path-keyed machinery (per-leaf PRNG streams, per-leaf dispatch,
+# factor tables) must treat such a node as a single addressable leaf so its
+# path — and therefore its noise stream and factor entry — matches the
+# dense leaf it replaced.  Types register here (not via ``is_leaf``
+# plumbing at every call site) to avoid an import cycle: this module must
+# not import ``core.quant``.
+_ATOMIC_LEAF_TYPES: tuple[type, ...] = ()
+
+
+def register_atomic_leaf(cls: type) -> None:
+    """Mark ``cls`` so path-walking treats instances as single leaves."""
+    global _ATOMIC_LEAF_TYPES
+    if cls not in _ATOMIC_LEAF_TYPES:
+        _ATOMIC_LEAF_TYPES = _ATOMIC_LEAF_TYPES + (cls,)
+
+
+def is_atomic_leaf(x: Any) -> bool:
+    return isinstance(x, _ATOMIC_LEAF_TYPES)
+
+
 def leaf_paths(tree: Any) -> list[str]:
     """Stable string path for every leaf, in registration order."""
-    flat, _ = tree_flatten_with_path(tree)
+    flat, _ = tree_flatten_with_path(tree, is_leaf=is_atomic_leaf)
     return [keystr(path) for path, _ in flat]
 
 
@@ -38,8 +63,12 @@ def fold_in_path(key: jax.Array, path: str) -> jax.Array:
 
 
 def map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
-    """Like ``tree_map`` but ``fn`` receives the leaf path string first."""
-    flat, treedef = tree_flatten_with_path(tree)
+    """Like ``tree_map`` but ``fn`` receives the leaf path string first.
+
+    Atomic leaves (see ``register_atomic_leaf``) are passed to ``fn``
+    whole — the walk does not descend into their array children.
+    """
+    flat, treedef = tree_flatten_with_path(tree, is_leaf=is_atomic_leaf)
     rest_leaves = [treedef.flatten_up_to(r) for r in rest]
     out = [
         fn(keystr(path), leaf, *(r[i] for r in rest_leaves))

@@ -1,0 +1,495 @@
+"""Quantized weight leaves: core.quant packing + the QuantLeaf dispatch
+protocol end to end.
+
+Five contracts lock the quantized representation:
+
+1. **Round-trip**: plane-strided b-bit packing is lossless for every code
+   array, including awkward row counts (1, primes, 50257) that exercise the
+   pack-pad crop.
+
+2. **Stream identity**: the qu/qv factors a QuantLeaf freezes at quantize
+   time are drawn from the SAME (key, path) streams as ``cpd.init_factors``
+   on the dense leaf — bitwise — so a quantized run's τ noise is the dense
+   run's τ noise.  ``init_zo_state`` plumbs the matching key.
+
+3. **Kernel-vs-twin parity**: the fused LUT-dequant matmul kernel matches
+   the XLA gather-twin to dot-accumulation tolerance (the dequantized
+   values themselves are bit-identical select-sum vs gather).
+
+4. **Chained-step parity**: quantized steps keep the chained schedule —
+   identical factor-space state (acc) and loss across restore_modes,
+   bitwise, and ``zo_passes`` still reports 2q+1 / 3q+1.  A kernel
+   invocation spy shows the TeZO family makes ZERO full-weight kernel
+   passes on quantized leaves (the NO-DENSE-MATERIALIZATION property the
+   bytes model in benchmarks/common.py assumes), while the MeZO family
+   keeps its 2q+1 passes over the dense nacc buffer.
+
+5. **check_bench hygiene**: the CI gate fails with a clear message and a
+   nonzero return — never a traceback — on malformed record files, and
+   enforces the schema-7 hardware label + quantized-leg requirements.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.check_bench import check, record_keys
+from repro.core import (
+    ZOConfig,
+    build_zo_train_step,
+    init_zo_state,
+    zo_pass_count,
+)
+from repro.core import cpd, dispatch, quant
+from repro.kernels import ops
+from repro.models import build_model, layers
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    ops.set_interpret(True)
+    yield
+    ops.set_interpret(None)
+
+
+# ---------------------------------------------------------------------------
+# 1. Packing round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [3, 4])
+@pytest.mark.parametrize(
+    "shape",
+    [(1, 1), (7, 5), (50, 17), (2, 50, 17), (257, 3), (50257, 2)],
+)
+def test_pack_unpack_roundtrip(bits, shape):
+    """Lossless for every code value at every (awkward) row count."""
+    k = shape[-2]
+    codes = jax.random.randint(
+        jax.random.PRNGKey(k + bits), shape, 0, 1 << bits, dtype=jnp.int32
+    )
+    words = quant.pack_codes(codes, bits)
+    kp, kw = quant.packed_rows(k, bits)
+    assert words.shape == shape[:-2] + (kw, shape[-1])
+    assert words.dtype == jnp.uint32
+    assert kp % quant.pack_align(bits) == 0
+    back = quant.unpack_codes(words, bits, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+@pytest.mark.parametrize("scheme", sorted(quant.SCHEMES))
+def test_quantize_dequantize_error_bounded(scheme):
+    """b-bit per-channel quantization of a Gaussian weight reconstructs to
+    within the expected step size (sanity on the codebook fit + assignment,
+    not a rate-distortion claim)."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (96, 40)) * 0.1
+    leaf = quant.quantize_leaf(
+        w, scheme=scheme, rank=4, key=jax.random.PRNGKey(7), path="['w']"
+    )
+    wd = np.asarray(quant.dequantize(leaf), np.float32)
+    err = np.abs(wd - np.asarray(w, np.float32)).mean()
+    sigma = float(np.asarray(w, np.float32).std())
+    assert err < (0.2 if leaf.bits == 3 else 0.1) * sigma, (scheme, err, sigma)
+    # fresh leaf: acc is zero, so the effective weight IS the dequant base
+    np.testing.assert_array_equal(
+        np.asarray(quant.effective_weight(leaf), np.float32), wd
+    )
+
+
+def test_stored_bytes_beat_f16_at_model_width():
+    """At real model widths (K=N≥512) the packed representation stores
+    ≥3× fewer weight bytes than dense f16 — the claim the bench ratchets."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (512, 512)) * 0.1
+    leaf = quant.quantize_leaf(
+        w, scheme="lut4", rank=8, key=jax.random.PRNGKey(6), path="['w']"
+    )
+    assert quant.dense_weight_bytes(leaf) == 512 * 512 * 4
+    assert (512 * 512 * 2) / quant.stored_weight_bytes(leaf) >= 3.0
+
+
+# ---------------------------------------------------------------------------
+# 2. Factor-stream identity with the dense run
+# ---------------------------------------------------------------------------
+
+
+def _dense_params(L=2, k=32, n=32, key=11):
+    kk = jax.random.PRNGKey(key)
+    return {
+        "blocks": {
+            "wq": jax.random.normal(kk, (L, k, n), jnp.float32) * 0.1,
+        }
+    }
+
+
+def test_quantized_factors_equal_dense_factor_streams():
+    params = _dense_params()
+    key = jax.random.PRNGKey(42)
+    dense_factors = cpd.init_factors(params, key, default_rank=4)
+    qparams = quant.quantize_params(params, scheme="lut4", rank=4, key=key)
+    leaf = qparams["blocks"]["wq"]
+    f = dense_factors["['blocks']['wq']"]
+    np.testing.assert_array_equal(np.asarray(leaf.qu), np.asarray(f.u))
+    np.testing.assert_array_equal(np.asarray(leaf.qv), np.asarray(f.v))
+
+
+def test_init_zo_state_key_plumbing_matches_dense_run():
+    """A weight_quant run's frozen qu/qv (and its factor table) must equal
+    the factors the SAME seed's dense run draws — the init hook folds the
+    identical (0xF0, 1) key chain before quantizing."""
+    params = _dense_params()
+    cfg_q = ZOConfig(method="tezo", rank=4, weight_quant="lut4")
+    cfg_d = ZOConfig(method="tezo", rank=4)
+    s_q = init_zo_state(params, cfg_q)
+    s_d = init_zo_state(params, cfg_d)
+    leaf = s_q.params["blocks"]["wq"]
+    f_d = s_d.mstate["factors"]["['blocks']['wq']"]
+    np.testing.assert_array_equal(np.asarray(leaf.qu), np.asarray(f_d.u))
+    np.testing.assert_array_equal(np.asarray(leaf.qv), np.asarray(f_d.v))
+    # and the quantized run's factor table agrees with its own leaves
+    f_q = s_q.mstate["factors"]["['blocks']['wq']"]
+    np.testing.assert_array_equal(np.asarray(f_q.u), np.asarray(leaf.qu))
+
+
+def test_validate_quant_config_rejections():
+    for bad in (
+        ZOConfig(method="tezo", weight_quant="int8"),
+        ZOConfig(method="lozo", weight_quant="lut4"),
+        ZOConfig(method="tezo", weight_quant="lut4", weight_decay=0.01),
+        ZOConfig(method="tezo", weight_quant="lut4", rank_mode="spectral"),
+        ZOConfig(method="tezo", weight_quant="lut4", factor_dtype=jnp.bfloat16),
+    ):
+        with pytest.raises(ValueError):
+            quant.validate_quant_config(bad)
+    with pytest.raises(ValueError):
+        build_zo_train_step(
+            lambda p, b: 0.0, ZOConfig(method="subzo", weight_quant="lut4")
+        )
+
+
+# ---------------------------------------------------------------------------
+# 3. Kernel vs XLA gather-twin parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("with_nacc", [False, True])
+@pytest.mark.parametrize("scheme", sorted(quant.SCHEMES))
+def test_quant_matmul_kernel_matches_twin(scheme, with_nacc):
+    key = jax.random.PRNGKey(19)
+    w = jax.random.normal(key, (96, 80)) * 0.1
+    leaf = quant.quantize_leaf(
+        w, scheme=scheme, rank=4, key=jax.random.fold_in(key, 1),
+        path="['w']", with_nacc=with_nacc,
+    )
+    # nonzero temporal state so the xu·qvᵀ half is exercised
+    leaf = leaf.replace(
+        acc=jax.random.normal(jax.random.fold_in(key, 2), leaf.acc.shape) * 0.01
+    )
+    if with_nacc:
+        leaf = leaf.replace(
+            nacc=(jax.random.normal(jax.random.fold_in(key, 3), (96, 80)) * 0.01
+                  ).astype(leaf.nacc.dtype)
+        )
+    x = jax.random.normal(jax.random.fold_in(key, 4), (16, 96), jnp.float32)
+    got = dispatch.quant_matmul_fwd(x, leaf, mode="pallas")
+    want = dispatch.quant_matmul_fwd(x, leaf, mode="xla")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_weight_matmul_routes_quant_and_dense():
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 48)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    np.testing.assert_array_equal(
+        np.asarray(layers.weight_matmul(x, w)), np.asarray(x @ w)
+    )
+    leaf = quant.quantize_leaf(
+        w, scheme="lut4", rank=4, key=jax.random.PRNGKey(5), path="['w']"
+    )
+    got = layers.weight_matmul(x, leaf, mode="xla")
+    want = x @ quant.effective_weight(leaf).astype(x.dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. Chained-step parity + the kernel-invocation spy
+# ---------------------------------------------------------------------------
+
+
+def _loss_fn(p, batch):
+    def body(h, wl):
+        return jnp.tanh(layers.weight_matmul(h, wl, mode="xla")), None
+
+    h, _ = jax.lax.scan(body, batch["x"], p["blocks"]["wq"])
+    return jnp.mean((jnp.sum(h, axis=-1) - batch["y"]) ** 2)
+
+
+def _batch():
+    return {
+        "x": jax.random.normal(jax.random.PRNGKey(5), (4, 32)),
+        "y": jnp.ones((4,)),
+    }
+
+
+def _run_quant(method, q_probes, kernel_mode, restore_mode, n_steps=2):
+    cfg = ZOConfig(
+        method=method, kernel_mode=kernel_mode, rank=4, q_probes=q_probes,
+        seed=3, lr=1e-2, restore_mode=restore_mode, weight_quant="lut4",
+    )
+    state = init_zo_state(_dense_params(), cfg)
+    step = jax.jit(build_zo_train_step(_loss_fn, cfg))
+    metrics = None
+    for _ in range(n_steps):
+        state, metrics = step(state, _batch())
+    return state, metrics
+
+
+def _assert_quant_states_bitwise(s_a, s_b, context=""):
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(s_a.params),
+        jax.tree_util.tree_leaves_with_path(s_b.params),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{context}: params diverged at {pa}",
+        )
+    for (pa, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(s_a.mstate),
+        jax.tree_util.tree_leaves_with_path(s_b.mstate),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{context}: mstate diverged at {pa}",
+        )
+
+
+@pytest.mark.parametrize("kernel_mode", ["pallas", "xla"])
+@pytest.mark.parametrize("q_probes", [1, 2])
+@pytest.mark.parametrize("method", sorted(quant.QUANT_METHODS))
+def test_quant_chained_equals_unchained_bitwise(method, q_probes, kernel_mode):
+    """Quantized steps keep the chained-schedule contract: factor-space
+    state (acc / nacc / moments) and params bitwise between the chained
+    default and the literal Algorithm-1 schedule (same precedent as
+    test_chain_fusion — "exact" branches off originals and reassociates
+    the f32 adds, so it is equivalent, not bitwise), and ``zo_passes``
+    still reports the 2q+1 / 3q+1 schedule."""
+    s_c, m_c = _run_quant(method, q_probes, kernel_mode, "inplace")
+    s_u, m_u = _run_quant(method, q_probes, kernel_mode, "unchained")
+    ctx = f"{method} q={q_probes} {kernel_mode}"
+    _assert_quant_states_bitwise(s_c, s_u, ctx + " inplace-vs-unchained")
+    assert float(m_c["loss"]) == float(m_u["loss"])
+    assert int(m_c["zo_passes"]) == zo_pass_count(q_probes, "inplace")
+    assert int(m_u["zo_passes"]) == zo_pass_count(q_probes, "unchained")
+    # the step really trained in factor space
+    acc = np.asarray(s_c.params["blocks"]["wq"].acc)
+    if method.startswith("tezo"):
+        assert np.abs(acc).max() > 0.0, ctx
+
+
+# every ops entry point that makes one full-weight-sized HBM pass (the same
+# list test_chain_fusion spies on)
+_PASS_OPS = (
+    "tezo_perturb", "tezo_adam_update",
+    "noise_perturb", "noise_perturb_pair",
+    "noise_update_sgd", "noise_update_momentum", "noise_update_adam",
+    "lozo_perturb", "lozo_chain", "subzo_perturb",
+)
+
+
+class _PassSpy:
+    def __init__(self, monkeypatch):
+        self.count = 0
+        self._depth = 0
+        for name in _PASS_OPS:
+            monkeypatch.setattr(
+                dispatch.ops, name, self._wrap(getattr(ops, name))
+            )
+
+    def _wrap(self, real):
+        def spy(*a, **kw):
+            outer = self._depth == 0
+            self._depth += 1
+            try:
+                out = real(*a, **kw)
+            finally:
+                self._depth -= 1
+            if outer:
+                self.count += 1
+            return out
+
+        return spy
+
+
+@pytest.mark.parametrize("q_probes", [1, 2])
+def test_quant_tezo_makes_zero_weight_passes(q_probes, monkeypatch):
+    """NO-DENSE-MATERIALIZATION: with every trainable leaf quantized, the
+    TeZO family's perturb/update close entirely in τ-space — zero
+    weight-sized kernel passes per step (benchmarks/common.py's
+    ``zo_step_bytes_model`` drops those bytes on exactly this guarantee),
+    while MeZO still makes its 2q+1 passes over the dense nacc buffer."""
+    for method, want in (
+        ("tezo", 0),
+        ("tezo_adam", 0),
+        ("mezo", zo_pass_count(q_probes, "inplace")),
+    ):
+        spy = _PassSpy(monkeypatch)
+        _run_quant(method, q_probes, "pallas", "inplace", n_steps=1)
+        assert spy.count == want, (method, q_probes, spy.count, want)
+
+
+def test_quant_forward_hits_kernel_per_layer(monkeypatch):
+    """In pallas mode the forward routes every quantized matmul through the
+    fused LUT-dequant kernel (counted, not asserted in prose); in xla mode
+    it never touches it."""
+    calls = {"n": 0}
+    real = ops.quant_matmul
+
+    def spy(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dispatch.ops, "quant_matmul", spy)
+    w = jax.random.normal(jax.random.PRNGKey(2), (96, 80)) * 0.1
+    leaf = quant.quantize_leaf(
+        w, scheme="lut4", rank=4, key=jax.random.PRNGKey(3), path="['w']"
+    )
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 96))
+    dispatch.quant_matmul_fwd(x, leaf, mode="pallas")
+    assert calls["n"] == 1
+    dispatch.quant_matmul_fwd(x, leaf, mode="xla")
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# 5. End-to-end on the real model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel_mode", ["xla", "pallas"])
+def test_quantized_train_step_on_smoke_model(kernel_mode):
+    cfg = get_smoke_config("opt-125m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_inputs(
+        jax.random.PRNGKey(1),
+        ShapeConfig("smoke", seq_len=16, global_batch=2, kind="train"),
+    )
+    zo_cfg = ZOConfig(
+        method="tezo_adam", rank=4, lr=1e-4, kernel_mode=kernel_mode,
+        weight_quant="lut4",
+    )
+    state = init_zo_state(params, zo_cfg)
+    assert isinstance(state.params["blocks"]["wq"], quant.QuantLeaf)
+    step = jax.jit(build_zo_train_step(model.loss_fn, zo_cfg))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    acc = np.asarray(state.params["blocks"]["wq"].acc)
+    assert np.abs(acc).max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# 6. check_bench: graceful failure + schema-7 requirements
+# ---------------------------------------------------------------------------
+
+
+def _zo_row(**kw):
+    row = {
+        "leg": "zo-step", "method": "tezo", "kernel": "xla", "mesh": "1x1",
+        "zo_passes": 3, "hardware": "cpu",
+    }
+    row.update(kw)
+    return row
+
+
+def _good_doc(schema=7, extra_rows=()):
+    rows = [
+        _zo_row(),
+        _zo_row(
+            method="tezo", kernel="pallas", weight_quant="lut4",
+            weight_bytes_reduction=3.2,
+        ),
+        {"leg": "forward", "method": "fwd", "kernel": "xla", "hardware": "cpu"},
+        {
+            "leg": "serve", "method": "engine", "kernel": "xla",
+            "hardware": "cpu", "tok_per_s": 10.0, "ttft_p50_ms": 1.0,
+            "ttft_p99_ms": 2.0, "max_concurrent_decodes": 4,
+        },
+    ]
+    rows.extend(extra_rows)
+    return {"schema": schema, "records": rows}
+
+
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(obj if isinstance(obj, str) else json.dumps(obj))
+    return str(p)
+
+
+def test_check_bench_graceful_on_malformed_inputs(tmp_path, capsys):
+    good = _write(tmp_path, "good.json", _good_doc())
+    cases = [
+        str(tmp_path / "missing.json"),              # unreadable path
+        _write(tmp_path, "trunc.json", '{"schema": 7, "records": ['),
+        _write(tmp_path, "list.json", [1, 2, 3]),
+        _write(tmp_path, "noschema.json", {"records": [_zo_row()]}),
+        _write(tmp_path, "norecords.json", {"schema": 7}),
+        _write(tmp_path, "empty.json", {"schema": 7, "records": []}),
+    ]
+    for bad in cases:
+        assert check(bad, good) == 1, bad
+        out = capsys.readouterr().out
+        assert "[check_bench] FAIL" in out, (bad, out)
+    # ...and a malformed BASELINE fails the same way
+    assert check(good, cases[1]) == 1
+    assert check(good, good) == 0
+
+
+def test_check_bench_schema7_requirements(tmp_path):
+    good = _write(tmp_path, "good.json", _good_doc())
+    # a schema-7 record without a hardware label fails
+    doc = _good_doc()
+    del doc["records"][0]["hardware"]
+    assert check(_write(tmp_path, "nohw.json", doc), good) == 1
+    # no quantized row fails at schema 7...
+    doc = _good_doc()
+    doc["records"] = [r for r in doc["records"] if "weight_quant" not in r]
+    assert check(_write(tmp_path, "noquant.json", doc), good) == 1
+    # ...as does a quantized row below the 3x storage ratchet
+    doc = _good_doc()
+    for r in doc["records"]:
+        if "weight_bytes_reduction" in r:
+            r["weight_bytes_reduction"] = 2.0
+    assert check(_write(tmp_path, "lowred.json", doc), good) == 1
+    # pre-7 schemas are exempt (the committed baseline ratchets forward)
+    doc6 = _good_doc(schema=6)
+    doc6["records"] = [r for r in doc6["records"] if "weight_quant" not in r]
+    base6 = _write(tmp_path, "base6.json", doc6)
+    assert check(base6, base6) == 0
+
+
+def test_check_bench_hardware_scoped_ratchet(tmp_path):
+    """Baseline combinations on hardware the fresh run never executed on
+    (e.g. committed TPU rows checked on a CPU runner) are not binding; the
+    same combination ON the fresh run's hardware still is."""
+    base = _good_doc(
+        extra_rows=[_zo_row(kernel="pallas", hardware="tpu:v5e")]
+    )
+    fresh_ok = _write(tmp_path, "fresh.json", _good_doc())
+    assert check(fresh_ok, _write(tmp_path, "base.json", base)) == 0
+    base_cpu = _good_doc(extra_rows=[_zo_row(method="mezo")])
+    assert check(fresh_ok, _write(tmp_path, "base2.json", base_cpu)) == 1
+
+
+def test_record_keys_defaults():
+    keys = record_keys({"records": [{"method": "tezo", "kernel": "xla"}]})
+    assert keys == {("zo-step", "tezo", "xla", "1x1", "cpu", "none")}
