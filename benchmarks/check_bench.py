@@ -27,7 +27,11 @@ runner) are reported but not enforced.  Schema 7 also adds the
 quantized-leaf leg: a schema-≥7 fresh file must carry at least one zo-step
 row with ``weight_quant != "none"`` whose ``weight_bytes_reduction``
 (dense-f16 bytes ÷ stored packed bytes) is ≥ 3.0 — the storage win the
-QuantLeaf representation exists for can't silently regress.
+QuantLeaf representation exists for can't silently regress.  Schema 8 adds
+the speculative serve leg: a schema-≥8 fresh file must carry at least one
+serve row with ``spec_decode: true``, and every such row must record
+``acceptance_rate``, ``spec_tok_per_s`` and ``draft_len`` — speculative
+decoding can't silently fall out of the bench or lose its accounting.
 New combinations are allowed (they become binding once committed).
 
 Usage (CI):
@@ -202,6 +206,28 @@ def check(fresh_path: str, baseline_path: str) -> int:
                 f"[check_bench] FAIL: no quantized record in {fresh_path} "
                 f"reaches weight_bytes_reduction ≥ {QUANT_MIN_REDUCTION} "
                 f"(best: {best}) — the packed-storage win regressed",
+            )
+            return 1
+    # schema 8: the speculative serve leg must be present and its rows
+    # self-describing (acceptance + spec throughput + the draft length the
+    # numbers were measured at); schema-7 docs are exempt
+    if fresh.get("schema", 0) >= 8:
+        spec_rows = [r for r in serve_rows if r.get("spec_decode")]
+        if not spec_rows:
+            print(
+                f"[check_bench] FAIL: {fresh_path} (schema ≥ 8) has no "
+                "speculative serve records (spec_decode: true)",
+            )
+            return 1
+        _SPEC_FIELDS = ("acceptance_rate", "spec_tok_per_s", "draft_len")
+        bad_spec = [
+            r for r in spec_rows if any(f not in r for f in _SPEC_FIELDS)
+        ]
+        if bad_spec:
+            print(
+                f"[check_bench] FAIL: {len(bad_spec)} speculative serve "
+                f"record(s) in {fresh_path} lack schema-8 fields "
+                f"{_SPEC_FIELDS}",
             )
             return 1
     # the coverage ratchet, scoped per hardware: baseline combinations are

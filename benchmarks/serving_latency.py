@@ -9,13 +9,21 @@ p50/p99 (queueing included — arrivals can outpace the ``max_concurrent_
 decodes`` slots), and per-output-token latency p50/p99 from each request's
 emission timestamps.
 
-Rows ride ``results/BENCH_kernels.json`` as ``leg: "serve"`` (schema 6, see
+Rows ride ``results/BENCH_kernels.json`` as ``leg: "serve"`` (see
 ``table8_walltime.run``), one per kernel mode: off-TPU the paged decode-
 attention kernel dispatches to its XLA twin (``executed: "xla-region"``), so
 CPU rows are plumbing/latency-structure coverage the same way the forward
 leg's are; kernel speed is the on-TPU follow-on.  ``check_bench`` fails a
 fresh record file whose serve rows are missing or lack the throughput/TTFT
 fields.
+
+``spec_serve_leg_rows`` (schema 8) adds the speculative-decoding leg: the
+same Poisson trace served twice — plain engine, then spec engine (prompt-
+lookup draft + multi-token verify) — over a deliberately low-entropy token
+alphabet so the drafter gets hits; rows carry ``acceptance_rate``,
+``tok_per_verify``, ``spec_tok_per_s`` against ``baseline_tok_per_s``, and
+the greedy streams are asserted token-bitwise identical before the row is
+recorded.
 
 Standalone:
     PYTHONPATH=src python -m benchmarks.serving_latency --requests 16 \
@@ -117,6 +125,8 @@ def serve_leg_rows(
                 "tok_per_s": stats["tok_per_s"],
                 "ttft_p50_ms": stats["ttft_p50_ms"],
                 "ttft_p99_ms": stats["ttft_p99_ms"],
+                "queue_p50_ms": stats["queue_p50_ms"],
+                "queue_p99_ms": stats["queue_p99_ms"],
                 "tpot_p50_ms": round(1e3 * float(np.percentile(tpot, 50)), 3),
                 "tpot_p99_ms": round(1e3 * float(np.percentile(tpot, 99)), 3),
                 "requests": stats["requests"],
@@ -130,6 +140,92 @@ def serve_leg_rows(
     return rows
 
 
+def spec_serve_leg_rows(
+    n_requests: int = 12,
+    rate_hz: float = 20.0,
+    max_concurrent: int = 4,
+    max_prompt_len: int = 16,
+    max_new: int = 8,
+    page_size: int = 8,
+    draft_len: int = 4,
+    kernel_modes=("xla", "pallas"),
+) -> list[dict]:
+    """Speculative-decoding serve leg: baseline vs spec engine on one trace.
+
+    The trace draws tokens from a small alphabet (prompt-lookup needs
+    n-gram repeats to propose anything); both engines serve it greedily and
+    the emitted streams are asserted bitwise identical — the bench refuses
+    to record a spec row whose speedup came from changing the output."""
+    rows = []
+    for kernel_mode in kernel_modes:
+        cfg = get_smoke_config(SERVE_ARCH).reduced(kernel_mode=kernel_mode)
+        engines = {}
+        for spec in (False, True):
+            engines[spec] = ServeEngine(
+                cfg,
+                max_concurrent_decodes=max_concurrent,
+                max_prompt_len=max_prompt_len,
+                max_new_tokens=max_new,
+                page_size=page_size,
+                spec_decode=spec,
+                draft_len=draft_len,
+            )
+            engines[spec].warmup()
+        alphabet = min(cfg.vocab_size, 8)  # low entropy → drafter hits
+        out = {}
+        for spec, eng in engines.items():
+            reqs = poisson_trace(
+                n_requests, rate_hz, alphabet, eng.buckets, max_new
+            )
+            results, stats = eng.serve(reqs)
+            assert stats["compile_count"] == eng.compile_count  # no-recompile
+            out[spec] = (results, stats)
+        res_b, stats_b = out[False]
+        res_s, stats_s = out[True]
+        for rid in res_b:
+            assert np.array_equal(res_b[rid]["tokens"], res_s[rid]["tokens"]), (
+                f"spec stream diverged from baseline for {rid}"
+            )
+        tpot = np.concatenate(
+            [np.diff(r["times"]) for r in res_s.values() if len(r["times"]) > 1]
+        )
+        label, executed = _serve_kernel_label(kernel_mode)
+        rows.append(
+            {
+                "leg": "serve",
+                "model": cfg.name,
+                "method": f"serve-spec:{cfg.name}",
+                "kernel": label,
+                "executed": executed,
+                "mesh": "1x1",
+                "spec_decode": True,
+                "draft_len": draft_len,
+                "acceptance_rate": stats_s["acceptance_rate"],
+                "tok_per_verify": stats_s["tok_per_verify"],
+                "tok_per_s": stats_s["tok_per_s"],
+                "spec_tok_per_s": stats_s["tok_per_s"],
+                "baseline_tok_per_s": stats_b["tok_per_s"],
+                "speedup": round(
+                    stats_s["tok_per_s"] / max(stats_b["tok_per_s"], 1e-9), 3
+                ),
+                "ttft_p50_ms": stats_s["ttft_p50_ms"],
+                "ttft_p99_ms": stats_s["ttft_p99_ms"],
+                "queue_p50_ms": stats_s["queue_p50_ms"],
+                "queue_p99_ms": stats_s["queue_p99_ms"],
+                "tpot_p50_ms": round(1e3 * float(np.percentile(tpot, 50)), 3),
+                "tpot_p99_ms": round(1e3 * float(np.percentile(tpot, 99)), 3),
+                "requests": stats_s["requests"],
+                "emitted_tokens": stats_s["emitted_tokens"],
+                "decode_steps": stats_s["decode_steps"],
+                "baseline_decode_steps": stats_b["decode_steps"],
+                "arrival_rate_hz": rate_hz,
+                "max_concurrent_decodes": stats_s["max_concurrent_decodes"],
+                "page_size": stats_s["page_size"],
+            }
+        )
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -137,6 +233,10 @@ def main() -> None:
     ap.add_argument("--max-concurrent", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--draft-len", type=int, default=4)
+    ap.add_argument(
+        "--no-spec", action="store_true", help="skip the speculative leg"
+    )
     args = ap.parse_args()
     rows = serve_leg_rows(
         n_requests=args.requests,
@@ -145,6 +245,15 @@ def main() -> None:
         max_new=args.max_new,
         page_size=args.page_size,
     )
+    if not args.no_spec:
+        rows += spec_serve_leg_rows(
+            n_requests=args.requests,
+            rate_hz=args.rate,
+            max_concurrent=args.max_concurrent,
+            max_new=args.max_new,
+            page_size=args.page_size,
+            draft_len=args.draft_len,
+        )
     emit_csv("serving_latency", rows)
     print(json.dumps(rows, indent=1))
 

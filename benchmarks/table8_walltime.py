@@ -52,6 +52,16 @@ walltime rows.  Off-TPU the paged decode-attention kernel executes its
 marker-region XLA twin, so CPU serve rows are latency-structure/plumbing
 coverage like the forward leg's.  ``check_bench`` fails a fresh file with
 no serve rows or serve rows missing the throughput/TTFT fields.
+
+Speculative serve leg (schema 8): the same Poisson trace is served twice —
+plain engine, then with ``spec_decode`` (prompt-lookup drafts scored by the
+multi-token paged verify kernel) — and the spec rows record
+``acceptance_rate``, ``tok_per_verify``, ``spec_tok_per_s`` against
+``baseline_tok_per_s``, plus per-request ``queue_*`` percentiles now split
+from TTFT on every serve row.  The greedy spec stream is asserted bitwise
+identical to the baseline before a row is recorded.  ``check_bench``
+(schema ≥ 8) fails a fresh file whose serve leg has no spec row or whose
+spec rows lack ``acceptance_rate`` / ``spec_tok_per_s`` / ``draft_len``.
 """
 from __future__ import annotations
 
@@ -70,7 +80,7 @@ from benchmarks.common import (
     time_fn,
     zo_step_bytes_model,
 )
-from benchmarks.serving_latency import serve_leg_rows
+from benchmarks.serving_latency import serve_leg_rows, spec_serve_leg_rows
 from repro.configs import get_smoke_config
 from repro.configs.base import ShapeConfig
 from repro.core import KERNEL_METHODS, ZOConfig, build_zo_train_step, init_zo_state
@@ -572,6 +582,7 @@ def run(
     rows += quant_leg_rows(iters)
     rows += forward_leg_rows(iters)
     rows += serve_leg_rows()
+    rows += spec_serve_leg_rows()
     if sharded:
         rows += _sharded_leg_subprocess(iters)
     # schema 7: every record is hardware-labeled — rows from different
@@ -622,7 +633,11 @@ def run(
                 # quantized zo-step leg (``weight_quant: "lut4"`` QuantLeaf
                 # rows with ``weight_bytes_reduction`` — packed storage vs
                 # dense f16 — and a packed-code-aware bytes-moved model)
-                "schema": 7,
+                # schema 8: a speculative serve leg (``spec_decode: true``
+                # rows with acceptance_rate / tok_per_verify / spec_tok_per_s
+                # vs baseline_tok_per_s) and queue_* percentiles split from
+                # TTFT on every serve row
+                "schema": 8,
                 "bench": "table8_walltime",
                 # interpret-mode pallas rows are semantics checks, not
                 # fused-kernel speed measurements — consumers must filter

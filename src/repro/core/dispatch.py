@@ -1388,6 +1388,42 @@ def decode_attention_fwd(
     )
 
 
+def verify_attention_fwd(
+    q: jax.Array,             # [S, T, H, dh] draft window per decode slot
+    k_pages: jax.Array,       # [n_pages, page_size, KV, dh] shared page pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, pages_per_slot] int32 physical page ids
+    lengths: jax.Array,       # [S] int32; window position t attends kpos < lengths+t
+    *,
+    mode: str = "auto",
+) -> jax.Array:
+    """Paged multi-token speculative-verify attention (one verify forward).
+
+    The T-token generalization of :func:`decode_attention_fwd`: every window
+    position attends the slot's paged history plus a causal intra-window
+    prefix, so one call scores all S×T draft positions.  Same routing
+    contract — Pallas path runs the block-table verify kernel
+    (kernels/decode_attention), off-TPU auto-detection takes the
+    fold-window-into-slots XLA twin inside the PALLAS_FLASH_REGION marker —
+    and at T=1 both lowerings reduce bitwise to the decode paths, which is
+    what lets the engine promise greedy spec==non-spec token identity.  No
+    shard_map wrap, same as decode: the slot axis is not a mesh axis.
+    """
+    from repro.models import layers  # lazy: layers imports this module
+
+    path, kernel = forward_execution(mode)
+    if path == "pallas" and kernel:
+        return ops.paged_verify_attention(q, k_pages, v_pages, block_tables, lengths)
+    if path == "pallas":
+        with jax.named_scope("PALLAS_FLASH_REGION"):
+            return layers.paged_verify_attention_ref(
+                q, k_pages, v_pages, block_tables, lengths
+            )
+    return layers.paged_verify_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths
+    )
+
+
 def selective_scan_fwd(
     x: jax.Array,      # [B, S, D]
     dt: jax.Array,     # [B, S, D] (softplus'd)

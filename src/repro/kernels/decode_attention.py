@@ -1,4 +1,6 @@
-"""Pallas TPU kernel: paged (block-table) KV-cache decode attention.
+"""Pallas TPU kernels: paged (block-table) KV-cache decode attention, single
+query per slot (``paged_decode_attention``) and the multi-token speculative
+verify generalization (``paged_verify_attention``).
 
 The serving engine keeps every slot's KV cache as fixed-size pages in one
 shared pool (``k_pages/v_pages [n_pages, page_size, KV, dh]``) addressed
@@ -144,6 +146,150 @@ def paged_decode_attention(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((S, KV, G, dh), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pages, v_pages)
+
+
+def _paged_verify_kernel(
+    bt_ref,  # scalar prefetch: [S, P] int32 block table
+    len_ref,  # scalar prefetch: [S] int32 kv count valid for window position 0
+    q_ref,  # [1, T, 1, G, dh] — the slot's whole draft window, one kv head
+    k_ref,  # [1, page_size, 1, dh] — the page picked by the index map
+    v_ref,
+    o_ref,  # [1, T, 1, G, dh]
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    page_size: int,
+    n_pages: int,
+    n_draft: int,
+    group: int,
+    scale: float,
+):
+    """Speculative-verify attention: window position ``t`` of slot ``s``
+    attends ``kpos < lengths[s] + t`` — the slot's paged history plus a
+    causal intra-window mask over the draft tokens themselves (whose KV the
+    engine has already written into the pages at positions
+    ``lengths[s]-1 .. lengths[s]+T-2``).  Collapses the window into the
+    sublane axis ([T·G, dh] queries) so the per-page online-softmax update
+    is one dot + one masked exp, exactly the decode kernel's — at T=1 the
+    arithmetic is instruction-for-instruction the decode kernel's, which
+    the parity tests assert bitwise."""
+    s = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[s]
+    base = ip * page_size
+
+    # A page contributes if any window row attends into it; the last row
+    # (t = T-1) reaches kpos < length + T - 1.  length == 0 marks a dead
+    # slot: skip every page so the zero-filled scratch writes exact zeros
+    # (position 0 is unconditionally attended by every live row, so each
+    # live row's running max is finite from the first page on).
+    @pl.when((length > 0) & (base < length + n_draft - 1))
+    def _body():
+        dh = q_ref.shape[-1]
+        q = q_ref[0, :, 0].astype(jnp.float32)  # [T, G, dh]
+        q = q.reshape(n_draft * group, dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [page_size, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sc = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # [T*G, page_size]
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        qt = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0) // group
+        sc = jnp.where(kpos < length + qt, sc, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _fin():
+        dh = o_ref.shape[-1]
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o = (acc_scr[...] / denom).astype(o_ref.dtype)
+        o_ref[0, :, 0] = o.reshape(n_draft, group, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("head_scale", "interpret"))
+def paged_verify_attention(
+    q: jax.Array,  # [S, T, KV, G, dh] — T draft-window queries per slot
+    k_pages: jax.Array,  # [n_pages, page_size, KV, dh]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, pages_per_slot] int32 physical page ids
+    lengths: jax.Array,  # [S] int32 kv count valid for window position 0
+    *,
+    head_scale: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns [S, T, KV, G, dh].  Same scalar-prefetch block-table grid as
+    :func:`paged_decode_attention` — grid (S, KV, P), page index innermost,
+    the pool gather IS the DMA schedule — with the whole T-token draft
+    window riding the query tile and a causal intra-window mask on top of
+    the per-slot length mask.  ``lengths[s]`` counts the kv positions the
+    FIRST window token attends (its own included), so T=1 is exactly the
+    decode kernel.  Dead slots (length 0) write exact zeros."""
+    S, T, KV, G, dh = q.shape
+    page_size = k_pages.shape[1]
+    P = block_tables.shape[1]
+    scale = head_scale if head_scale else dh**-0.5
+
+    kernel = functools.partial(
+        _paged_verify_kernel,
+        page_size=page_size,
+        n_pages=P,
+        n_draft=T,
+        group=G,
+        scale=scale,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, P),
+        in_specs=[
+            pl.BlockSpec(
+                (1, T, 1, G, dh), lambda s, h, ip, bt, lens: (s, 0, h, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, dh),
+                lambda s, h, ip, bt, lens: (bt[s, ip], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, dh),
+                lambda s, h, ip, bt, lens: (bt[s, ip], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, T, 1, G, dh), lambda s, h, ip, bt, lens: (s, 0, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, T, KV, G, dh), q.dtype),
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

@@ -617,6 +617,39 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths):
     return out.reshape(S, H, dh)
 
 
+def paged_verify_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Speculative-verify paged attention with pad-and-mask tiling.
+
+    ``q [S, T, H, dh]`` (the T-token draft window per slot), pages/tables/
+    lengths as in :func:`paged_decode_attention` — ``lengths[s]`` is the kv
+    count the first window position attends, window position t attends
+    ``kpos < lengths[s] + t``.  Returns ``[S, T, H, dh]``.  Same padding
+    contract as the decode wrapper: GQA group and head dim pad to the
+    sublane multiple (zero query rows slice off, softmax scale pinned to
+    the true dh); at T=1 this is exactly the decode wrapper's call shape.
+    """
+    from repro.kernels.decode_attention import paged_verify_attention as _verify
+
+    S, T, H, dh = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    g_pad = _round_up(G, 8)
+    dh_pad = _round_up(dh, _SUBLANE)
+    qg = q.reshape(S, T, KV, G, dh)
+    qg = _pad_axis(_pad_axis(qg, 3, g_pad), 4, dh_pad)
+    out = _verify(
+        qg,
+        _pad_axis(k_pages, 3, dh_pad),
+        _pad_axis(v_pages, 3, dh_pad),
+        block_tables,
+        lengths,
+        head_scale=dh**-0.5,
+        interpret=_interpret(),
+    )
+    out = out[:, :, :, :G, :dh]
+    return out.reshape(S, T, H, dh)
+
+
 def quant_matmul(x, codes, lut, xu, qv, *, bits: int):
     """x @ (dequant(codes) + qu·diag(acc)·qvᵀ) with in-tile LUT dequant.
 

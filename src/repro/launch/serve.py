@@ -21,12 +21,25 @@ legacy static-batch driver.
   ``decode_step_paged`` over all slots; attention goes through
   ``core.dispatch.decode_attention_fwd`` (the block-table Pallas kernel on
   TPU / interpret-under-tests, the gather-then-dense XLA twin elsewhere).
+* **Speculative decoding.** With ``spec_decode=True`` each step drafts up
+  to ``draft_len`` tokens per slot with a model-free prompt-lookup (n-gram)
+  drafter over the request's own history, scores the whole window in one
+  ``verify_step_paged`` forward (multi-token paged verify attention), and
+  commits the longest agreeing prefix plus the bonus token.  Rejected draft
+  KV is rolled back by the length pointer — never copied.  The greedy
+  spec stream is token-bitwise identical to the non-spec engine, and under
+  temperature the per-request fold-in key is consumed per *emitted
+  position*, so sampling replays the vanilla stream too.
 * **Threaded detokenize.** Emitted tokens go to a daemon worker through an
   unbounded queue — the decode loop never blocks on host-side
   detokenization; the backlog drains at ``finish()``.
 * **No-recompile contract.** ``compile_count`` counts every XLA compile the
   engine performs; after ``warmup()`` it must not grow during ``serve()``
   (the serving tests assert exactly that).
+* **Page-budget exhaustion.** A request whose ``max_new`` overruns its
+  slot's page quota is admitted anyway with a truncated emission budget
+  (flagged in its result and in stats) — the block table is never indexed
+  past its end, and no live slot ever reaches the capacity pointer.
 
 Every per-slot op in the decode step is row-independent, so a request's
 token stream is bitwise-identical whether it is served alone or inserted
@@ -75,12 +88,42 @@ class Request:
 
 @dataclass
 class _Live:
-    """Host-side state of a request currently occupying a slot."""
+    """Host-side state of a request currently occupying a slot.
+
+    ``budget`` is the emission budget actually granted (``req.max_new``,
+    or less when the slot's page quota can't hold it — then ``truncated``
+    is set); ``history`` is prompt + everything emitted so far, the
+    drafter's only input (a pure function of the request's own stream, so
+    speculation cannot couple slots)."""
 
     req: Request
     slot: int
     generated: int = 0
     key: np.ndarray = field(default_factory=lambda: np.zeros(2, np.uint32))
+    budget: int = 0
+    truncated: bool = False
+    history: list = field(default_factory=list)
+
+
+def prompt_lookup_draft(history, draft_len: int, max_ngram: int = 3) -> list:
+    """Model-free prompt-lookup drafter (PLD / n-gram speculation).
+
+    Finds the longest n-gram (n ≤ ``max_ngram``) ending the history that
+    also occurred earlier, preferring the most recent earlier occurrence,
+    and proposes up to ``draft_len`` of the tokens that followed it.
+    Deterministic and a pure function of the request's *own* history —
+    the engine's solo-vs-batched bitwise identity survives speculation.
+    Returns [] when no n-gram repeats (the engine then verifies a
+    1-token window, which is exactly a decode step)."""
+    L = len(history)
+    if L < 2 or draft_len <= 0:
+        return []
+    for n in range(min(max_ngram, L - 1), 0, -1):
+        suffix = history[L - n :]
+        for start in range(L - n - 1, -1, -1):
+            if history[start : start + n] == suffix:
+                return list(history[start + n : start + n + draft_len])
+    return []
 
 
 class SlotScheduler:
@@ -229,8 +272,12 @@ class ServeEngine:
         temperature: float = 0.0,
         seed: int = 0,
         detokenize=None,
+        spec_decode: bool = False,
+        draft_len: int = 4,
     ):
         assert page_size > 0 and page_size & (page_size - 1) == 0, page_size
+        if spec_decode and draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
         self.cfg = cfg
         self.model = build_model(cfg)
         if not self.model.supports_paged_decode:
@@ -245,6 +292,8 @@ class ServeEngine:
         self.page_size = page_size
         self.eos_id = eos_id
         self.temperature = temperature
+        self.spec_decode = spec_decode
+        self.draft_len = draft_len if spec_decode else 0
         self._detok = detokenize or (lambda t: f"<{t}>")
 
         bucket_cap = page_size
@@ -267,6 +316,8 @@ class ServeEngine:
         self._insert_exe: dict = {}
         self._decode_exe = None
         self._sample_exe: dict = {}
+        self._verify_exe = None
+        self._verify_sample_exe = None
 
     # ------------------------------------------------------------------
     # warmup: AOT-compile every executable the serve loop can need
@@ -330,6 +381,23 @@ class ServeEngine:
                 jax.ShapeDtypeStruct((n, 2), jnp.uint32),
                 jax.ShapeDtypeStruct((n,), jnp.int32),
             )
+        if self.spec_decode:
+            Tv = self.draft_len + 1
+            self._verify_exe = self._aot(
+                model.verify_step_paged,
+                p_aval,
+                c_aval,
+                jax.ShapeDtypeStruct((S, P), jnp.int32),
+                jax.ShapeDtypeStruct((S,), jnp.int32),
+                jax.ShapeDtypeStruct((S, Tv), jnp.int32),
+                donate=(1,),
+            )
+            self._verify_sample_exe = self._aot(
+                self._verify_sample_fn,
+                jax.ShapeDtypeStruct((S, Tv, V), logits_dt),
+                jax.ShapeDtypeStruct((S, 2), jnp.uint32),
+                jax.ShapeDtypeStruct((S,), jnp.int32),
+            )
 
     def _sample_fn(self, logits, keys, steps):
         """Greedy argmax, or per-row categorical keyed by the request's
@@ -343,6 +411,24 @@ class ServeEngine:
 
         return jax.vmap(one)(logits, keys, steps).astype(jnp.int32)
 
+    def _verify_sample_fn(self, logits, keys, steps):
+        """Per-position sampling over a verify window ([S, T, V]): window
+        position t of slot s uses ``fold_in(key_s, steps_s + t)`` — exactly
+        the key the non-spec loop would consume for that emitted position,
+        so the accepted stream replays the vanilla stream bit-for-bit."""
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def one(row, key, step):
+            k = jax.random.fold_in(key, step)
+            return jax.random.categorical(k, row / self.temperature)
+
+        def per_slot(rows, key, base):
+            offs = base + jnp.arange(rows.shape[0], dtype=jnp.int32)
+            return jax.vmap(lambda r, s: one(r, key, s))(rows, offs)
+
+        return jax.vmap(per_slot)(logits, keys, steps).astype(jnp.int32)
+
     # ------------------------------------------------------------------
     # serve loop
     # ------------------------------------------------------------------
@@ -354,14 +440,15 @@ class ServeEngine:
             f"prompt length {n} exceeds the largest bucket {self.buckets[-1]}"
         )
 
-    def _admit(self, req: Request, worker, live: dict, fed: np.ndarray, now: float):
+    def _admit(self, req: Request, worker, live: dict, fed: np.ndarray, clock):
+        """Prefill + first sample for ``req``; returns the first-token
+        timestamp.  A request whose ``max_new`` overruns the slot's page
+        quota is truncated to the quota (flagged), never rejected: the
+        emission budget ``capacity - n + 1`` is exact because the final
+        emitted token needs no KV slot."""
         n = int(len(req.tokens))
-        if n + req.max_new > self.capacity:
-            raise ValueError(
-                f"{req.id}: prompt {n} + max_new {req.max_new} exceeds the "
-                f"per-slot capacity {self.capacity}"
-            )
         bkt = self._bucket_for(n)
+        budget = min(req.max_new, self.capacity - n + 1)
         padded = np.zeros((1, bkt), np.int32)
         padded[0, :n] = np.asarray(req.tokens, np.int32)
         logits, k_new, v_new = self._prefill_exe[bkt](self.params, padded, np.int32(n))
@@ -370,18 +457,28 @@ class ServeEngine:
         self.cache = self._insert_exe[bkt](
             self.cache, k_new, v_new, np.ascontiguousarray(page_ids)
         )
-        lv = _Live(req=req, slot=slot, key=_threefry_key(req.seed))
+        lv = _Live(
+            req=req,
+            slot=slot,
+            key=_threefry_key(req.seed),
+            budget=budget,
+            truncated=budget < req.max_new,
+            history=[int(t) for t in req.tokens],
+        )
         tok0 = int(
             self._sample_exe[1](logits, lv.key[None], np.zeros((1,), np.int32))[0]
         )
         lv.generated = 1
-        worker.put(req.id, tok0, now)
+        lv.history.append(tok0)
+        t_first = clock()
+        worker.put(req.id, tok0, t_first)
         fed[slot] = tok0
         live[slot] = lv
-        if (self.eos_id >= 0 and tok0 == self.eos_id) or req.max_new <= 1:
+        if (self.eos_id >= 0 and tok0 == self.eos_id) or lv.budget <= 1:
             self.scheduler.evict(slot)
             del live[slot]
             fed[slot] = 0
+        return t_first, lv.truncated
 
     def serve(
         self, requests: list[Request], *, step_clock: bool = False
@@ -400,16 +497,29 @@ class ServeEngine:
         keys = np.zeros((self.n_slots, 2), np.uint32)
         steps_arr = np.zeros((self.n_slots,), np.int32)
         ttft: dict[str, float] = {}
+        queue_t: dict[str, float] = {}
+        truncated: dict[str, bool] = {}
         t0 = time.perf_counter()
         step = 0
         emitted = 0
+        spec_proposed = 0
+        spec_accepted = 0
+        decode_emitted = 0
+        Tv = self.draft_len + 1
+
+        def clock():
+            return float(step) if step_clock else time.perf_counter() - t0
+
         while pending or live:
-            now = float(step) if step_clock else time.perf_counter() - t0
+            now = clock()
             while pending and pending[0].arrival <= now and sched.has_free_slot():
                 req = pending.popleft()
-                t_adm = float(step) if step_clock else time.perf_counter() - t0
-                self._admit(req, worker, live, fed, t_adm)
-                ttft[req.id] = t_adm - req.arrival
+                # queue time ends at admission; ttft additionally pays the
+                # prefill + first sample — they are separate stats
+                queue_t[req.id] = clock() - req.arrival
+                t_first, trunc = self._admit(req, worker, live, fed, clock)
+                ttft[req.id] = t_first - req.arrival
+                truncated[req.id] = trunc
                 emitted += 1
             if not live:
                 if step_clock:
@@ -420,6 +530,58 @@ class ServeEngine:
             for slot, lv in live.items():
                 keys[slot] = lv.key
                 steps_arr[slot] = lv.generated
+            if self.spec_decode:
+                window = np.zeros((self.n_slots, Tv), np.int32)
+                drafts: dict[int, list] = {}
+                for slot, lv in live.items():
+                    d = prompt_lookup_draft(lv.history, self.draft_len)
+                    drafts[slot] = d
+                    window[slot, 0] = fed[slot]
+                    if d:
+                        window[slot, 1 : 1 + len(d)] = d
+                logits, self.cache = self._verify_exe(
+                    self.params,
+                    self.cache,
+                    np.ascontiguousarray(sched.block_tables),
+                    np.ascontiguousarray(sched.lengths),
+                    window,
+                )
+                toks = np.asarray(self._verify_sample_exe(logits, keys, steps_arr))
+                step += 1
+                t_now = clock()
+                for slot in list(live):
+                    lv = live[slot]
+                    d = drafts[slot]
+                    # accept the longest draft prefix the model re-derives;
+                    # each acceptance frees one more verified position, and
+                    # position a's sample is the bonus token — so a step
+                    # emits a+1 tokens, capped by the emission budget
+                    emit_room = lv.budget - lv.generated
+                    a = 0
+                    while a < min(len(d), emit_room - 1) and int(toks[slot, a]) == d[a]:
+                        a += 1
+                    emits = [int(toks[slot, j]) for j in range(a + 1)]
+                    if self.eos_id >= 0 and self.eos_id in emits:
+                        emits = emits[: emits.index(self.eos_id) + 1]
+                    n_em = len(emits)
+                    spec_proposed += len(d)
+                    spec_accepted += min(a, n_em - 1)
+                    for tok in emits:
+                        worker.put(lv.req.id, tok, t_now)
+                    emitted += n_em
+                    decode_emitted += n_em
+                    lv.history.extend(emits)
+                    lv.generated += n_em
+                    # rejected tail KV (positions past the last commit) is
+                    # rolled back by this pointer alone — never copied out
+                    sched.lengths[slot] += n_em
+                    fed[slot] = emits[-1]
+                    hit_eos = self.eos_id >= 0 and emits[-1] == self.eos_id
+                    if hit_eos or lv.generated >= lv.budget:
+                        sched.evict(slot)
+                        del live[slot]
+                        fed[slot] = 0
+                continue
             logits, self.cache = self._decode_exe(
                 self.params,
                 self.cache,
@@ -429,17 +591,19 @@ class ServeEngine:
             )
             toks = np.asarray(self._sample_exe[self.n_slots](logits, keys, steps_arr))
             step += 1
-            t_now = float(step) if step_clock else time.perf_counter() - t0
+            t_now = clock()
             for slot in list(live):
                 lv = live[slot]
                 tok = int(toks[slot])
                 lv.generated += 1
                 sched.lengths[slot] += 1
+                lv.history.append(tok)
                 worker.put(lv.req.id, tok, t_now)
                 emitted += 1
+                decode_emitted += 1
                 fed[slot] = tok
                 hit_eos = self.eos_id >= 0 and tok == self.eos_id
-                if hit_eos or lv.generated >= lv.req.max_new:
+                if hit_eos or lv.generated >= lv.budget:
                     sched.evict(slot)
                     del live[slot]
                     fed[slot] = 0
@@ -451,12 +615,17 @@ class ServeEngine:
                 "text": "".join(r["text"]),
                 "times": r["times"],
                 "ttft_s": ttft[rid],
+                "queue_time_s": queue_t[rid],
+                "truncated": truncated[rid],
             }
             for rid, r in raw.items()
         }
         ttfts = sorted(ttft.values())
-        p50 = round(1e3 * float(np.percentile(ttfts, 50)), 3) if ttfts else 0.0
-        p99 = round(1e3 * float(np.percentile(ttfts, 99)), 3) if ttfts else 0.0
+        queues = sorted(queue_t.values())
+
+        def _pct(xs, q):
+            return round(1e3 * float(np.percentile(xs, q)), 3) if xs else 0.0
+
         stats = {
             "requests": len(requests),
             "emitted_tokens": emitted,
@@ -464,12 +633,24 @@ class ServeEngine:
             "decode_steps": step,
             "wall_s": round(wall, 4),
             "tok_per_s": round(emitted / max(wall, 1e-9), 1),
-            "ttft_p50_ms": p50,
-            "ttft_p99_ms": p99,
+            "ttft_p50_ms": _pct(ttfts, 50),
+            "ttft_p99_ms": _pct(ttfts, 99),
+            "queue_p50_ms": _pct(queues, 50),
+            "queue_p99_ms": _pct(queues, 99),
+            "truncated_requests": int(sum(truncated.values())),
             "max_concurrent_decodes": self.n_slots,
             "page_size": self.page_size,
             "compile_count": self.compile_count,
+            "spec_decode": self.spec_decode,
         }
+        if self.spec_decode:
+            stats["draft_len"] = self.draft_len
+            stats["proposed_tokens"] = spec_proposed
+            stats["accepted_tokens"] = spec_accepted
+            stats["acceptance_rate"] = round(
+                spec_accepted / max(spec_proposed, 1), 4
+            )
+            stats["tok_per_verify"] = round(decode_emitted / max(step, 1), 3)
         return results, stats
 
 
@@ -571,7 +752,24 @@ def main() -> None:
     )
     ap.add_argument("--max-concurrent", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument(
+        "--spec-decode",
+        action="store_true",
+        help="speculative decoding (prompt-lookup draft + multi-token "
+        "verify); requires --engine",
+    )
+    ap.add_argument(
+        "--draft-len",
+        type=int,
+        default=4,
+        help="max draft tokens proposed per verify step (with --spec-decode)",
+    )
     args = ap.parse_args()
+    if args.spec_decode and not args.engine:
+        ap.error(
+            "--spec-decode requires --engine: the static-batch "
+            "BatchedServer has no draft/verify pipeline"
+        )
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     rng = np.random.default_rng(0)
@@ -586,6 +784,8 @@ def main() -> None:
             page_size=args.page_size,
             eos_id=args.eos_id,
             temperature=args.temperature,
+            spec_decode=args.spec_decode,
+            draft_len=args.draft_len,
         )
         reqs = [
             Request(id=f"r{i}", tokens=prompts[i], max_new=args.max_new)

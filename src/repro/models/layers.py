@@ -201,6 +201,31 @@ def paged_decode_attention_ref(
     return decode_attention(q[:, None], k, v, valid)[:, 0]
 
 
+def paged_verify_attention_ref(
+    q: jax.Array,            # [S, T, H, dh] the draft window per slot
+    k_pages: jax.Array,      # [n_pages, page_size, KV, dh]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [S, P] int32 physical page ids
+    lengths: jax.Array,       # [S] int32; window position t attends kpos < lengths+t
+) -> jax.Array:
+    """XLA twin of the speculative-verify kernel, built by *folding the draft
+    window into the slot axis*: each (slot, t) pair becomes its own pseudo-slot
+    sharing the slot's block-table row with length ``lengths[s] + t`` (the
+    causal intra-window mask), then the exact :func:`paged_decode_attention_ref`
+    math runs over the S·T pseudo-slots.  At T=1 this IS the decode twin call,
+    bitwise — the reduction the engine's greedy spec==non-spec identity rests
+    on.  Dead slots (length 0) keep length 0 at every window position."""
+    S, T, H, dh = q.shape
+    bt_rep = jnp.repeat(block_tables, T, axis=0)  # [S*T, P]
+    lens_t = jnp.where(
+        (lengths > 0)[:, None], lengths[:, None] + jnp.arange(T)[None, :], 0
+    )
+    out = paged_decode_attention_ref(
+        q.reshape(S * T, H, dh), k_pages, v_pages, bt_rep, lens_t.reshape(-1)
+    )
+    return out.reshape(S, T, H, dh)
+
+
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *, mode="auto"):
     """Paged-KV decode-attention entry point: lowering selected solely by the
     jit-static ``kernel_mode`` through ``repro.core.dispatch
@@ -210,6 +235,22 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *, mode="
     from repro.core import dispatch
 
     return dispatch.decode_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, mode=mode
+    )
+
+
+def paged_verify_attention(q, k_pages, v_pages, block_tables, lengths, *, mode="auto"):
+    """Multi-token speculative-verify attention over the paged KV cache:
+    ``q`` is [S, T, H, dh] (T = draft window incl. the committed token), each
+    window position t attends ``kpos < lengths[s] + t`` — the slot's paged
+    history plus the causal intra-window prefix.  Lowering is selected solely
+    by the jit-static ``kernel_mode`` through ``repro.core.dispatch
+    .verify_attention_fwd`` (same single-authority contract as
+    ``paged_decode_attention``); at T=1 both lowerings reduce bitwise to the
+    decode paths."""
+    from repro.core import dispatch
+
+    return dispatch.verify_attention_fwd(
         q, k_pages, v_pages, block_tables, lengths, mode=mode
     )
 

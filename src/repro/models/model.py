@@ -88,6 +88,11 @@ class LM:
             params, cache, block_tables, lengths, tokens
         )
 
+    def verify_step_paged(self, params, cache, block_tables, lengths, tokens):
+        return self.impl.verify_step_paged(
+            params, cache, block_tables, lengths, tokens
+        )
+
     # ---- inputs ----------------------------------------------------------
     def _batch_layout(self, shape: ShapeConfig) -> dict:
         """Sequence budget split between stub prefix embeds and tokens."""

@@ -479,8 +479,14 @@ class TransformerLM:
             lengths[:, None], c.head_dim, c.rope_theta
         )  # [S, 1, dh/2]
         active = lengths > 0
+        # Route writes at/after the slot's page capacity to the null page —
+        # jnp scatter would otherwise *clamp* lengths//ps to the last block
+        # and silently corrupt the slot's own final page.  The engine never
+        # lets a live slot reach capacity, but the executable must stay safe
+        # for any lengths it is handed.
+        writable = active & (lengths < P * ps)
         lp = jnp.clip(lengths // ps, 0, P - 1)
-        phys = jnp.where(active, block_tables[jnp.arange(S), lp], 0)
+        phys = jnp.where(writable, block_tables[jnp.arange(S), lp], 0)
         off = lengths % ps
         attn_len = jnp.where(active, lengths + 1, 0)
 
@@ -519,4 +525,72 @@ class TransformerLM:
         )
         x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
         logits = x[:, 0, :] @ params["lm_head"]
+        return logits, {"k": k_new, "v": v_new}
+
+    def verify_step_paged(self, params, cache, block_tables, lengths, tokens):
+        """Score a T-token speculative window per slot in one forward.
+
+        ``tokens [S, T] int32`` — window position 0 is the slot's committed
+        last token, 1..T-1 the draft proposals; ``lengths [S]`` is position
+        0's kv write position (same convention as ``decode_step_paged``).
+        All T KVs are appended optimistically at lengths..lengths+T-1 —
+        rejected tail KVs are dead *data* the scheduler rolls back by
+        length pointer, never by copy — and window position t attends
+        kpos < lengths+1+t via the causal verify attention.  Writes at or
+        past the slot's page capacity land on the reserved null page 0, so
+        the block table is never indexed out of range even when a window
+        overhangs capacity.  Row-independence (and therefore the engine's
+        spec==non-spec greedy identity) holds per (slot, position) exactly
+        as it does per slot in the decode step.  Requires window == 0.
+        Returns (logits [S, T, V], cache)."""
+        c = self.cfg
+        assert c.window == 0, "paged verify requires full-causal attention"
+        S, T = tokens.shape
+        ps = cache["k"].shape[2]
+        P = block_tables.shape[1]
+        x = jnp.take(params["embed"], tokens, axis=0)  # [S, T, D]
+        pos = lengths[:, None] + jnp.arange(T)[None, :]  # [S, T]
+        sin, cos = layers.rope_angles(pos, c.head_dim, c.rope_theta)
+        active = lengths > 0
+        writable = active[:, None] & (pos < P * ps)
+        lp = jnp.clip(pos // ps, 0, P - 1)
+        phys = jnp.where(writable, block_tables[jnp.arange(S)[:, None], lp], 0)
+        off = pos % ps
+        attn_len = jnp.where(active, lengths + 1, 0)
+
+        def body(x, xs):
+            p, k_l, v_l = xs
+            dh, H, KV = c.head_dim, c.n_heads, c.n_kv_heads
+            h = layers.rms_norm(x, p["ln1"], c.norm_eps)
+            q = layers.weight_matmul(h, p["wq"], mode=c.kernel_mode)
+            k = layers.weight_matmul(h, p["wk"], mode=c.kernel_mode)
+            v = layers.weight_matmul(h, p["wv"], mode=c.kernel_mode)
+            if c.qkv_bias:
+                q = q + p["bq"].astype(q.dtype)
+                k = k + p["bk"].astype(k.dtype)
+                v = v + p["bv"].astype(v.dtype)
+            q = q.reshape(S, T, H, dh)
+            k = k.reshape(S, T, KV, dh)
+            v = v.reshape(S, T, KV, dh)
+            if c.qk_norm:
+                q = layers.rms_norm(q, p["q_norm"], c.norm_eps)
+                k = layers.rms_norm(k, p["k_norm"], c.norm_eps)
+            q = layers.apply_rope(q, sin, cos)
+            k = layers.apply_rope(k, sin, cos)
+            k_l = k_l.at[phys, off].set(k.astype(k_l.dtype))
+            v_l = v_l.at[phys, off].set(v.astype(v_l.dtype))
+            o = layers.paged_verify_attention(
+                q, k_l, v_l, block_tables, attn_len, mode=c.kernel_mode
+            )
+            x = x + layers.weight_matmul(
+                o.reshape(S, T, H * dh), p["wo"], mode=c.kernel_mode
+            )
+            x = x + self._ffn(p, x)
+            return x, (k_l, v_l)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+        x = layers.rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = x @ params["lm_head"]
         return logits, {"k": k_new, "v": v_new}

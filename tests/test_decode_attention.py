@@ -121,6 +121,119 @@ def test_twin_vs_dense_bitwise():
         np.testing.assert_array_equal(paged[s], np.asarray(dense)[0, 0])
 
 
+# ---------------------------------------------------------------------------
+# paged VERIFY attention (PR 10): the multi-token speculative generalization
+# ---------------------------------------------------------------------------
+
+
+def _verify_case(key, S, T, H, KV, dh, page_size, pages_per_slot, lengths):
+    """Like ``_paged_case`` but with a [S, T, H, dh] draft-window query."""
+    q1, kp, vp, bt, lens = _paged_case(
+        key, S, H, KV, dh, page_size, pages_per_slot, lengths
+    )
+    kq = jax.random.fold_in(key, 17)
+    q = jax.random.normal(kq, (S, T, H, dh), jnp.float32) * 0.3
+    return q, kp, vp, bt, lens
+
+
+VERIFY_CASES = [
+    # S, T, H, KV, dh, page_size, pages_per_slot, lengths
+    (3, 4, 4, 4, 32, 8, 3, [5, 17, 21]),   # MHA; windows straddle page edges
+    (2, 4, 8, 2, 32, 16, 2, [1, 29]),      # GQA G=4; min length / near-capacity
+    (4, 2, 4, 1, 64, 8, 2, [7, 15, 3, 8]), # MQA; window crosses the boundary
+    (2, 1, 4, 2, 40, 8, 2, [7, 13]),       # T=1 + awkward head dim
+    (3, 4, 4, 2, 32, 8, 2, [6, 0, 11]),    # dead slot inside the batch
+]
+
+
+@pytest.mark.parametrize("S,T,H,KV,dh,ps,pps,lengths", VERIFY_CASES)
+def test_verify_kernel_vs_twin(force_interpret, S, T, H, KV, dh, ps, pps, lengths):
+    """ops.paged_verify_attention (real kernel, interpret) == the fold-into-
+    slots twin on live rows, over shuffled tables, GQA/MQA, page-straddling
+    windows and non-tile head dims.  (Dead rows are kernel-only: the twin's
+    all-masked softmax is uniform, the kernel writes exact zeros.)"""
+    q, kp, vp, bt, lens = _verify_case(
+        jax.random.PRNGKey(S * 1000 + T * 100 + dh), S, T, H, KV, dh, ps, pps, lengths
+    )
+    got = np.asarray(ops.paged_verify_attention(q, kp, vp, bt, lens))
+    want = np.asarray(layers.paged_verify_attention_ref(q, kp, vp, bt, lens))
+    live = np.asarray(lens) > 0
+    np.testing.assert_allclose(
+        got[live],
+        want[live],
+        atol=2e-5,
+        err_msg=f"S={S} T={T} KV={KV} dh={dh} ps={ps} lengths={lengths}",
+    )
+    np.testing.assert_array_equal(got[~live], np.zeros_like(got[~live]))
+
+
+def test_verify_kernel_bf16(force_interpret):
+    """bf16 pages (the serving cache dtype): verify kernel == twin."""
+    q, kp, vp, bt, lens = _verify_case(
+        jax.random.PRNGKey(7), 2, 4, 4, 2, 32, 8, 2, [5, 12]
+    )
+    kp, vp = kp.astype(jnp.bfloat16), vp.astype(jnp.bfloat16)
+    qh = q.astype(jnp.bfloat16)
+    got = ops.paged_verify_attention(qh, kp, vp, bt, lens)
+    assert got.dtype == jnp.bfloat16
+    want = layers.paged_verify_attention_ref(qh, kp, vp, bt, lens)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2
+    )
+
+
+def test_verify_t1_bitwise_reduces_to_decode(force_interpret):
+    """A 1-token verify window IS a decode step, bitwise, on both lowerings
+    — the reduction the engine's greedy spec==non-spec identity rests on."""
+    q, kp, vp, bt, lens = _paged_case(
+        jax.random.PRNGKey(23), 3, 4, 2, 32, 8, 2, [5, 9, 16]
+    )
+    ker = ops.paged_verify_attention(q[:, None], kp, vp, bt, lens)
+    dker = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    np.testing.assert_array_equal(np.asarray(ker)[:, 0], np.asarray(dker))
+    ref = layers.paged_verify_attention_ref(q[:, None], kp, vp, bt, lens)
+    dref = layers.paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_array_equal(np.asarray(ref)[:, 0], np.asarray(dref))
+
+
+def test_verify_causal_window_masking(force_interpret):
+    """Window position t must see exactly ``lengths + t`` kv entries:
+    position 0 of a T-window equals the plain decode output, and later
+    positions change once the intra-window KV they attend differs."""
+    S, T, H, KV, dh, ps, pps = 2, 3, 4, 2, 32, 8, 2
+    q, kp, vp, bt, lens = _verify_case(
+        jax.random.PRNGKey(31), S, T, H, KV, dh, ps, pps, [6, 10]
+    )
+    out = np.asarray(ops.paged_verify_attention(q, kp, vp, bt, lens))
+    dec0 = np.asarray(ops.paged_decode_attention(q[:, 0], kp, vp, bt, lens))
+    np.testing.assert_array_equal(out[:, 0], dec0)
+    # position t == decode over the same pages with length lengths + t
+    for t in range(1, T):
+        dec_t = np.asarray(
+            ops.paged_decode_attention(q[:, t], kp, vp, bt, lens + t)
+        )
+        np.testing.assert_allclose(out[:, t], dec_t, atol=2e-5)
+
+
+def test_verify_attention_dispatch_routing(force_interpret):
+    """verify_attention_fwd routes like decode_attention_fwd: pallas +
+    interpret → the real kernel, pallas off-TPU → the twin in the marker
+    region, xla → the twin directly; all three numerically agree."""
+    q, kp, vp, bt, lens = _verify_case(
+        jax.random.PRNGKey(5), 2, 4, 4, 2, 32, 8, 2, [6, 11]
+    )
+    kernel = dispatch.verify_attention_fwd(q, kp, vp, bt, lens, mode="pallas")
+    xla = dispatch.verify_attention_fwd(q, kp, vp, bt, lens, mode="xla")
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(xla), atol=2e-5)
+    ops.set_interpret(None)  # auto-detect: off-TPU pallas runs the twin
+    assert dispatch.forward_execution("pallas") == ("pallas", False)
+    twin = dispatch.verify_attention_fwd(q, kp, vp, bt, lens, mode="pallas")
+    np.testing.assert_array_equal(np.asarray(twin), np.asarray(xla))
+    fwd = jax.jit(lambda *a: dispatch.verify_attention_fwd(*a, mode="pallas"))
+    hlo = fwd.lower(q, kp, vp, bt, lens).compile().as_text()
+    assert "PALLAS_FLASH_REGION" in hlo
+
+
 def test_decode_attention_dispatch_routing(force_interpret):
     """decode_attention_fwd routes like attention_fwd: pallas+interpret →
     the real kernel, pallas off-TPU → the twin in the marker region, xla →

@@ -398,7 +398,7 @@ def test_quantized_train_step_on_smoke_model(kernel_mode):
 
 
 # ---------------------------------------------------------------------------
-# 6. check_bench: graceful failure + schema-7 requirements
+# 6. check_bench: graceful failure + schema-7/8 requirements
 # ---------------------------------------------------------------------------
 
 
@@ -475,6 +475,38 @@ def test_check_bench_schema7_requirements(tmp_path):
     doc6["records"] = [r for r in doc6["records"] if "weight_quant" not in r]
     base6 = _write(tmp_path, "base6.json", doc6)
     assert check(base6, base6) == 0
+
+
+def _spec_serve_row(**kw):
+    row = {
+        "leg": "serve", "method": "serve-spec", "kernel": "xla",
+        "hardware": "cpu", "tok_per_s": 12.0, "ttft_p50_ms": 1.0,
+        "ttft_p99_ms": 2.0, "max_concurrent_decodes": 4,
+        "spec_decode": True, "draft_len": 4, "acceptance_rate": 0.4,
+        "spec_tok_per_s": 12.0,
+    }
+    row.update(kw)
+    return row
+
+
+def test_check_bench_schema8_requirements(tmp_path):
+    """Schema ≥ 8: the speculative serve leg must exist and stay
+    self-describing (acceptance_rate / spec_tok_per_s / draft_len);
+    schema-7 docs are exempt."""
+    good8 = _good_doc(schema=8, extra_rows=[_spec_serve_row()])
+    good = _write(tmp_path, "good8.json", good8)
+    assert check(good, good) == 0
+    # a schema-8 file with no spec serve row fails
+    assert check(_write(tmp_path, "nospec.json", _good_doc(schema=8)), good) == 1
+    # a spec row missing any schema-8 field fails
+    for field in ("acceptance_rate", "spec_tok_per_s", "draft_len"):
+        doc = _good_doc(schema=8, extra_rows=[_spec_serve_row()])
+        for r in doc["records"]:
+            r.pop(field, None)
+        assert check(_write(tmp_path, f"no_{field}.json", doc), good) == 1, field
+    # schema-7 docs are exempt from the spec-leg requirement
+    good7 = _write(tmp_path, "good7.json", _good_doc(schema=7))
+    assert check(good7, good7) == 0
 
 
 def test_check_bench_hardware_scoped_ratchet(tmp_path):

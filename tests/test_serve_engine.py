@@ -5,6 +5,14 @@ neighbours), the no-recompile contract (``compile_count`` frozen after
 warmup), EOS evict-and-refill, per-request sampling streams, and the
 legacy-BatchedServer oracle at matched capacity.
 
+PR 10 adds speculative decoding: the prompt-lookup drafter units, the spec
+engine's greedy (and temperature) streams bitwise-matching the non-spec
+engine on the same churned trace — single-device and on 8 fake host
+devices — multi-token commits actually landing on low-entropy workloads,
+EOS truncation inside a commit, and graceful page-budget truncation
+(replacing the old capacity ValueError) with queue-time stats split from
+TTFT.
+
 The real-model tests share one module-scoped engine: serve() must leave the
 scheduler drained and the cache reusable, so running the solo oracles on the
 *same* engine that just served the mixed trace is itself part of the test.
@@ -20,7 +28,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.launch.serve import BatchedServer, Request, ServeEngine, SlotScheduler
+from repro.launch.serve import (
+    BatchedServer,
+    Request,
+    ServeEngine,
+    SlotScheduler,
+    prompt_lookup_draft,
+)
 from repro.models import build_model
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
@@ -277,18 +291,210 @@ def test_engine_matches_batched_server_oracle(engine, cfg, params):
 
 
 def test_rejects_oversized_work(engine, cfg):
+    """Oversized *prompts* still fail fast (no bucket can prefill them);
+    oversized max_new no longer raises — it truncates, see the page-budget
+    test below."""
     with pytest.raises(ValueError, match="exceeds"):
         engine.serve(
             [Request(id="big", tokens=np.zeros(17, np.int32), max_new=8)],
             step_clock=True,
         )
-    with pytest.raises(ValueError, match="capacity"):
-        engine.serve(
-            [Request(id="long", tokens=np.zeros(16, np.int32), max_new=9)],
-            step_clock=True,
-        )
     with pytest.raises(ValueError, match="paged"):
         ServeEngine(get_smoke_config("xlstm-350m"))
+
+
+def test_page_budget_truncation(engine, cfg, mixed):
+    """A request whose max_new overruns its slot's page quota is admitted,
+    truncated to ``capacity - n + 1`` emissions (the final token needs no KV
+    slot), flagged in its result and in stats — and the neighbour sharing
+    the engine is bitwise unaffected.  The old behaviour was a ValueError;
+    the block table must never be indexed past its end either way."""
+    prompts, results, _, warm = mixed
+    assert engine.capacity == 24
+    big = Request(id="big", tokens=prompts[3], max_new=20)  # 16 + 20 > 24
+    normal = Request(id="n0", tokens=prompts[0], max_new=6)
+    res, stats = engine.serve([big, normal], step_clock=True)
+    assert res["big"]["truncated"] is True
+    assert len(res["big"]["tokens"]) == engine.capacity - 16 + 1  # 9, not 20
+    assert res["n0"]["truncated"] is False
+    np.testing.assert_array_equal(res["n0"]["tokens"], results["r0"]["tokens"])
+    assert stats["truncated_requests"] == 1
+    assert engine.compile_count == warm  # truncation is host math only
+    assert engine.scheduler.occupied() == []
+    engine.scheduler.check_invariants()
+
+
+def test_queue_time_split_from_ttft(engine, cfg, mixed):
+    """Wall-clock serve: queue_time_s (arrival → admission) is recorded
+    separately from ttft_s (arrival → first token), which additionally pays
+    prefill + first sample; stats carry percentiles of both."""
+    prompts, _, _, _ = mixed
+    reqs = [
+        Request(id=f"q{i}", tokens=p, max_new=3)
+        for i, p in enumerate(prompts[:2])
+    ]
+    res, stats = engine.serve(reqs)
+    for r in res.values():
+        assert r["queue_time_s"] >= 0.0
+        assert r["ttft_s"] > r["queue_time_s"]
+    for key in ("queue_p50_ms", "queue_p99_ms", "ttft_p50_ms", "ttft_p99_ms"):
+        assert key in stats, key
+    assert stats["queue_p50_ms"] <= stats["ttft_p50_ms"]
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: drafter units + the spec==non-spec identity contract
+# --------------------------------------------------------------------------
+
+
+def test_prompt_lookup_draft_units():
+    # longest n-gram wins, continuation follows the earlier occurrence
+    assert prompt_lookup_draft([1, 2, 3, 9, 1, 2, 3], 2) == [9, 1]
+    # most recent earlier occurrence is preferred
+    assert prompt_lookup_draft([1, 2, 5, 1, 2, 6, 1, 2], 1) == [6]
+    # falls back through shorter n-grams
+    assert prompt_lookup_draft([5, 1, 9, 2, 7, 2], 3) == [7, 2]
+    # proposal is capped by what follows, then by draft_len
+    assert prompt_lookup_draft([1, 2, 3, 1], 10) == [2, 3, 1]
+    assert prompt_lookup_draft([1, 2, 3, 1], 2) == [2, 3]
+    # nothing repeats / degenerate histories → no proposal
+    assert prompt_lookup_draft([1, 2, 3, 4], 3) == []
+    assert prompt_lookup_draft([7], 4) == []
+    assert prompt_lookup_draft([1, 2, 1, 2], 0) == []
+
+
+@pytest.fixture(scope="module")
+def spec_engine(cfg, params):
+    eng = ServeEngine(
+        cfg,
+        params,
+        max_concurrent_decodes=3,
+        max_prompt_len=16,
+        max_new_tokens=8,
+        page_size=8,
+        spec_decode=True,
+        draft_len=4,
+    )
+    eng.warmup()
+    return eng
+
+
+def test_spec_greedy_bitwise_vs_nonspec(spec_engine, cfg, mixed):
+    """ACCEPTANCE: the spec engine's greedy streams on the staggered mixed
+    trace (slot churn, mid-decode insertion, queueing) are token-bitwise
+    the non-spec engine's, request for request — speculation may only
+    change *when* tokens appear, never *which*."""
+    prompts, results, base_stats, _ = mixed
+    warm = spec_engine.compile_count
+    reqs = [
+        Request(id=f"r{i}", tokens=p, max_new=6, arrival=a)
+        for i, (p, a) in enumerate(zip(prompts, [0, 0, 0, 1, 6, 9]))
+    ]
+    spec_res, stats = spec_engine.serve(reqs, step_clock=True)
+    assert stats["compile_count"] == warm  # spec adds exactly 0 mid-serve
+    assert stats["spec_decode"] is True
+    assert stats["draft_len"] == 4
+    for i in range(6):
+        np.testing.assert_array_equal(
+            spec_res[f"r{i}"]["tokens"],
+            results[f"r{i}"]["tokens"],
+            err_msg=f"r{i} diverged between spec and non-spec serving",
+        )
+    # a verify step commits >= 1 token per live slot, so speculation can
+    # only shrink the step count
+    assert stats["decode_steps"] <= base_stats["decode_steps"]
+    assert spec_engine.scheduler.occupied() == []
+    spec_engine.scheduler.check_invariants()
+
+
+def test_spec_commits_multi_token_steps(engine, spec_engine, cfg):
+    """On a low-entropy workload the prompt-lookup drafter actually lands:
+    drafts are proposed AND accepted (multi-token commits), and the streams
+    still match the non-spec engine bitwise."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, 6, size=n).astype(np.int32) for n in (9, 12, 6, 14)]
+    reqs = lambda tag: [  # noqa: E731 - two identical request lists
+        Request(id=f"{tag}{i}", tokens=p, max_new=8) for i, p in enumerate(prompts)
+    ]
+    base_res, base_stats = engine.serve(reqs("b"), step_clock=True)
+    spec_res, spec_stats = spec_engine.serve(reqs("s"), step_clock=True)
+    assert spec_stats["proposed_tokens"] > 0
+    assert spec_stats["accepted_tokens"] > 0, spec_stats
+    assert spec_stats["decode_steps"] < base_stats["decode_steps"]
+    assert 0.0 < spec_stats["acceptance_rate"] <= 1.0
+    assert spec_stats["tok_per_verify"] > 1.0
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(
+            spec_res[f"s{i}"]["tokens"], base_res[f"b{i}"]["tokens"]
+        )
+
+
+def test_spec_temperature_replay(cfg, params):
+    """Under temperature the verify-sample consumes the request's fold-in
+    key per *emitted position*, so the spec stream replays the vanilla
+    sampled stream bit-for-bit."""
+    def run(spec):
+        eng = ServeEngine(
+            cfg,
+            params,
+            max_concurrent_decodes=2,
+            max_prompt_len=8,
+            max_new_tokens=6,
+            page_size=8,
+            temperature=0.8,
+            spec_decode=spec,
+            draft_len=3,
+        )
+        rng = np.random.default_rng(5)
+        reqs = [
+            Request(
+                id=f"t{i}",
+                tokens=rng.integers(2, 6, size=6).astype(np.int32),
+                max_new=5,
+                seed=200 + i,
+                arrival=float(i),
+            )
+            for i in range(3)
+        ]
+        res, _ = eng.serve(reqs, step_clock=True)
+        return res
+
+    base, spec = run(False), run(True)
+    for i in range(3):
+        np.testing.assert_array_equal(
+            spec[f"t{i}"]["tokens"], base[f"t{i}"]["tokens"]
+        )
+
+
+def test_spec_eos_and_truncation(spec_engine, engine, cfg, mixed):
+    """EOS truncates a multi-token commit at the first EOS (matching the
+    non-spec engine), and a page-budget-truncated request under speculation
+    matches the non-spec truncated stream."""
+    prompts, results, _, _ = mixed
+    eos = int(results["r0"]["tokens"][2])
+    for eng in (engine, spec_engine):
+        old = eng.eos_id
+        eng.eos_id = eos
+    try:
+        reqs = lambda tag: [  # noqa: E731
+            Request(id=f"{tag}{i}", tokens=p, max_new=6)
+            for i, p in enumerate(prompts)
+        ]
+        base_res, _ = engine.serve(reqs("b"), step_clock=True)
+        spec_res, _ = spec_engine.serve(reqs("s"), step_clock=True)
+    finally:
+        for eng in (engine, spec_engine):
+            eng.eos_id = -1
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(
+            spec_res[f"s{i}"]["tokens"], base_res[f"b{i}"]["tokens"]
+        )
+    big = Request(id="big", tokens=prompts[3], max_new=20)
+    res_s, stats_s = spec_engine.serve([big], step_clock=True)
+    assert res_s["big"]["truncated"] is True
+    assert len(res_s["big"]["tokens"]) == spec_engine.capacity - 16 + 1
+    assert stats_s["truncated_requests"] == 1
+    spec_engine.scheduler.check_invariants()
 
 
 # --------------------------------------------------------------------------
@@ -327,6 +533,21 @@ _SCRIPT = textwrap.dedent(
         np.testing.assert_array_equal(solo[f"s{i}"]["tokens"],
                                       res[f"r{i}"]["tokens"])
     assert eng.compile_count == warm
+
+    # ACCEPTANCE: the speculative engine reproduces the same churned trace
+    # token-bitwise on the 8-device host platform too
+    spec = ServeEngine(cfg, max_concurrent_decodes=4, max_prompt_len=16,
+                       max_new_tokens=8, page_size=8,
+                       spec_decode=True, draft_len=4)
+    spec.warmup()
+    swarm = spec.compile_count
+    sres, sstats = spec.serve(
+        [Request(id=f"r{i}", tokens=p, max_new=6, arrival=float(i))
+         for i, p in enumerate(prompts)], step_clock=True)
+    assert sstats["compile_count"] == swarm, (sstats["compile_count"], swarm)
+    for i in range(8):
+        np.testing.assert_array_equal(sres[f"r{i}"]["tokens"],
+                                      res[f"r{i}"]["tokens"])
     print("ENGINE_8DEV_OK")
     """
 )
